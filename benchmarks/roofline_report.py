@@ -1,0 +1,115 @@
+"""Aggregate results/dryrun/*.json into the §Dry-run and §Roofline tables.
+
+Writes results/roofline_report.md (markdown, pasted into EXPERIMENTS.md)
+and results/roofline.csv. Single-pod (16x16) cells form the roofline table
+per the brief; multi-pod cells prove the pod axis shards."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import write_csv
+
+DRYRUN = os.path.join(os.path.dirname(__file__), os.pardir, "results",
+                      "dryrun")
+HBM_PER_CHIP = 16 * 2 ** 30   # tpu_v5e
+
+
+def load(variant="baseline"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("variant") == variant:
+            cells.append(r)
+    return cells
+
+
+def fmt_s(x):
+    return f"{x*1e3:.2f}ms" if x < 10 else f"{x:.2f}s"
+
+
+def main(fast: bool = True, variant: str = "baseline") -> list:
+    cells = load(variant)
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    err = [c for c in cells if c["status"] == "error"]
+
+    rows = []
+    lines = ["## Roofline table (single-pod 16x16, tpu_v5e terms)", ""]
+    lines.append("| arch | shape | compute | memory floor–upper* | "
+                 "collective | dominant | MF/HLO | peak GiB/dev | fits |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"])):
+        if c["mesh"] != "16x16":
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        # Floor: resident inputs+outputs must stream through HBM ≥ once.
+        floor_s = (m["argument_bytes"] + m["output_bytes"] -
+                   m["alias_bytes"]) / 819e9
+        mem_gib = m["peak_per_device"] / 2 ** 30
+        fits = "✓" if m["peak_per_device"] <= HBM_PER_CHIP else "✗"
+        ratio = c["useful_ratio"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(floor_s)}–{fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | "
+            f"{r['dominant']} | {ratio:.2f} | {mem_gib:.1f} | {fits} |")
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+            "variant": c["variant"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "memory_floor_s": floor_s,
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "useful_ratio": round(ratio, 4),
+            "peak_gib_per_dev": round(mem_gib, 2),
+            "flops_per_dev": c["cost"]["flops_per_device"],
+            "bytes_per_dev": c["cost"]["bytes_per_device"],
+            "coll_bytes_per_dev":
+                c["cost"]["collective_wire_bytes_per_device"],
+            "policy": c["step_config"]["policy"],
+            "compile_s": round(c["timing"]["compile_s"], 1),
+        })
+    lines.append("")
+    lines.append(f"*memory term is an upper bound (XLA cost semantics on the "
+                 f"CPU-partitioned module; TPU fusion reduces real traffic — "
+                 f"see EXPERIMENTS.md §Roofline notes).")
+    lines.append("")
+    lines.append("## Multi-pod (2x16x16) — pod axis shards")
+    lines.append("")
+    lines.append("| arch | shape | compiled | peak GiB/dev | collective |")
+    lines.append("|---|---|---|---|---|")
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"])):
+        if c["mesh"] != "2x16x16":
+            continue
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | ✓ | "
+            f"{c['memory']['peak_per_device']/2**30:.1f} | "
+            f"{fmt_s(c['roofline']['collective_s'])} |")
+    lines.append("")
+    lines.append(f"Skipped cells: {len(skipped)} "
+                 f"({sorted(set((c['arch'], c['shape']) for c in skipped))})")
+    if err:
+        lines.append(f"ERROR cells: {[(c['arch'], c['shape'], c['mesh']) for c in err]}")
+
+    suffix = "" if variant == "baseline" else f"_{variant}"
+    out_md = os.path.join(os.path.dirname(DRYRUN),
+                          f"roofline_report{suffix}.md")
+    with open(out_md, "w") as f:
+        f.write("\n".join(lines))
+    if rows:
+        write_csv(f"roofline{suffix}", rows, rows[0].keys())
+    print(f"[roofline] {len(ok)} ok / {len(skipped)} skipped / "
+          f"{len(err)} error -> {out_md}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="baseline")
+    a = ap.parse_args()
+    main(fast=False, variant=a.variant)

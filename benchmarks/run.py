@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, writes
+per-figure CSVs under results/bench/, and the roofline report under
+results/. Pass --full for the slower full grids."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full grids (slower); default fast subsets")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import (
+        fig1_attention_portability, fig2_attention_latency, fig3_rms_cdf,
+        fig4_config_transfer, fig5_config_diversity, roofline_report,
+        search_efficiency, tab1_loc,
+    )
+    benches = [
+        ("fig1_attention_portability", fig1_attention_portability.main),
+        ("fig2_attention_latency", fig2_attention_latency.main),
+        ("fig3_rms_cdf", fig3_rms_cdf.main),
+        ("fig4_config_transfer", fig4_config_transfer.main),
+        ("fig5_config_diversity", fig5_config_diversity.main),
+        ("tab1_loc", tab1_loc.main),
+        ("search_efficiency", search_efficiency.main),
+        ("roofline_report", roofline_report.main),
+    ]
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = [(n, f) for n, f in benches if n in keep]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        try:
+            rows = fn(fast=fast)
+            dt = (time.perf_counter() - t0) * 1e6
+            print(f"{name},{dt:.0f},rows={len(rows) if rows else 0}")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},error,{type(e).__name__}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""End-to-end training driver: data pipeline → sharded train step →
+fault-tolerant loop with checkpoints.
+
+Default is a CPU-feasible ~9M-param phi4-family model for 120 steps
+(~minutes on this 1-core container); ``--params 100m --steps 300`` scales
+the same driver to the brief's 100M x few-hundred-steps shape on real
+hardware. Resumability: re-running the same command continues from the
+latest checkpoint (kill it mid-run to see).
+
+Run:  PYTHONPATH=src python examples/train_tiny_lm.py [--steps N]
+"""
+
+import argparse
+import dataclasses
+import os
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_local_mesh
+from repro.models import lm
+from repro.models.param import init_params, param_count
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def model_for(size: str):
+    base = get_config("phi4-mini-3.8b", smoke=True)
+    if size == "100m":
+        return dataclasses.replace(
+            base, name="tiny-lm-100m", n_layers=8, d_model=768, n_heads=12,
+            n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32768)
+    return dataclasses.replace(
+        base, name="tiny-lm-9m", n_layers=4, d_model=256, n_heads=8,
+        n_kv_heads=2, head_dim=32, d_ff=704, vocab_size=4096)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--params", choices=["9m", "100m"], default="9m")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_tiny_lm")
+    args = ap.parse_args()
+
+    cfg = model_for(args.params)
+    print(f"model: {cfg.name} "
+          f"({param_count(lm.lm_specs(cfg))/1e6:.1f}M params)")
+
+    mesh = make_local_mesh(data=1, model=1)
+    scfg = steps_lib.StepConfig(
+        adamw=adamw.AdamWConfig(lr=1e-3, warmup_steps=20,
+                                total_steps=args.steps),
+        opts=lm.ForwardOpts(attn_impl="chunked", attn_chunk=128))
+
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    opt_state = steps_lib.init_opt_state(cfg, scfg, params)
+    step = jax.jit(steps_lib.make_train_step(cfg, scfg, mesh))
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch)
+    stream = TokenStream(data_cfg)
+
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=25, log_every=10),
+        step, params, opt_state, iter(stream),
+        data_state_fn=stream.state, data_restore_fn=stream.restore)
+    out = trainer.run()
+    first = out["metrics"][0]["loss"] if out["metrics"] else float("nan")
+    last = out["metrics"][-1]["loss"] if out["metrics"] else float("nan")
+    print(f"done: step {out['step']}  loss {first:.3f} -> {last:.3f}  "
+          f"stragglers flagged: {len(out['stragglers'])}")
+    assert last < first, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

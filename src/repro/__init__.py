@@ -1,0 +1,7 @@
+"""repro — portable autotuned LLM kernels + multi-pod JAX training/serving.
+
+TPU-native reproduction and extension of "GPU Performance Portability Needs
+Autotuning" (Ringlein, Parnell, Stoica — 2025). See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

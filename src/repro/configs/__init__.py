@@ -1,0 +1,34 @@
+"""Architecture registry: the 10 assigned configs (full + smoke variants)."""
+
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+from repro.configs import (
+    phi4_mini_3p8b, stablelm_12b, h2o_danube3_4b, phi3_mini_3p8b,
+    olmoe_1b_7b, deepseek_v2_lite_16b, whisper_medium, internvl2_76b,
+    mamba2_2p7b, jamba_1p5_large_398b,
+)
+from repro.configs.shapes import SHAPES, ShapeSpec, input_specs, shape_supported  # noqa: F401
+
+_MODULES = {
+    "phi4-mini-3.8b": phi4_mini_3p8b,
+    "stablelm-12b": stablelm_12b,
+    "h2o-danube-3-4b": h2o_danube3_4b,
+    "phi3-mini-3.8b": phi3_mini_3p8b,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "whisper-medium": whisper_medium,
+    "internvl2-76b": internvl2_76b,
+    "mamba2-2.7b": mamba2_2p7b,
+    "jamba-1.5-large-398b": jamba_1p5_large_398b,
+}
+
+ARCHS: List[str] = list(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    cfg = _MODULES[name].SMOKE if smoke else _MODULES[name].FULL
+    cfg.validate()
+    return cfg

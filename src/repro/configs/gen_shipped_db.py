@@ -1,0 +1,75 @@
+"""Generate the shipped pre-tuned config DB (paper Q4.3: results reusable
+"outside of the LLM deployment").
+
+Tunes every kernel for every TPU generation across the canonical shapes of
+the 10 assigned archs, writing configs/shipped_tuning_db.json — loaded as a
+read-only overlay by ``default_tuner()`` so fresh processes start warm.
+
+Run: PYTHONPATH=src python -m repro.configs.gen_shipped_db
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCHS, get_config
+from repro.core import (
+    AnalyticalMeasure, Autotuner, TuningCache, TuningContext, get_chip,
+)
+from repro.core.cache import cache_key
+from repro.kernels import ops
+
+CHIPS = ("tpu_v4", "tpu_v5e", "tpu_v5p", "tpu_v6e")
+OUT = os.path.join(os.path.dirname(__file__), "shipped_tuning_db.json")
+
+
+def scenarios():
+    """Representative (kernel, shapes, extra) per arch × serving context."""
+    seen = set()
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        if cfg.n_heads <= 1:        # attention-free
+            continue
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        for (b, s) in ((8, 4096), (1, 32768)):
+            key = (hq, hkv, dh, b, s)
+            if key in seen:
+                continue
+            seen.add(key)
+            yield (ops.FLASH_ATTENTION,
+                   {"q": (b, hq, s, dh), "k": (b, hkv, s, dh)},
+                   {"causal": True, "window": cfg.window or 0})
+        yield (ops.DECODE_ATTENTION,
+               {"q": (16, hq, dh), "k": (16, hkv, 32768, dh)}, {})
+        yield (ops.RMS_NORM, {"x": (8192, cfg.d_model)}, {})
+    yield (ops.MATMUL, {"x": (8192, 8192), "y": (8192, 8192)}, {})
+
+
+def main():
+    db = {}
+    n = 0
+    for chip_name in CHIPS:
+        chip = get_chip(chip_name)
+        tuner = Autotuner(cache=TuningCache(cache_dir="/tmp/_shipped_tmp"),
+                          backend=AnalyticalMeasure(chip))
+        tuner.cache.clear()
+        for kernel, shapes, extra in scenarios():
+            ctx = TuningContext(chip=chip, shapes=shapes, dtype="bfloat16",
+                                extra=extra)
+            try:
+                entry = tuner.tune(kernel, ctx)
+            except Exception as e:
+                print(f"  skip {kernel.name} {shapes}: {e}")
+                continue
+            key = cache_key(kernel.name, kernel.version, kernel.space, ctx)
+            db[key] = entry.to_json()
+            n += 1
+        print(f"{chip_name}: {n} entries total")
+    with open(OUT, "w") as f:
+        json.dump(db, f, indent=1, sort_keys=True)
+    print(f"wrote {len(db)} entries -> {OUT}")
+
+
+if __name__ == "__main__":
+    main()

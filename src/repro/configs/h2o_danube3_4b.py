@@ -1,0 +1,16 @@
+"""h2o-danube-3-4b [arXiv:2401.16818] — llama+mistral mix with sliding-window
+attention (window 4096) — the SWA makes this arch run the long_500k cell
+with a ring-buffer KV cache of only `window` slots."""
+import dataclasses
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, head_dim=120,
+    d_ff=10240, vocab_size=32000, window=4096,
+)
+
+SMOKE = dataclasses.replace(
+    FULL, name="danube3-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512, window=16,
+    dtype="float32")

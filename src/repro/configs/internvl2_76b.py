@@ -1,0 +1,16 @@
+"""internvl2-76b [arXiv:2404.16821] — InternViT frontend STUBBED (patch
+embeddings via input_specs, n_prefix=256); backbone is the 76B
+InternLM2/llama-style transformer specified by the brief."""
+import dataclasses
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab_size=128256, n_prefix=256,
+)
+
+SMOKE = dataclasses.replace(
+    FULL, name="internvl2-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512, n_prefix=8,
+    dtype="float32")

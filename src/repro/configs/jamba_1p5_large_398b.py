@@ -1,0 +1,24 @@
+"""jamba-1.5-large-398b [arXiv:2403.19887; hf] — hybrid: 72 layers in 9
+blocks of 8 (attention at block position 4, 1:7 ratio), MoE (16e top-2)
+every other layer. SSM mixer implemented as Mamba-2/SSD with d_state 128
+(hardware adaptation of Jamba's Mamba-1 layers — DESIGN.md §2).
+398B total / ~94B active."""
+import dataclasses
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+
+FULL = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=24576, vocab_size=65536,
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=24576, every=2, rem=1),
+    ssm=SSMConfig(d_state=128, headdim=128, expand=2, d_conv=4, chunk=256,
+                  attn_every=8, attn_rem=4),
+)
+
+SMOKE = dataclasses.replace(
+    FULL, name="jamba-smoke", n_layers=8, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512, dtype="float32",
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=128, every=2, rem=1,
+                  capacity_factor=8.0),
+    ssm=SSMConfig(d_state=16, headdim=16, expand=2, d_conv=4, chunk=16,
+                  attn_every=8, attn_rem=4))

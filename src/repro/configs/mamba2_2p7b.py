@@ -1,0 +1,16 @@
+"""mamba2-2.7b [arXiv:2405.21060] — attention-free SSD; d_state 128,
+headdim 64 ⇒ 80 heads. Runs long_500k (O(1) decode state)."""
+import dataclasses
+from repro.models.config import ModelConfig, SSMConfig
+
+FULL = ModelConfig(
+    name="mamba2-2.7b", family="ssm",
+    n_layers=64, d_model=2560, n_heads=1, n_kv_heads=1, head_dim=1,
+    d_ff=0, vocab_size=50280, rope=False, tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, headdim=64, expand=2, d_conv=4, chunk=256),
+)
+
+SMOKE = dataclasses.replace(
+    FULL, name="mamba2-smoke", n_layers=2, d_model=64, vocab_size=512,
+    dtype="float32",
+    ssm=SSMConfig(d_state=16, headdim=16, expand=2, d_conv=4, chunk=16))

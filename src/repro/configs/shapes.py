@@ -1,0 +1,94 @@
+"""Assigned input-shape set and per-(arch × shape) applicability.
+
+    train_4k     seq 4096  × global_batch 256   (train_step)
+    prefill_32k  seq 32768 × global_batch 32    (prefill_step)
+    decode_32k   KV 32768  × global_batch 128   (decode_step, 1 new token)
+    long_500k    KV 524288 × global_batch 1     (decode_step; sub-quadratic
+                                                 archs only per the brief)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs for every model
+input of the given entry point — shardable stand-ins, no device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.lm import cache_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    entry: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """Applicability per the brief: long_500k needs sub-quadratic attention
+    (SWA ring / SSM state / hybrid); skip for pure full-attention archs."""
+    s = SHAPES[shape]
+    if s.name == "long_500k":
+        sub_quadratic = (cfg.ssm is not None) or (cfg.window is not None)
+        if not sub_quadratic:
+            return False, ("full-attention arch: 500k decode KV is "
+                           "quadratic-history; skipped per brief "
+                           "(see DESIGN.md §4)")
+    return True, ""
+
+
+def _token_batch(cfg: ModelConfig, batch: int, seq: int):
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+
+
+def _frontend_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    """Stub modality frontends: precomputed frame/patch embeddings."""
+    extra: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        extra["enc_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.n_prefix:
+        extra["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_prefix, cfg.d_model), jnp.dtype(cfg.dtype))
+    return extra
+
+
+def input_specs(cfg: ModelConfig, shape: str,
+                batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the entry point's inputs.
+
+    train   → {batch: {tokens, labels, [enc_embeds|prefix_embeds]}}
+    prefill → {tokens, [enc_embeds|prefix_embeds]}
+    decode  → {token, cache, pos}
+    """
+    s = SHAPES[shape]
+    batch = batch_override or s.global_batch
+    if s.entry == "train":
+        return {"batch": {**_token_batch(cfg, batch, s.seq_len),
+                          **_frontend_specs(cfg, batch)}}
+    if s.entry == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((batch, s.seq_len), jnp.int32),
+                **_frontend_specs(cfg, batch)}
+    # decode: one new token against a populated cache of seq_len positions
+    return {
+        "token": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "cache": cache_specs(cfg, batch, s.seq_len),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

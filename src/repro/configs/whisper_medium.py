@@ -1,0 +1,20 @@
+"""whisper-medium [arXiv:2212.04356] — enc-dec; conv/audio frontend is a
+STUB per the brief (input_specs provides precomputed 1500-frame embeddings).
+Decoder positions beyond the real model's 448 are synthetic but
+shape-faithful (DESIGN.md §4)."""
+import dataclasses
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="whisper-medium", family="encdec",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64,
+    d_ff=4096, vocab_size=51865,
+    norm="layernorm", act="gelu", rope=False, learned_pos=True,
+    max_position=32768, tie_embeddings=True,
+    n_enc_layers=24, enc_seq=1500,
+)
+
+SMOKE = dataclasses.replace(
+    FULL, name="whisper-smoke", n_layers=2, n_enc_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=512,
+    enc_seq=16, max_position=128, dtype="float32")

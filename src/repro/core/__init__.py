@@ -1,0 +1,28 @@
+"""repro.core — the paper's contribution: portable-kernel autotuning.
+
+Public surface:
+    ConfigSpace / Param / TuningContext     (Q4.1 tuning API)
+    search strategies                       (Q4.2 efficient search)
+    TuningCache                             (Q4.3 reusable results)
+    Autotuner / TunableKernel / queue       (JIT tuning + Q4.4 off-critical-path)
+    hardware chip DB + analytical cost model
+"""
+
+from repro.core.config_space import (  # noqa: F401
+    Config, ConfigSpace, Param, TuningContext,
+)
+from repro.core.hardware import CHIPS, ChipSpec, get_chip, PRODUCTION_CHIP  # noqa: F401
+from repro.core.costmodel import (  # noqa: F401
+    KernelWorkload, MatmulShape, RooflineTerms, estimate_seconds, roofline_terms,
+)
+from repro.core.cache import TuningCache, CacheEntry  # noqa: F401
+from repro.core.measure import (  # noqa: F401
+    AnalyticalMeasure, HybridMeasure, MeasureBackend, WallClockTimer,
+)
+from repro.core.search import (  # noqa: F401
+    EvolutionarySearch, ExhaustiveSearch, RandomSearch, SearchResult,
+    SearchStrategy, SuccessiveHalving, make_strategy,
+)
+from repro.core.tuner import (  # noqa: F401
+    Autotuner, TunableKernel, default_tuner, set_default_tuner,
+)

@@ -1,0 +1,190 @@
+"""Persistent, reusable tuning cache — the paper's Q4.3.
+
+The paper identifies two deployment killers in today's Triton autotuner:
+results live only inside the creating process, and re-tuning happens on every
+restart ("autotuner deja-vu", triton#4020). This cache fixes both:
+
+  * results are stored on disk as JSON (one DB file per cache dir), keyed by
+    (kernel name, kernel version, tuning-context signature, space hash);
+  * every entry records an *environment fingerprint* (jax version, chip,
+    measurement backend) so stale or foreign entries are detected instead of
+    silently reused — "autotuning results should contain all relevant
+    environment dependencies to ensure correct reuse";
+  * the DB is human-readable and can be shipped with a deployment
+    ("stored outside of the LLM deployment") — ``repro`` ships a pre-tuned
+    DB under ``configs/shipped_tuning_db.json`` used as a read-only overlay.
+
+Writes are atomic (tmp file + rename) so concurrent trainers cannot corrupt
+the DB; last-writer-wins semantics are acceptable because entries are
+idempotent (same key ⇒ same tuning problem).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.core.config_space import Config, ConfigSpace, TuningContext
+
+DEFAULT_CACHE_ENV = "REPRO_TUNING_CACHE"
+_DB_BASENAME = "tuning_db.json"
+
+
+def env_fingerprint(backend_name: str, chip_name: str) -> Dict[str, str]:
+    return {
+        "jax": jax.__version__,
+        "backend": backend_name,
+        "chip": chip_name,
+        "repro_schema": "1",
+    }
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    config: Config
+    metric: float
+    n_evaluated: int
+    strategy: str
+    fingerprint: Dict[str, str]
+    timestamp: float
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "CacheEntry":
+        return CacheEntry(
+            config=dict(d["config"]),
+            metric=float(d["metric"]),
+            n_evaluated=int(d["n_evaluated"]),
+            strategy=str(d.get("strategy", "?")),
+            fingerprint=dict(d.get("fingerprint", {})),
+            timestamp=float(d.get("timestamp", 0.0)),
+        )
+
+
+def cache_key(kernel_name: str, kernel_version: int, space: ConfigSpace,
+              ctx: TuningContext) -> str:
+    return json.dumps(
+        {
+            "kernel": kernel_name,
+            "kernel_version": kernel_version,
+            "space": space.space_hash(),
+            "ctx": ctx.signature(),
+        },
+        sort_keys=True,
+    )
+
+
+class TuningCache:
+    """JSON-backed key→CacheEntry store with an optional read-only overlay."""
+
+    def __init__(self, cache_dir: Optional[str] = None,
+                 overlay_path: Optional[str] = None):
+        if cache_dir is None:
+            cache_dir = os.environ.get(
+                DEFAULT_CACHE_ENV,
+                os.path.join(os.path.expanduser("~"), ".cache", "repro_tuning"),
+            )
+        self.cache_dir = cache_dir
+        self.db_path = os.path.join(cache_dir, _DB_BASENAME)
+        self._lock = threading.Lock()
+        self._db: Dict[str, Dict[str, Any]] = {}
+        self._overlay: Dict[str, Dict[str, Any]] = {}
+        self._loaded = False
+        if overlay_path and os.path.exists(overlay_path):
+            try:
+                with open(overlay_path) as f:
+                    self._overlay = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                self._overlay = {}
+
+    # -- persistence --------------------------------------------------------
+    def _load(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        try:
+            with open(self.db_path) as f:
+                self._db = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            self._db = {}
+
+    def _flush(self) -> None:
+        os.makedirs(self.cache_dir, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._db, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.db_path)   # atomic on POSIX
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    # -- API ------------------------------------------------------------------
+    def get(self, kernel_name: str, kernel_version: int, space: ConfigSpace,
+            ctx: TuningContext, *, require_fingerprint: Optional[Dict[str, str]]
+            = None) -> Optional[CacheEntry]:
+        key = cache_key(kernel_name, kernel_version, space, ctx)
+        with self._lock:
+            self._load()
+            raw = self._db.get(key) or self._overlay.get(key)
+        if raw is None:
+            return None
+        entry = CacheEntry.from_json(raw)
+        if require_fingerprint:
+            for k, v in require_fingerprint.items():
+                if entry.fingerprint.get(k) != v:
+                    return None   # stale / foreign environment: do not reuse
+        # Guard: the stored config must still be valid for this context
+        # (space constraints may be chip-conditional).
+        if not space.is_valid(entry.config, ctx):
+            return None
+        return entry
+
+    def put(self, kernel_name: str, kernel_version: int, space: ConfigSpace,
+            ctx: TuningContext, entry: CacheEntry) -> None:
+        key = cache_key(kernel_name, kernel_version, space, ctx)
+        with self._lock:
+            self._load()
+            self._db[key] = entry.to_json()
+            self._flush()
+
+    def clear(self) -> None:
+        with self._lock:
+            self._db = {}
+            self._loaded = True
+            if os.path.exists(self.db_path):
+                os.unlink(self.db_path)
+
+    def __len__(self) -> int:
+        with self._lock:
+            self._load()
+            return len(self._db)
+
+    def entries(self) -> Dict[str, CacheEntry]:
+        with self._lock:
+            self._load()
+            merged = dict(self._overlay)
+            merged.update(self._db)
+        return {k: CacheEntry.from_json(v) for k, v in merged.items()}
+
+
+def make_entry(config: Config, metric: float, n_evaluated: int, strategy: str,
+               backend_name: str, chip_name: str) -> CacheEntry:
+    return CacheEntry(
+        config=dict(config),
+        metric=float(metric),
+        n_evaluated=int(n_evaluated),
+        strategy=strategy,
+        fingerprint=env_fingerprint(backend_name, chip_name),
+        timestamp=time.time(),
+    )

@@ -1,0 +1,242 @@
+"""Kernel configuration spaces — the paper's Q4.1 "Autotuning API".
+
+The paper identifies the lack of "a high-level API to define kernel parameter
+configuration spaces and also express parameter dependencies" as the first
+gap towards practical autotuning. This module is that API:
+
+  * ``Param`` — one named, finite-domain tunable.
+  * ``ConfigSpace`` — a product of Params plus *constraints* (arbitrary
+    predicates over a full config and a tuning context) that encode both
+    parameter dependencies ("block_q must divide seq_len") and platform
+    validity ("tiles must fit the chip's VMEM") — the paper observed that
+    configs tuned for one platform can be outright invalid on another; on
+    TPU the same arises from per-generation VMEM limits and (8,128) tiling.
+  * ``TuningContext`` — the shape/dtype/chip situation being tuned for.
+
+Spaces are declarative and hashable so the persistent cache (cache.py) can
+detect when a kernel's space definition changed and invalidate stale entries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.hardware import ChipSpec, get_chip
+
+Config = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A single tunable with a finite ordered domain."""
+
+    name: str
+    values: Tuple[Any, ...]
+
+    def __post_init__(self):
+        if not self.values:
+            raise ValueError(f"Param {self.name!r} has an empty domain")
+        if len(set(map(repr, self.values))) != len(self.values):
+            raise ValueError(f"Param {self.name!r} has duplicate values")
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningContext:
+    """Everything a constraint may condition on besides the config itself."""
+
+    chip: ChipSpec
+    shapes: Mapping[str, Tuple[int, ...]] = dataclasses.field(default_factory=dict)
+    dtype: str = "bfloat16"
+    extra: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def shape(self, name: str) -> Tuple[int, ...]:
+        return tuple(self.shapes[name])
+
+    def signature(self) -> str:
+        """Stable string identifying the tuning scenario (cache key part)."""
+        payload = {
+            "chip": self.chip.name,
+            "shapes": {k: list(v) for k, v in sorted(self.shapes.items())},
+            "dtype": self.dtype,
+            "extra": {k: self.extra[k] for k in sorted(self.extra)},
+        }
+        return json.dumps(payload, sort_keys=True)
+
+
+Constraint = Callable[[Config, TuningContext], bool]
+
+
+class ConfigSpace:
+    """Product space of Params filtered by constraints.
+
+    Constraints are named so that pruning statistics (how many configs a
+    platform invalidates — paper Fig. 4's missing bars) are reportable.
+    """
+
+    def __init__(self, name: str, params: Sequence[Param], version: int = 1):
+        self.name = name
+        self.params: Tuple[Param, ...] = tuple(params)
+        seen = set()
+        for p in self.params:
+            if p.name in seen:
+                raise ValueError(f"duplicate param {p.name!r} in space {name!r}")
+            seen.add(p.name)
+        self.version = version
+        self._constraints: List[Tuple[str, Constraint]] = []
+
+    # -- construction -----------------------------------------------------
+    def constrain(self, name: str, fn: Constraint) -> "ConfigSpace":
+        self._constraints.append((name, fn))
+        return self
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def cardinality(self) -> int:
+        """Size of the unconstrained product space."""
+        n = 1
+        for p in self.params:
+            n *= len(p.values)
+        return n
+
+    def space_hash(self) -> str:
+        payload = {
+            "name": self.name,
+            "version": self.version,
+            "params": [[p.name, [repr(v) for v in p.values]] for p in self.params],
+            "constraints": [n for n, _ in self._constraints],
+        }
+        return hashlib.sha256(
+            json.dumps(payload, sort_keys=True).encode()
+        ).hexdigest()[:16]
+
+    # -- validity ---------------------------------------------------------
+    def is_valid(self, config: Config, ctx: TuningContext) -> bool:
+        return self.why_invalid(config, ctx) is None
+
+    def why_invalid(self, config: Config, ctx: TuningContext) -> Optional[str]:
+        """Name of the first violated constraint, or None if valid."""
+        for p in self.params:
+            if config.get(p.name) not in p.values:
+                return f"param:{p.name}"
+        for cname, fn in self._constraints:
+            try:
+                ok = bool(fn(config, ctx))
+            except Exception:
+                ok = False
+            if not ok:
+                return cname
+        return None
+
+    # -- enumeration ------------------------------------------------------
+    def iter_all(self) -> Iterator[Config]:
+        names = [p.name for p in self.params]
+        for combo in itertools.product(*[p.values for p in self.params]):
+            yield dict(zip(names, combo))
+
+    def iter_valid(self, ctx: TuningContext) -> Iterator[Config]:
+        for cfg in self.iter_all():
+            if self.is_valid(cfg, ctx):
+                yield cfg
+
+    def valid_configs(self, ctx: TuningContext) -> List[Config]:
+        return list(self.iter_valid(ctx))
+
+    def pruning_report(self, ctx: TuningContext) -> Dict[str, int]:
+        """Histogram of rejection reasons — quantifies platform-conditional
+        validity (the paper's 'missing configurations' effect)."""
+        report: Dict[str, int] = {"valid": 0}
+        for cfg in self.iter_all():
+            why = self.why_invalid(cfg, ctx)
+            if why is None:
+                report["valid"] += 1
+            else:
+                report[why] = report.get(why, 0) + 1
+        return report
+
+    def default(self, ctx: TuningContext) -> Config:
+        """First valid config in enumeration order — the 'no tuning'
+        heuristic baseline (what an untuned kernel launch would use)."""
+        for cfg in self.iter_valid(ctx):
+            return cfg
+        raise ValueError(
+            f"space {self.name!r} has no valid config for ctx {ctx.signature()}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Reusable constraint builders (the dependency vocabulary of Q4.1).
+# ---------------------------------------------------------------------------
+
+def dtype_bytes(dtype: str) -> int:
+    return {
+        "bfloat16": 2, "float16": 2, "float32": 4, "float64": 8,
+        "int8": 1, "uint8": 1, "int32": 4, "bf16": 2, "f32": 4,
+    }[dtype]
+
+
+def divides(param: str, dim_of: str, axis: int) -> Constraint:
+    """config[param] must divide ctx.shapes[dim_of][axis] (after padding the
+    dim up to the param is also acceptable for Pallas, but requiring
+    divisibility keeps masked-tail handling out of the measured variants)."""
+
+    def fn(cfg: Config, ctx: TuningContext) -> bool:
+        dim = ctx.shape(dim_of)[axis]
+        return dim % int(cfg[param]) == 0 or int(cfg[param]) >= dim
+
+    return fn
+
+
+def at_most_dim(param: str, dim_of: str, axis: int) -> Constraint:
+    def fn(cfg: Config, ctx: TuningContext) -> bool:
+        return int(cfg[param]) <= ctx.shape(dim_of)[axis]
+
+    return fn
+
+
+def multiple_of(param: str, granularity: int) -> Constraint:
+    def fn(cfg: Config, ctx: TuningContext) -> bool:
+        return int(cfg[param]) % granularity == 0
+
+    return fn
+
+
+def lane_aligned(param: str) -> Constraint:
+    """Last-dim tiles must be multiples of the chip lane width (128)."""
+
+    def fn(cfg: Config, ctx: TuningContext) -> bool:
+        return int(cfg[param]) % ctx.chip.min_tile[1] == 0
+
+    return fn
+
+
+def sublane_aligned(param: str) -> Constraint:
+    def fn(cfg: Config, ctx: TuningContext) -> bool:
+        return int(cfg[param]) % ctx.chip.min_tile[0] == 0
+
+    return fn
+
+
+def vmem_fits(estimator: Callable[[Config, TuningContext], int],
+              headroom: float = 0.9) -> Constraint:
+    """Working set estimated by ``estimator`` must fit chip VMEM.
+
+    This is the constraint that makes validity *platform-conditional*: the
+    same config can be valid on v5e (128 MiB VMEM) and invalid on v4/v5p
+    per-core budgets — the TPU analogue of paper Fig. 4's missing bars.
+    """
+
+    def fn(cfg: Config, ctx: TuningContext) -> bool:
+        return estimator(cfg, ctx) <= ctx.chip.vmem_bytes * headroom
+
+    return fn
+
+
+def ordered(param_small: str, param_big: str) -> Constraint:
+    def fn(cfg: Config, ctx: TuningContext) -> bool:
+        return int(cfg[param_small]) <= int(cfg[param_big])
+
+    return fn

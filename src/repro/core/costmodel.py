@@ -1,0 +1,154 @@
+"""Analytical TPU kernel cost model.
+
+This container has no TPU, but the autotuner needs a target-hardware signal
+(the paper's wall-clock benchmarking role). Each kernel describes the work a
+given config performs as a ``KernelWorkload``; the model turns that into an
+estimated seconds-per-call on a given chip using a three-part roofline:
+
+    t = max(t_compute, t_hbm) + grid_overhead + pipeline_fill
+
+  * t_compute respects MXU tile alignment: a matmul whose operand tile dims
+    are not multiples of the systolic array shape wastes the padded fraction
+    (this is what makes e.g. a 256-wide block optimal on v6e's 256×256 MXU
+    but wasteful on v5e's 128×128 — cross-generation non-portability, the
+    paper's central phenomenon).
+  * t_hbm counts bytes actually streamed per config (smaller KV blocks ⇒
+    more Q re-reads etc., so block shape changes the byte count, not just
+    the overhead).
+  * grid/pipeline terms penalize tiny blocks (many grid steps) — the TPU
+    analogue of launch/occupancy overheads the paper tunes via num_warps.
+
+The model is intentionally simple, deterministic, and *monotone in the right
+directions*; its job is relative ordering of configs, not absolute latency.
+On real hardware the identical Autotuner runs with a WallClockTimer instead
+(measure.py), with zero changes to kernels or spaces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.hardware import ChipSpec
+
+
+@dataclasses.dataclass
+class MatmulShape:
+    """One (m, k, n) contraction executed per grid step (counted ``count``×)."""
+
+    m: int
+    k: int
+    n: int
+    count: int = 1
+
+    def flops(self) -> float:
+        return 2.0 * self.m * self.k * self.n * self.count
+
+    def mxu_utilization(self, mxu: Tuple[int, int]) -> float:
+        """Fraction of MXU work that is useful given padding to the array."""
+        rm, rn = mxu
+        pad_m = math.ceil(self.m / rm) * rm
+        pad_n = math.ceil(self.n / rn) * rn
+        pad_k = math.ceil(self.k / rm) * rm
+        useful = self.m * self.k * self.n
+        padded = pad_m * pad_k * pad_n
+        return useful / padded
+
+
+@dataclasses.dataclass
+class KernelWorkload:
+    """Config-conditional work description produced by each kernel's ops.py."""
+
+    flops: float                       # total useful FLOPs (whole call)
+    hbm_bytes: float                   # total HBM traffic (read + write)
+    grid_steps: int                    # number of grid invocations
+    vmem_bytes: int                    # per-step VMEM working set
+    matmuls: Sequence[MatmulShape] = ()   # per-step MXU contractions
+    vector_flops: float = 0.0          # non-MXU (VPU) flops, e.g. softmax/norm
+    dtype: str = "bfloat16"
+    # Number of independent programs along 'parallel' grid axes: work that
+    # can be split across TensorCores of a megacore chip (v4/v5p). HBM
+    # bandwidth stays shared; compute and dispatch overhead divide.
+    parallel_grid: int = 1
+
+    def mxu_utilization(self, mxu: Tuple[int, int]) -> float:
+        if not self.matmuls:
+            return 1.0
+        tot = sum(m.flops() for m in self.matmuls)
+        if tot == 0:
+            return 1.0
+        return sum(m.flops() * m.mxu_utilization(mxu) for m in self.matmuls) / tot
+
+
+# VPU throughput relative to MXU peak (8×128×8 lanes vs 4 MXUs ≈ a few %).
+_VPU_FRACTION = 0.03
+
+
+def estimate_seconds(w: KernelWorkload, chip: ChipSpec) -> float:
+    peak = chip.flops_for_dtype(w.dtype)
+    util = w.mxu_utilization(chip.mxu_shape)
+    # Megacore: compute/dispatch split across cores iff the parallel grid is
+    # wide enough; HBM bandwidth is shared either way.
+    usable_cores = max(1, min(chip.cores, w.parallel_grid))
+    core_fraction = usable_cores / chip.cores
+    t_mxu = w.flops / (peak * core_fraction * max(util, 1e-6)) if w.flops else 0.0
+    t_vpu = (w.vector_flops / (peak * core_fraction * _VPU_FRACTION)
+             if w.vector_flops else 0.0)
+    t_compute = t_mxu + t_vpu
+    t_hbm = w.hbm_bytes / chip.hbm_bandwidth
+    # Double-buffered pipeline: compute and HBM streaming overlap.
+    t_body = max(t_compute, t_hbm)
+    # Per-step dispatch overhead + pipeline fill for the first step's fetch.
+    t_overhead = w.grid_steps * chip.grid_overhead_s / usable_cores
+    t_fill = (w.vmem_bytes / chip.hbm_bandwidth) if w.grid_steps else 0.0
+    # VMEM over-subscription is a validity constraint, not a soft penalty;
+    # spaces reject such configs before they reach the model.
+    return t_body + t_overhead + t_fill
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """The three §Roofline terms, in seconds, for a whole lowered step."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower bound on step time assuming perfect overlap."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def serial_s(self) -> float:
+        """Upper bound assuming no overlap at all."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+
+def roofline_terms(*, hlo_flops: float, hlo_bytes: float,
+                   collective_bytes: float, n_chips: int,
+                   chip: ChipSpec, dtype: str = "bfloat16",
+                   per_device: bool = True) -> RooflineTerms:
+    """Roofline terms per the brief.
+
+    ``hlo_flops``/``hlo_bytes`` from ``compiled.cost_analysis()`` are
+    *per-device* numbers for SPMD-partitioned modules (XLA analyses the
+    partitioned module); set ``per_device=False`` if passing global totals.
+    """
+    scale = 1.0 if per_device else 1.0 / n_chips
+    peak = chip.flops_for_dtype(dtype)
+    return RooflineTerms(
+        compute_s=hlo_flops * scale / peak,
+        memory_s=hlo_bytes * scale / chip.hbm_bandwidth,
+        collective_s=collective_bytes * scale / (chip.ici_bandwidth * chip.ici_links),
+    )

@@ -1,0 +1,132 @@
+"""TPU chip specification database.
+
+The paper demonstrates portability across GPU *vendors* (A100 vs MI250).
+The TPU-native analogue is portability across TPU *generations*: each
+generation changes VMEM capacity, MXU throughput, HBM bandwidth and
+interconnect — exactly the parameters that decide which kernel block
+configuration is optimal (and even *valid*: a block that fits v5p VMEM can
+exceed v5e VMEM, mirroring the paper's "configs invalid on the other
+platform" finding).
+
+All numbers are per-chip, from public TPU documentation. ``CPU_HOST`` is the
+degenerate "platform" used when wall-clock measuring on this container.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    # Compute.
+    peak_bf16_flops: float      # FLOP/s
+    peak_int8_ops: float        # OP/s
+    mxu_shape: tuple            # systolic array tile (rows, cols)
+    # Memory hierarchy.
+    hbm_bytes: int
+    hbm_bandwidth: float        # B/s
+    # Usable per-core VMEM budget for one kernel's working set. Approximate
+    # public numbers; what matters for tuning is the per-generation *ratio*
+    # (it decides which block configs are valid on which chip — the TPU
+    # analogue of paper Fig. 4's configs being invalid on the other GPU).
+    vmem_bytes: int
+    # Interconnect.
+    ici_bandwidth: float        # B/s per link
+    ici_links: int
+    # TensorCores per chip ("megacore" on v4/v5p). Parallel grid dimensions
+    # of a Pallas kernel can be split across cores; HBM bandwidth is shared.
+    cores: int = 1
+    # Lane/sublane tiling granularity for f32 (sublane, lane).
+    min_tile: tuple = (8, 128)
+    # Fixed per-grid-step overhead (s): dispatch + pipeline fill. Calibrated
+    # coarse constant; only relative config ordering matters for tuning.
+    grid_overhead_s: float = 1.2e-6
+
+    @property
+    def peak_fp32_flops(self) -> float:
+        return self.peak_bf16_flops / 4.0
+
+    def flops_for_dtype(self, dtype_name: str) -> float:
+        if "int8" in dtype_name or "uint8" in dtype_name:
+            return self.peak_int8_ops
+        if dtype_name in ("float32", "f32"):
+            return self.peak_fp32_flops
+        return self.peak_bf16_flops
+
+
+# Public-spec numbers. VMEM: usable per-core scratch for one Pallas kernel.
+CHIPS: Dict[str, ChipSpec] = {
+    "tpu_v4": ChipSpec(
+        name="tpu_v4",
+        peak_bf16_flops=275e12,
+        peak_int8_ops=275e12,
+        mxu_shape=(128, 128),
+        hbm_bytes=32 * 2**30,
+        hbm_bandwidth=1228e9,
+        vmem_bytes=16 * 2**20,
+        ici_bandwidth=50e9,
+        ici_links=6,
+        cores=2,
+    ),
+    "tpu_v5e": ChipSpec(
+        name="tpu_v5e",
+        peak_bf16_flops=197e12,
+        peak_int8_ops=394e12,
+        mxu_shape=(128, 128),
+        hbm_bytes=16 * 2**30,
+        hbm_bandwidth=819e9,
+        vmem_bytes=32 * 2**20,
+        ici_bandwidth=50e9,
+        ici_links=4,
+    ),
+    "tpu_v5p": ChipSpec(
+        name="tpu_v5p",
+        peak_bf16_flops=459e12,
+        peak_int8_ops=918e12,
+        mxu_shape=(128, 128),
+        hbm_bytes=95 * 2**30,
+        hbm_bandwidth=2765e9,
+        vmem_bytes=32 * 2**20,
+        ici_bandwidth=100e9,
+        ici_links=6,
+        cores=2,
+    ),
+    "tpu_v6e": ChipSpec(
+        name="tpu_v6e",
+        peak_bf16_flops=918e12,
+        peak_int8_ops=1836e12,
+        mxu_shape=(256, 256),
+        hbm_bytes=32 * 2**30,
+        hbm_bandwidth=1640e9,
+        vmem_bytes=64 * 2**20,
+        ici_bandwidth=90e9,
+        ici_links=4,
+    ),
+    # Wall-clock measurement platform for this container (used by timers,
+    # never by the analytical model).
+    "cpu_host": ChipSpec(
+        name="cpu_host",
+        peak_bf16_flops=5e10,
+        peak_int8_ops=1e11,
+        mxu_shape=(1, 1),
+        hbm_bytes=32 * 2**30,
+        hbm_bandwidth=20e9,
+        vmem_bytes=8 * 2**20,
+        ici_bandwidth=1e9,
+        ici_links=1,
+        grid_overhead_s=5e-6,
+    ),
+}
+
+# The production fleet target used for roofline terms in EXPERIMENTS.md.
+PRODUCTION_CHIP = "tpu_v5e"
+
+
+def get_chip(name: str) -> ChipSpec:
+    try:
+        return CHIPS[name]
+    except KeyError:
+        raise KeyError(f"unknown chip {name!r}; known: {sorted(CHIPS)}") from None

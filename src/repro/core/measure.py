@@ -1,0 +1,145 @@
+"""Measurement backends for the autotuner.
+
+The paper benchmarks each candidate config on the target GPU (CUDA/HIP
+graphs, 24 h budget). The Autotuner here takes a pluggable backend:
+
+  * ``WallClockTimer``      — times a runner callable on the local device
+                              (median of ``reps``, after warmup). Used for
+                              interpret-mode Pallas kernels and jitted XLA
+                              variants on this CPU container; identical code
+                              path times real kernels on a TPU host.
+  * ``AnalyticalMeasure``   — deterministic TPU cost-model estimate
+                              (costmodel.py) for a named target chip. This is
+                              what "tune for v5e / v6e" means without TPUs.
+  * ``HybridMeasure``       — analytical pre-ranking with wall-clock
+                              verification of the top-K (cheap multi-fidelity
+                              combo used by SuccessiveHalving).
+
+Backends expose ``evaluator(kernel, ctx) -> Callable[[Config], float]``
+returning seconds-per-call (lower better; ``inf`` on failure), plus a
+``name`` recorded in the tuning cache fingerprint.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core.config_space import Config, TuningContext
+from repro.core.costmodel import estimate_seconds
+from repro.core.hardware import ChipSpec
+
+RunnerFactory = Callable[[Config, TuningContext], Callable[[], Any]]
+WorkloadFn = Callable[[Config, TuningContext], "KernelWorkload"]  # noqa: F821
+
+
+class MeasureBackend:
+    name = "base"
+
+    def evaluator(self, kernel, ctx: TuningContext):
+        raise NotImplementedError
+
+
+class WallClockTimer(MeasureBackend):
+    name = "wall_clock"
+
+    def __init__(self, reps: int = 5, warmup: int = 2,
+                 timeout_s: Optional[float] = None):
+        self.reps = reps
+        self.warmup = warmup
+        self.timeout_s = timeout_s
+
+    def time_runner(self, runner: Callable[[], Any],
+                    fidelity: int = 1) -> float:
+        reps = self.reps * max(1, fidelity)
+        try:
+            for _ in range(self.warmup):
+                out = runner()
+                jax.block_until_ready(out)
+        except Exception:
+            return math.inf
+        samples = []
+        deadline = time.monotonic() + self.timeout_s if self.timeout_s else None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = runner()
+            jax.block_until_ready(out)
+            samples.append(time.perf_counter() - t0)
+            if deadline and time.monotonic() > deadline:
+                break
+        samples.sort()
+        return samples[len(samples) // 2]
+
+    def evaluator(self, kernel, ctx: TuningContext):
+        if kernel.make_runner is None:
+            raise ValueError(
+                f"kernel {kernel.name!r} has no runner factory; "
+                "wall-clock backend unusable"
+            )
+
+        def evaluate(cfg: Config, fidelity: int = 1) -> float:
+            try:
+                runner = kernel.make_runner(cfg, ctx)
+            except Exception:
+                return math.inf
+            return self.time_runner(runner, fidelity=fidelity)
+
+        return evaluate
+
+
+class AnalyticalMeasure(MeasureBackend):
+    def __init__(self, chip: ChipSpec):
+        self.chip = chip
+        self.name = f"analytical:{chip.name}"
+
+    def evaluator(self, kernel, ctx: TuningContext):
+        if kernel.workload_fn is None:
+            raise ValueError(
+                f"kernel {kernel.name!r} has no workload_fn; "
+                "analytical backend unusable"
+            )
+
+        def evaluate(cfg: Config, fidelity: int = 1) -> float:
+            del fidelity  # deterministic — fidelity is a no-op
+            try:
+                w = kernel.workload_fn(cfg, ctx)
+            except Exception:
+                return math.inf
+            return estimate_seconds(w, self.chip)
+
+        return evaluate
+
+
+class HybridMeasure(MeasureBackend):
+    """Analytical estimate at low fidelity, wall-clock at high fidelity.
+
+    Pairs with SuccessiveHalving: rung 0 ranks the whole space with the model
+    (free), later rungs re-measure survivors for real. This is the paper's
+    Q4.2 "efficient search" + Q4.4 "move tuning off the critical path"
+    combined: model-only tuning can run with zero device time.
+    """
+
+    def __init__(self, chip: ChipSpec, timer: Optional[WallClockTimer] = None,
+                 wall_clock_fidelity: int = 4):
+        self.analytical = AnalyticalMeasure(chip)
+        self.timer = timer or WallClockTimer()
+        self.wall_clock_fidelity = wall_clock_fidelity
+        self.name = f"hybrid:{chip.name}"
+
+    def evaluator(self, kernel, ctx: TuningContext):
+        analytic = self.analytical.evaluator(kernel, ctx)
+        can_time = kernel.make_runner is not None
+
+        def evaluate(cfg: Config, fidelity: int = 1) -> float:
+            if fidelity < self.wall_clock_fidelity or not can_time:
+                return analytic(cfg)
+            try:
+                runner = kernel.make_runner(cfg, ctx)
+            except Exception:
+                return math.inf
+            return self.timer.time_runner(runner, fidelity=1)
+
+        return evaluate

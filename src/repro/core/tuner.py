@@ -1,0 +1,188 @@
+"""The Autotuner — JIT autotuning with persistent reuse and off-critical-path
+tuning, the paper's core mechanism plus its four Q4 fixes.
+
+A ``TunableKernel`` bundles everything the tuner needs:
+  * ``space``        — ConfigSpace (Q4.1 API),
+  * ``workload_fn``  — config → KernelWorkload for the analytical backend,
+  * ``make_runner``  — (config, ctx) → zero-arg callable for wall-clock
+                       backends (interpret-mode Pallas / jitted XLA),
+  * ``heuristic``    — optional untuned default (the "vendor heuristic"
+                       baseline the paper compares against).
+
+``Autotuner.best_config`` is the JIT entry point used by kernels' ops.py at
+call time:
+
+  cache hit (env fingerprint + constraints still valid)  → reuse   (Q4.3)
+  miss, policy "tune"                                    → tune now (paper's
+                                                           JIT autotuning)
+  miss, policy "heuristic"                               → return default,
+                                                           enqueue background
+                                                           tuning      (Q4.4)
+  miss, policy "error"                                   → raise (CI mode)
+
+The module-level ``default_tuner()`` targets ``$REPRO_TARGET_CHIP`` (default
+tpu_v5e) with the analytical backend so model code autotunes deterministically
+on this container; tests and benchmarks construct explicit tuners with
+wall-clock backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import cache as cache_lib
+from repro.core import measure as measure_lib
+from repro.core import search as search_lib
+from repro.core.config_space import Config, ConfigSpace, TuningContext
+from repro.core.costmodel import KernelWorkload
+from repro.core.hardware import get_chip
+
+log = logging.getLogger("repro.tuner")
+
+
+@dataclasses.dataclass
+class TunableKernel:
+    name: str
+    space: ConfigSpace
+    version: int = 1
+    workload_fn: Optional[Callable[[Config, TuningContext], KernelWorkload]] = None
+    make_runner: Optional[measure_lib.RunnerFactory] = None
+    heuristic: Optional[Callable[[TuningContext], Config]] = None
+
+    def default_config(self, ctx: TuningContext) -> Config:
+        if self.heuristic is not None:
+            cfg = self.heuristic(ctx)
+            if self.space.is_valid(cfg, ctx):
+                return cfg
+        return self.space.default(ctx)
+
+
+class TuningQueue:
+    """Deferred tuning requests (paper Q4.4: tune during idle time)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items: Dict[str, Tuple[TunableKernel, TuningContext]] = {}
+
+    def add(self, kernel: TunableKernel, ctx: TuningContext) -> None:
+        key = cache_lib.cache_key(kernel.name, kernel.version, kernel.space, ctx)
+        with self._lock:
+            self._items.setdefault(key, (kernel, ctx))
+
+    def drain(self) -> List[Tuple[TunableKernel, TuningContext]]:
+        with self._lock:
+            items = list(self._items.values())
+            self._items.clear()
+        return items
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+
+class Autotuner:
+    def __init__(self,
+                 cache: Optional[cache_lib.TuningCache] = None,
+                 backend: Optional[measure_lib.MeasureBackend] = None,
+                 strategy: Optional[search_lib.SearchStrategy] = None,
+                 on_miss: str = "tune"):
+        assert on_miss in ("tune", "heuristic", "error")
+        self.cache = cache if cache is not None else cache_lib.TuningCache()
+        self.backend = backend or measure_lib.AnalyticalMeasure(
+            get_chip(os.environ.get("REPRO_TARGET_CHIP", "tpu_v5e")))
+        self.strategy = strategy or search_lib.ExhaustiveSearch()
+        self.on_miss = on_miss
+        self.queue = TuningQueue()
+        self.stats = {"hits": 0, "misses": 0, "tunes": 0, "heuristic_uses": 0}
+
+    # -- core API ----------------------------------------------------------
+    def tune(self, kernel: TunableKernel, ctx: TuningContext,
+             strategy: Optional[search_lib.SearchStrategy] = None
+             ) -> cache_lib.CacheEntry:
+        """Run the search now and persist the winner."""
+        strat = strategy or self.strategy
+        evaluate = self.backend.evaluator(kernel, ctx)
+        result = strat.run(kernel.space, ctx, evaluate)
+        self.stats["tunes"] += 1
+        if result.best is None:
+            # Nothing measurable — fall back to the structural default but
+            # record the failure so it is visible, not silent.
+            cfg = kernel.default_config(ctx)
+            entry = cache_lib.make_entry(
+                cfg, float("inf"), result.evaluations,
+                f"{strat.name}(failed)", self.backend.name,
+                _chip_name(self.backend))
+        else:
+            entry = cache_lib.make_entry(
+                result.best, result.best_metric, result.evaluations,
+                strat.name, self.backend.name, _chip_name(self.backend))
+        self.cache.put(kernel.name, kernel.version, kernel.space, ctx, entry)
+        log.info("tuned %s ctx=%s -> %s (%.3g s/call, %d evals)",
+                 kernel.name, ctx.signature(), entry.config, entry.metric,
+                 entry.n_evaluated)
+        return entry
+
+    def best_config(self, kernel: TunableKernel, ctx: TuningContext) -> Config:
+        entry = self.cache.get(
+            kernel.name, kernel.version, kernel.space, ctx,
+            require_fingerprint={"backend": self.backend.name})
+        if entry is not None:
+            self.stats["hits"] += 1
+            return dict(entry.config)
+        self.stats["misses"] += 1
+        if self.on_miss == "tune":
+            return dict(self.tune(kernel, ctx).config)
+        if self.on_miss == "heuristic":
+            self.queue.add(kernel, ctx)
+            self.stats["heuristic_uses"] += 1
+            return kernel.default_config(ctx)
+        raise LookupError(
+            f"no tuned config for kernel {kernel.name!r} ctx {ctx.signature()} "
+            f"and on_miss='error'")
+
+    def flush_tuning_queue(self) -> int:
+        """Tune everything deferred by the heuristic policy (idle-time hook)."""
+        items = self.queue.drain()
+        for kernel, ctx in items:
+            self.tune(kernel, ctx)
+        return len(items)
+
+
+def _chip_name(backend: measure_lib.MeasureBackend) -> str:
+    chip = getattr(backend, "chip", None)
+    if chip is not None:
+        return chip.name
+    analytical = getattr(backend, "analytical", None)
+    if analytical is not None:
+        return analytical.chip.name
+    return "local"
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default tuner used by kernels/ops.py at call sites.
+# ---------------------------------------------------------------------------
+_DEFAULT: Optional[Autotuner] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_tuner() -> Autotuner:
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            shipped = os.path.join(os.path.dirname(__file__), os.pardir,
+                                   "configs", "shipped_tuning_db.json")
+            _DEFAULT = Autotuner(
+                cache=cache_lib.TuningCache(overlay_path=os.path.abspath(shipped)),
+                on_miss=os.environ.get("REPRO_ON_MISS", "tune"),
+            )
+        return _DEFAULT
+
+
+def set_default_tuner(tuner: Optional[Autotuner]) -> None:
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        _DEFAULT = tuner

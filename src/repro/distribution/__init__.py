@@ -1,0 +1,3 @@
+from repro.distribution.sharding import (  # noqa: F401
+    POLICIES, ShardingPolicy, params_shardings, shard, spec_for, use_sharding,
+)

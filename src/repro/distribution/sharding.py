@@ -1,0 +1,194 @@
+"""Logical-axis sharding policies (DP / FSDP / TP / EP / SP).
+
+Model code annotates tensors with *logical* axis names; a ShardingPolicy
+maps those to physical mesh axes. Policies are data, not code — they are
+part of the distribution-level autotuning space (DESIGN.md §7): the
+hillclimb sweeps policies per (arch × shape × mesh) using the same
+ConfigSpace machinery as the kernel tuner.
+
+Divisibility fallback: if a tensor dim is not divisible by the mapped mesh
+axes (e.g. kv_heads=8 on a 16-way model axis), progressively shorter
+prefixes of the mapping are tried, ending in replication — so one policy
+serves every architecture without per-arch special cases.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Optional[str]
+MeshAxes = Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    name: str
+    # logical axis -> mesh axes (tuples; longest valid prefix is used)
+    rules: Dict[str, MeshAxes]
+
+    def mesh_axes(self, logical: Logical) -> MeshAxes:
+        if logical is None:
+            return ()
+        return tuple(self.rules.get(logical, ()))
+
+
+# Batch/replicated-param training for small models: pure DP + TP.
+TRAIN_TP = ShardingPolicy("train_tp", {
+    "batch": ("pod", "data"),
+    "seq_attn": ("model",),     # context-parallel fallback (shard_heads_or_seq)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "ssm_heads": ("model",),
+    "act_model": ("model",),     # activation hidden dims that mirror TP
+})
+
+# FSDP(+TP) for ≥10B training: weight d_model dim sharded over the batch
+# domain, gathered per layer by XLA (ZeRO-3 style).
+TRAIN_FSDP_TP = ShardingPolicy("train_fsdp_tp", {
+    **TRAIN_TP.rules,
+    "d_model": ("pod", "data"),
+})
+
+# Serving, weights replicated over the batch domain (fits ≤~20B on v5e).
+SERVE_TP = ShardingPolicy("serve_tp", {
+    "batch": ("pod", "data"),
+    "seq_attn": ("model",),
+    "kv_seq": ("model",),       # sequence-sharded KV cache (kv_layout=auto_seq)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "ssm_heads": ("model",),
+    "act_model": ("model",),
+})
+
+# Serving for huge models: weights sharded over BOTH axes (2-D tensor
+# parallelism); per-layer all-gathers trade ICI for fitting HBM.
+SERVE_2D = ShardingPolicy("serve_2d", {
+    **SERVE_TP.rules,
+    "d_model": ("pod", "data"),
+})
+
+# Serving for huge MoE: expert weights sharded over BOTH axes via
+# (experts→model) × (ff→data) — weights stay resident (no per-step d_model
+# all-gathers like SERVE_2D); collectives reduce to activation-sized psums.
+SERVE_EP2D = ShardingPolicy("serve_ep2d", {
+    **SERVE_TP.rules,
+    "ff": ("model", "data"),     # spec_for drops used axes → experts keep
+                                 # "model", expert ff falls through to "data"
+})
+
+# Sequence parallelism variant (hillclimb lever): activations sharded on
+# sequence in norm/residual regions.
+TRAIN_TP_SP = ShardingPolicy("train_tp_sp", {
+    **TRAIN_TP.rules,
+    "seq": ("model",),
+})
+
+POLICIES: Dict[str, ShardingPolicy] = {
+    p.name: p for p in
+    (TRAIN_TP, TRAIN_FSDP_TP, SERVE_TP, SERVE_2D, SERVE_EP2D,
+     TRAIN_TP_SP)
+}
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Logical],
+             policy: ShardingPolicy, mesh: Mesh) -> P:
+    """PartitionSpec for a tensor, with divisibility fallback and
+    no-mesh-axis-reuse enforcement."""
+    used: set = set()
+    parts = []
+    for dim, logical in zip(shape, axes):
+        mapped = tuple(a for a in policy.mesh_axes(logical)
+                       if a in mesh.shape and a not in used)
+        # Longest prefix whose size divides the dim.
+        chosen: MeshAxes = ()
+        for k in range(len(mapped), 0, -1):
+            prefix = mapped[:k]
+            size = math.prod(mesh.shape[a] for a in prefix)
+            if dim % size == 0 and size > 1:
+                chosen = prefix
+                break
+        used.update(chosen)
+        if len(chosen) == 0:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+        else:
+            parts.append(chosen)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def params_shardings(axes_tree, shapes_tree, policy: ShardingPolicy,
+                     mesh: Mesh):
+    """NamedSharding pytree for parameters (axes_tree from param.axes_tree)."""
+    return jax.tree.map(
+        lambda axes, shp: NamedSharding(
+            mesh, spec_for(shp.shape, axes, policy, mesh)),
+        axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+# --- activation-constraint context -----------------------------------------
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding", default=None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], policy: Optional[ShardingPolicy]):
+    token = _ACTIVE.set((mesh, policy) if mesh is not None else None)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def shard(x, *axes: Logical):
+    """Annotate activation ``x`` with logical axes; no-op outside a
+    use_sharding context (keeps model code mesh-agnostic)."""
+    active = _ACTIVE.get()
+    if active is None:
+        return x
+    mesh, policy = active
+    spec = spec_for(x.shape, axes, policy, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_heads_or_seq(x, *, head_axis: int, seq_axis: int,
+                       head_logical: str = "heads"):
+    """Head-parallel attention activations when the head count divides the
+    model axis, sequence-parallel otherwise.
+
+    Archs whose head counts don't divide a 16-way model axis (phi4: 24 q /
+    8 kv heads) would silently fall back to *replicated* attention compute —
+    a 16× waste. The production fix is context/sequence parallelism for the
+    attention region, which is what the ``seq_attn`` rule does.
+    """
+    active = _ACTIVE.get()
+    if active is None:
+        return x
+    mesh, policy = active
+    mapped = [a for a in policy.mesh_axes(head_logical) if a in mesh.shape]
+    size = math.prod(mesh.shape[a] for a in mapped) if mapped else 1
+    axes: list = [None] * x.ndim
+    axes[0] = "batch"
+    if size > 1 and x.shape[head_axis] % size == 0:
+        axes[head_axis] = head_logical
+    elif x.shape[seq_axis] % max(size, 1) == 0:
+        axes[seq_axis] = "seq_attn"
+    return shard(x, *axes)

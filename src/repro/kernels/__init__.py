@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's performance-critical LLM hot spots.
+
+Layout per the repo convention:
+    flash_attention.py / decode_attention.py / rms_norm.py / matmul.py
+        — pl.pallas_call + BlockSpec kernel bodies
+    ops.py  — autotuned jit'd public wrappers (ConfigSpaces + workloads)
+    ref.py  — pure-jnp oracles
+
+All kernels run under interpret=True on this CPU container (validated
+against ref.py in tests/); on a TPU host the same calls lower via Mosaic.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    ALL_KERNELS, DECODE_ATTENTION, FLASH_ATTENTION, MATMUL, RMS_NORM,
+    attention, decode, matmul, rmsnorm,
+)

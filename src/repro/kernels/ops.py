@@ -1,0 +1,517 @@
+"""Autotuned public kernel API — JIT autotuning at the call site.
+
+This module is the integration point between the kernels and the paper's
+autotuner: for each kernel it declares
+
+  * a ``ConfigSpace`` with platform-conditional validity constraints (Q4.1),
+  * a ``workload_fn`` (config → KernelWorkload) for analytical TPU tuning,
+  * a ``make_runner`` factory for wall-clock tuning (interpret-mode on this
+    container, real kernels on a TPU host),
+  * a ``heuristic`` — the untuned "pick something reasonable" default that
+    plays the role of the paper's vendor/template baseline configuration.
+
+Public entry points (``attention``, ``decode``, ``rmsnorm``, ``matmul``)
+look up the best known config from the process tuner (persistent-cache hit,
+JIT tune, or heuristic + background enqueue, per policy) and dispatch.
+Every entry point accepts ``config=`` to bypass tuning (used by benchmarks
+that sweep configs explicitly, reproducing the paper's Fig. 4/5 analyses).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Autotuner, Config, ConfigSpace, KernelWorkload, MatmulShape, Param,
+    TunableKernel, TuningContext, default_tuner,
+)
+from repro.core.config_space import dtype_bytes, vmem_fits
+
+LANES = 128
+
+
+def _ctx(tuner: Autotuner, shapes: Dict[str, Tuple[int, ...]], dtype: str,
+         **extra) -> TuningContext:
+    chip = getattr(tuner.backend, "chip", None)
+    if chip is None:
+        chip = getattr(getattr(tuner.backend, "analytical", None), "chip", None)
+    if chip is None:
+        from repro.core.hardware import get_chip
+        chip = get_chip("tpu_v5e")
+    return TuningContext(chip=chip, shapes=shapes, dtype=dtype, extra=extra)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ===========================================================================
+# Flash attention (prefill / training forward)
+# ===========================================================================
+
+def _flash_vmem(cfg: Config, ctx: TuningContext) -> int:
+    D = ctx.shape("q")[3]
+    if cfg.get("pad_head_dim"):
+        D = -(-D // LANES) * LANES
+    ib = dtype_bytes(ctx.dtype)
+    bq, bk = cfg["block_q"], cfg["block_kv"]
+    buf = 2 * (bq * D * ib + 2 * bk * D * ib + bq * D * ib + bq * LANES * 4)
+    scratch = bq * D * 4 + 2 * bq * LANES * 4
+    return buf + scratch
+
+
+def flash_attention_space() -> ConfigSpace:
+    sp = ConfigSpace(
+        "flash_attention",
+        [
+            Param("block_q", (64, 128, 256, 512, 1024, 2048)),
+            Param("block_kv", (128, 256, 512, 1024, 2048, 4096)),
+            Param("pad_head_dim", (False, True)),
+        ],
+        version=2,
+    )
+    sp.constrain("vmem", vmem_fits(_flash_vmem))
+    sp.constrain("block_q<=seq_q",
+                 lambda c, x: c["block_q"] <= max(64, _rup(x.shape("q")[2], 8)))
+    sp.constrain("block_kv<=seq_kv",
+                 lambda c, x: c["block_kv"] <= max(128, _rup(x.shape("k")[2], 128)))
+    return sp
+
+
+def _flash_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
+    B, Hq, Sq, D = ctx.shape("q")
+    _, Hkv, Skv, _ = ctx.shape("k")
+    causal = bool(ctx.extra.get("causal", True))
+    window = ctx.extra.get("window") or None
+    Dp = -(-D // LANES) * LANES if cfg["pad_head_dim"] else D
+    ib = dtype_bytes(ctx.dtype)
+    bq, bk = min(cfg["block_q"], _rup(Sq, 8)), min(cfg["block_kv"], _rup(Skv, 128))
+    nq, nk = _cdiv(Sq, bq), _cdiv(Skv, bk)
+
+    # Fraction of (q-block, kv-block) tiles actually executed.
+    if window is not None and causal:
+        vis = min(1.0, (window + bq + bk) / max(Skv, 1))
+    elif causal:
+        vis = min(1.0, (0.5 * Skv + bq) / max(Skv, 1))
+    else:
+        vis = 1.0
+    run_steps = B * Hq * nq * max(1, int(round(nk * vis)))
+
+    flops = 4.0 * B * Hq * Sq * Skv * D * vis          # qk^T + pv
+    vflops = 6.0 * B * Hq * Sq * Skv * vis             # softmax pipeline
+    bytes_q = B * Hq * Sq * Dp * ib
+    bytes_kv = 2.0 * run_steps * bk * Dp * ib          # kv streamed per tile
+    bytes_o = B * Hq * Sq * (Dp * ib + 4 * LANES)
+    return KernelWorkload(
+        flops=flops,
+        hbm_bytes=bytes_q + bytes_kv + bytes_o,
+        grid_steps=B * Hq * nq * nk,
+        vmem_bytes=_flash_vmem(cfg, ctx),
+        matmuls=[MatmulShape(bq, Dp, bk), MatmulShape(bq, bk, Dp)],
+        vector_flops=vflops,
+        dtype=ctx.dtype,
+        parallel_grid=B * Hq * nq,
+    )
+
+
+def _flash_heuristic(ctx: TuningContext) -> Config:
+    # "What a sensible developer hard-codes": the flash_attn-v2 default tile.
+    return {"block_q": 128, "block_kv": 128, "pad_head_dim": False}
+
+
+def _flash_runner(cfg: Config, ctx: TuningContext):
+    q_s, k_s = ctx.shape("q"), ctx.shape("k")
+    dtype = jnp.dtype(ctx.dtype)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(keys[0], q_s, dtype)
+    k = _rand(keys[1], k_s, dtype)
+    v = _rand(keys[2], k_s, dtype)
+    fn = jax.jit(functools.partial(
+        _flash_dispatch, causal=bool(ctx.extra.get("causal", True)),
+        window=ctx.extra.get("window") or None, config=dict(cfg)))
+    return lambda: fn(q, k, v)
+
+
+def _flash_dispatch(q, k, v, *, causal, window, config, q_offset=0,
+                    interpret=True, return_lse=False):
+    from repro.kernels.flash_attention import flash_attention
+    D = q.shape[-1]
+    cfg = dict(config)
+    if cfg.pop("pad_head_dim", False) and D % LANES:
+        Dp = -(-D // LANES) * LANES
+        pad = [(0, 0)] * 3 + [(0, Dp - D)]
+        scale = D ** -0.5
+        out = flash_attention(jnp.pad(q, pad), jnp.pad(k, pad),
+                              jnp.pad(v, pad), causal=causal, window=window,
+                              scale=scale, q_offset=q_offset,
+                              interpret=interpret, return_lse=return_lse,
+                              **cfg)
+        if return_lse:
+            return out[0][..., :D], out[1]
+        return out[..., :D]
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, interpret=interpret,
+                           return_lse=return_lse, **cfg)
+
+
+FLASH_ATTENTION = TunableKernel(
+    name="flash_attention",
+    space=flash_attention_space(),
+    version=2,
+    workload_fn=_flash_workload,
+    make_runner=_flash_runner,
+    heuristic=_flash_heuristic,
+)
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              q_offset: int = 0, config: Optional[Config] = None,
+              tuner: Optional[Autotuner] = None, interpret: bool = True,
+              return_lse: bool = False):
+    """Autotuned flash attention. q (B,Hq,Sq,D); k,v (B,Hkv,Skv,D)."""
+    if config is None:
+        tuner = tuner or default_tuner()
+        ctx = _ctx(tuner, {"q": q.shape, "k": k.shape}, str(q.dtype),
+                   causal=causal, window=window or 0)
+        config = tuner.best_config(FLASH_ATTENTION, ctx)
+    return _flash_dispatch(q, k, v, causal=causal, window=window,
+                           config=config, q_offset=q_offset,
+                           interpret=interpret, return_lse=return_lse)
+
+
+# ===========================================================================
+# Flash attention backward (training)
+# ===========================================================================
+
+def _flash_bwd_vmem(cfg: Config, ctx: TuningContext) -> int:
+    D = ctx.shape("q")[3]
+    ib = dtype_bytes(ctx.dtype)
+    bq, bk = cfg["block_q"], cfg["block_kv"]
+    # q, k, v, do tiles (×2 double-buffered) + dk/dv f32 scratch + lse/delta
+    buf = 2 * (2 * bq * D * ib + 2 * bk * D * ib + 2 * bq * 4)
+    scratch = 2 * bk * D * 4 + bq * D * 4
+    return buf + scratch
+
+
+def flash_attention_bwd_space() -> ConfigSpace:
+    sp = ConfigSpace(
+        "flash_attention_bwd",
+        [
+            Param("block_q", (64, 128, 256, 512)),
+            Param("block_kv", (128, 256, 512, 1024)),
+        ],
+        version=1,
+    )
+    sp.constrain("vmem", vmem_fits(_flash_bwd_vmem))
+    return sp
+
+
+def _flash_bwd_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
+    B, Hq, Sq, D = ctx.shape("q")
+    _, Hkv, Skv, _ = ctx.shape("k")
+    causal = bool(ctx.extra.get("causal", True))
+    vis = 0.5 if causal else 1.0
+    ib = dtype_bytes(ctx.dtype)
+    bq, bk = min(cfg["block_q"], _rup(Sq, 8)), min(cfg["block_kv"],
+                                                   _rup(Skv, 128))
+    nq, nk = _cdiv(Sq, bq), _cdiv(Skv, bk)
+    # dkv: 4 matmuls/tile; dq: 3 matmuls/tile (s recompute shared notionally)
+    flops = 14.0 * B * Hq * Sq * Skv * D * vis
+    tiles = B * Hq * nq * nk * vis
+    bytes_ = tiles * (2 * bq * D + 2 * bk * D) * ib * 2 +         B * Hq * Sq * D * ib * 3
+    return KernelWorkload(
+        flops=flops, hbm_bytes=bytes_,
+        grid_steps=int(B * Hkv * nk * (Hq // Hkv) * nq + B * Hq * nq * nk),
+        vmem_bytes=_flash_bwd_vmem(cfg, ctx),
+        matmuls=[MatmulShape(bq, D, bk), MatmulShape(bk, bq, D)],
+        vector_flops=8.0 * B * Hq * Sq * Skv * vis,
+        dtype=ctx.dtype,
+        parallel_grid=B * Hkv * nk,
+    )
+
+
+FLASH_ATTENTION_BWD = TunableKernel(
+    name="flash_attention_bwd",
+    space=flash_attention_bwd_space(),
+    version=1,
+    workload_fn=_flash_bwd_workload,
+    heuristic=lambda ctx: {"block_q": 128, "block_kv": 128},
+)
+
+
+def attention_bwd(q, k, v, o, lse, do, *, causal=True, window=None,
+                  config: Optional[Config] = None,
+                  tuner: Optional[Autotuner] = None, interpret: bool = True):
+    """Autotuned flash-attention gradients (dq, dk, dv). Layout (B,H,S,D)."""
+    from repro.kernels.flash_attention_bwd import flash_attention_bwd
+    if config is None:
+        tuner = tuner or default_tuner()
+        ctx = _ctx(tuner, {"q": q.shape, "k": k.shape}, str(q.dtype),
+                   causal=causal, window=window or 0)
+        config = tuner.best_config(FLASH_ATTENTION_BWD, ctx)
+    return flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                               window=window, interpret=interpret, **config)
+
+
+# ===========================================================================
+# Decode attention (single token vs KV cache)
+# ===========================================================================
+
+def _decode_vmem(cfg: Config, ctx: TuningContext) -> int:
+    B, Hq, D = ctx.shape("q")
+    Hkv = ctx.shape("k")[1]
+    group = max(1, Hq // Hkv)
+    ib = dtype_bytes(ctx.dtype)
+    bk = cfg["block_kv"]
+    buf = 2 * (2 * bk * D * ib + group * D * ib)
+    scratch = group * D * 4 + 2 * group * LANES * 4
+    out = 2 * (group * D * 4 + group * LANES * 4)
+    return buf + scratch + out
+
+
+def decode_attention_space() -> ConfigSpace:
+    sp = ConfigSpace(
+        "decode_attention",
+        [
+            Param("block_kv", (128, 256, 512, 1024, 2048)),
+            Param("k_splits", (1, 2, 4, 8, 16, 32)),
+        ],
+        version=2,
+    )
+    sp.constrain("vmem", vmem_fits(_decode_vmem))
+    sp.constrain(
+        "splits<=blocks",
+        lambda c, x: c["k_splits"] <= max(1, _cdiv(x.shape("k")[2],
+                                                   c["block_kv"])))
+    return sp
+
+
+def _decode_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
+    B, Hq, D = ctx.shape("q")
+    _, Hkv, T, _ = ctx.shape("k")
+    group = max(1, Hq // Hkv)
+    ib = dtype_bytes(ctx.dtype)
+    bk = min(cfg["block_kv"], _rup(T, 128))
+    ks = cfg["k_splits"]
+    t_pad = _rup(T, bk * ks)
+    blocks = t_pad // bk
+    flops = 4.0 * B * Hq * T * D
+    bytes_kv = 2.0 * B * Hkv * t_pad * D * ib
+    bytes_q = B * Hkv * ks * group * D * ib
+    bytes_part = 2.0 * B * Hkv * ks * group * (D + LANES) * 4  # write+combine
+    return KernelWorkload(
+        flops=flops,
+        hbm_bytes=bytes_kv + bytes_q + bytes_part,
+        grid_steps=B * Hkv * blocks,
+        vmem_bytes=_decode_vmem(cfg, ctx),
+        matmuls=[MatmulShape(group, D, bk), MatmulShape(group, bk, D)],
+        vector_flops=6.0 * B * Hq * T,
+        dtype=ctx.dtype,
+        parallel_grid=B * Hkv * ks,
+    )
+
+
+def _decode_heuristic(ctx: TuningContext) -> Config:
+    return {"block_kv": 512, "k_splits": 1}
+
+
+def _decode_runner(cfg: Config, ctx: TuningContext):
+    q_s, k_s = ctx.shape("q"), ctx.shape("k")
+    dtype = jnp.dtype(ctx.dtype)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(keys[0], q_s, dtype)
+    k = _rand(keys[1], k_s, dtype)
+    v = _rand(keys[2], k_s, dtype)
+    from repro.kernels.decode_attention import decode_attention
+    fn = jax.jit(functools.partial(decode_attention, **cfg))
+    return lambda: fn(q, k, v)
+
+
+DECODE_ATTENTION = TunableKernel(
+    name="decode_attention",
+    space=decode_attention_space(),
+    version=2,
+    workload_fn=_decode_workload,
+    make_runner=_decode_runner,
+    heuristic=_decode_heuristic,
+)
+
+
+def decode(q, k, v, *, kv_len=None, config: Optional[Config] = None,
+           tuner: Optional[Autotuner] = None, interpret: bool = True):
+    """Autotuned decode attention. q (B,Hq,D); k,v (B,Hkv,T,D)."""
+    from repro.kernels.decode_attention import decode_attention
+    if config is None:
+        tuner = tuner or default_tuner()
+        ctx = _ctx(tuner, {"q": q.shape, "k": k.shape}, str(q.dtype))
+        config = tuner.best_config(DECODE_ATTENTION, ctx)
+    return decode_attention(q, k, v, kv_len=kv_len, interpret=interpret,
+                            **config)
+
+
+# ===========================================================================
+# RMS norm
+# ===========================================================================
+
+def _rms_vmem(cfg: Config, ctx: TuningContext) -> int:
+    D = ctx.shape("x")[-1]
+    ib = dtype_bytes(ctx.dtype)
+    br = cfg["block_rows"]
+    return 2 * (br * D * ib * 2) + D * 4 + br * D * 4
+
+
+def rms_norm_space() -> ConfigSpace:
+    sp = ConfigSpace(
+        "rms_norm",
+        [Param("block_rows", (8, 16, 32, 64, 128, 256, 512, 1024))],
+        version=2,
+    )
+    sp.constrain("vmem", vmem_fits(_rms_vmem))
+    return sp
+
+
+def _rms_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
+    shape = ctx.shape("x")
+    D = shape[-1]
+    N = int(math.prod(shape[:-1]))
+    ib = dtype_bytes(ctx.dtype)
+    br = min(cfg["block_rows"], _rup(N, 8))
+    n_blocks = _cdiv(N, br)
+    return KernelWorkload(
+        flops=0.0,
+        hbm_bytes=(2.0 * N * D * ib) + D * 4,
+        grid_steps=n_blocks,
+        vmem_bytes=_rms_vmem(cfg, ctx),
+        vector_flops=4.0 * N * D,
+        dtype=ctx.dtype,
+        parallel_grid=n_blocks,
+    )
+
+
+RMS_NORM = TunableKernel(
+    name="rms_norm",
+    space=rms_norm_space(),
+    version=2,
+    workload_fn=_rms_workload,
+    make_runner=lambda cfg, ctx: _rms_runner(cfg, ctx),
+    heuristic=lambda ctx: {"block_rows": 128},
+)
+
+
+def _rms_runner(cfg: Config, ctx: TuningContext):
+    from repro.kernels.rms_norm import rms_norm
+    x_s = ctx.shape("x")
+    dtype = jnp.dtype(ctx.dtype)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = _rand(keys[0], x_s, dtype)
+    w = _rand(keys[1], (x_s[-1],), dtype)
+    fn = jax.jit(functools.partial(rms_norm, **cfg))
+    return lambda: fn(x, w)
+
+
+def rmsnorm(x, weight, *, eps: float = 1e-6, config: Optional[Config] = None,
+            tuner: Optional[Autotuner] = None, interpret: bool = True):
+    from repro.kernels.rms_norm import rms_norm
+    if config is None:
+        tuner = tuner or default_tuner()
+        ctx = _ctx(tuner, {"x": x.shape}, str(x.dtype))
+        config = tuner.best_config(RMS_NORM, ctx)
+    return rms_norm(x, weight, eps=eps, interpret=interpret, **config)
+
+
+# ===========================================================================
+# Blocked matmul
+# ===========================================================================
+
+def _mm_vmem(cfg: Config, ctx: TuningContext) -> int:
+    ib = dtype_bytes(ctx.dtype)
+    bm, bn, bk = cfg["block_m"], cfg["block_n"], cfg["block_k"]
+    return 2 * (bm * bk + bk * bn) * ib + bm * bn * (4 + 2 * ib)
+
+
+def matmul_space() -> ConfigSpace:
+    sp = ConfigSpace(
+        "matmul",
+        [
+            Param("block_m", (128, 256, 512, 1024)),
+            Param("block_n", (128, 256, 512, 1024)),
+            Param("block_k", (128, 256, 512, 1024, 2048)),
+        ],
+        version=2,
+    )
+    sp.constrain("vmem", vmem_fits(_mm_vmem))
+    return sp
+
+
+def _mm_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
+    M, K = ctx.shape("x")
+    _, N = ctx.shape("y")
+    ib = dtype_bytes(ctx.dtype)
+    bm = min(cfg["block_m"], _rup(M, 8))
+    bn = min(cfg["block_n"], _rup(N, 128))
+    bk = min(cfg["block_k"], _rup(K, 128))
+    nm, nn, nk = _cdiv(M, bm), _cdiv(N, bn), _cdiv(K, bk)
+    bytes_x = nm * nn * nk * bm * bk * ib
+    bytes_y = nm * nn * nk * bk * bn * ib
+    bytes_o = nm * nn * bm * bn * ib
+    return KernelWorkload(
+        flops=2.0 * M * K * N,
+        hbm_bytes=bytes_x + bytes_y + bytes_o,
+        grid_steps=nm * nn * nk,
+        vmem_bytes=_mm_vmem(cfg, ctx),
+        matmuls=[MatmulShape(bm, bk, bn)],
+        dtype=ctx.dtype,
+        parallel_grid=nm * nn,
+    )
+
+
+def _mm_runner(cfg: Config, ctx: TuningContext):
+    from repro.kernels.matmul import matmul as mm
+    dtype = jnp.dtype(ctx.dtype)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = _rand(keys[0], ctx.shape("x"), dtype)
+    y = _rand(keys[1], ctx.shape("y"), dtype)
+    fn = jax.jit(functools.partial(mm, **cfg))
+    return lambda: fn(x, y)
+
+
+MATMUL = TunableKernel(
+    name="matmul",
+    space=matmul_space(),
+    version=2,
+    workload_fn=_mm_workload,
+    make_runner=_mm_runner,
+    heuristic=lambda ctx: {"block_m": 256, "block_n": 256, "block_k": 256},
+)
+
+
+def matmul(x, y, *, config: Optional[Config] = None,
+           tuner: Optional[Autotuner] = None, interpret: bool = True):
+    from repro.kernels.matmul import matmul as mm
+    if config is None:
+        tuner = tuner or default_tuner()
+        ctx = _ctx(tuner, {"x": x.shape, "y": y.shape}, str(x.dtype))
+        config = tuner.best_config(MATMUL, ctx)
+    return mm(x, y, interpret=interpret, **config)
+
+
+ALL_KERNELS = {
+    "flash_attention": FLASH_ATTENTION,
+    "flash_attention_bwd": FLASH_ATTENTION_BWD,
+    "decode_attention": DECODE_ATTENTION,
+    "rms_norm": RMS_NORM,
+    "matmul": MATMUL,
+}
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _rup(a: int, b: int) -> int:
+    return -(-a // b) * b

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the "PyTorch native" equivalents from the paper's Table I: ~30 LoC
+per kernel, obviously correct, used as the ground truth for the per-kernel
+allclose sweeps in tests/ and as the numerics baseline in benchmarks.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: avoids NaNs on fully-masked rows
+
+
+def _attn_mask(seq_q: int, seq_kv: int, *, causal: bool,
+               window: Optional[int], q_offset: int,
+               kv_len: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Boolean mask (…, seq_q, seq_kv); True = attend."""
+    q_pos = jnp.arange(seq_q)[:, None] + q_offset
+    k_pos = jnp.arange(seq_kv)[None, :]
+    mask = jnp.ones((seq_q, seq_kv), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    if kv_len is not None:  # (B,) valid kv lengths (ragged batches)
+        mask = mask[None] & (k_pos[None] < kv_len[:, None, None])
+    return mask
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: Optional[int] = None,
+              scale: Optional[float] = None, q_offset: int = 0,
+              kv_len: Optional[jnp.ndarray] = None,
+              return_lse: bool = False):
+    """Multi-head attention with GQA.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    mask = _attn_mask(Sq, k.shape[2], causal=causal, window=window,
+                      q_offset=q_offset, kv_len=kv_len)
+    if mask.ndim == 3:   # per-batch mask
+        mask = mask[:, None]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p / l, vq.astype(jnp.float32))
+    o = o.astype(q.dtype)
+    if return_lse:
+        lse = (m + jnp.log(l))[..., 0]
+        return o, lse
+    return o
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                     kv_len: Optional[jnp.ndarray] = None,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token decode: q (B, Hq, D); kv cache (B, Hkv, T, D)."""
+    o = attention(q[:, :, None, :], k, v, causal=False, kv_len=kv_len,
+                  scale=scale)
+    return o[:, :, 0, :]
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    """RMS layer norm [Zhang & Sennrich 2019] over the last axis."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,5 @@
+"""Launch layer: mesh construction, step builders, dry-run driver.
+
+Note: repro.launch.dryrun sets XLA_FLAGS on import — do not import it
+from library code; it is an executable module only.
+"""

@@ -1,0 +1,423 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. jits the entry step (train_step / prefill_step / decode_step) with the
+     full in/out sharding trees from launch/steps.py,
+  3. ``.lower(**input_specs(...)).compile()`` — ShapeDtypeStructs only, no
+     allocation,
+  4. records ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()`` (FLOPs/bytes) and the parsed collective traffic,
+  5. computes the three §Roofline terms for the production chip and the
+     MODEL_FLOPS/HLO_FLOPS usefulness ratio,
+  6. writes one JSON per cell to results/dryrun/ (incremental; --force to
+     redo).
+
+Variants (--variant) select hillclimb StepConfigs; "baseline" is the
+paper-faithful configuration recorded in EXPERIMENTS.md §Dry-run.
+
+NOTE: the first two lines of this file set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, per the brief — do not move them.
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, input_specs, shape_supported
+from repro.core.costmodel import roofline_terms
+from repro.core.hardware import get_chip, PRODUCTION_CHIP
+from repro.launch import steps as steps_lib
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.lm import ForwardOpts
+from repro.models.param import param_count, shape_tree
+from repro.optim import adamw
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), os.pardir, os.pardir,
+                           os.pardir, "results", "dryrun")
+
+BIG_ARCHS = {"internvl2-76b", "jamba-1.5-large-398b"}
+FSDP_ARCHS = {"internvl2-76b", "jamba-1.5-large-398b", "stablelm-12b",
+              "deepseek-v2-lite-16b"}
+
+
+def default_step_config(cfg: ModelConfig, entry: str,
+                        variant: str = "baseline") -> steps_lib.StepConfig:
+    """Per-arch baseline distribution config (+ named hillclimb variants)."""
+    big = cfg.name in BIG_ARCHS
+    if entry == "train":
+        base = steps_lib.StepConfig(
+            policy="train_fsdp_tp" if cfg.name in FSDP_ARCHS else "train_tp",
+            opt_policy="train_fsdp_tp",
+            opts=ForwardOpts(attn_impl="chunked", attn_chunk=1024,
+                             remat="dots"),
+            micro_batches=8 if big else 4,
+            adamw=adamw.AdamWConfig(
+                state_dtype="bfloat16" if big else "float32"),
+        )
+    else:
+        base = steps_lib.StepConfig(
+            policy="serve_2d" if big else "serve_tp",
+            opts=ForwardOpts(attn_impl="chunked", attn_chunk=1024,
+                             remat="none"),
+        )
+    return apply_variant(base, cfg, entry, variant)
+
+
+def apply_variant(base: steps_lib.StepConfig, cfg: ModelConfig, entry: str,
+                  variant: str) -> steps_lib.StepConfig:
+    """Named §Perf hillclimb variants (EXPERIMENTS.md §Perf logs the diffs)."""
+    if variant == "baseline":
+        return base
+    if variant == "triangular":      # causal-waste removal in train attention
+        return dataclasses.replace(
+            base, opts=dataclasses.replace(base.opts, attn_impl="triangular",
+                                           attn_chunk=1024))
+    if variant == "remat_full":
+        return dataclasses.replace(
+            base, opts=dataclasses.replace(base.opts, remat="full"))
+    if variant == "remat_none":
+        return dataclasses.replace(
+            base, opts=dataclasses.replace(base.opts, remat="none"))
+    if variant == "micro2":
+        return dataclasses.replace(base, micro_batches=2)
+    if variant == "micro4":
+        return dataclasses.replace(base, micro_batches=4)
+    if variant == "micro16":
+        return dataclasses.replace(base, micro_batches=16)
+    if variant == "fsdp":
+        return dataclasses.replace(base, policy="train_fsdp_tp")
+    if variant == "tp_only":
+        return dataclasses.replace(base, policy="train_tp")
+    if variant == "serve_2d":
+        return dataclasses.replace(base, policy="serve_2d")
+    if variant == "serve_tp":
+        return dataclasses.replace(base, policy="serve_tp")
+    if variant == "seqpar":
+        return dataclasses.replace(base, policy="train_tp_sp")
+    if variant == "chunk4k":
+        return dataclasses.replace(
+            base, opts=dataclasses.replace(base.opts, attn_chunk=4096))
+    if variant == "grad_compress":
+        return dataclasses.replace(base, grad_compression=True)
+    if variant == "opt_bf16":
+        return dataclasses.replace(
+            base, adamw=dataclasses.replace(base.adamw,
+                                            state_dtype="bfloat16"))
+    if variant == "kvseq":
+        return dataclasses.replace(base, kv_layout="auto_seq")
+    if variant == "accum_bf16":
+        return dataclasses.replace(base, accum_dtype="bfloat16")
+    if variant == "moe_shmap":
+        return dataclasses.replace(
+            base, opts=dataclasses.replace(base.opts, moe_impl="shmap"))
+    if variant == "jamba_fit":   # combined train-fit recipe for 398B
+        return dataclasses.replace(
+            base, accum_dtype="bfloat16", micro_batches=16,
+            opts=dataclasses.replace(base.opts, remat="full",
+                                     moe_impl="shmap"))
+    if variant == "jamba_fit8":  # fewer microbatches: halve FSDP regathers
+        return dataclasses.replace(
+            base, accum_dtype="bfloat16", micro_batches=8,
+            opts=dataclasses.replace(base.opts, remat="full",
+                                     moe_impl="shmap"))
+    if variant == "serve_ep2d":
+        return dataclasses.replace(base, policy="serve_ep2d")
+    if variant == "tuned":       # all generally-applicable wins
+        new = dataclasses.replace(
+            base, kv_layout="auto_seq",
+            opts=dataclasses.replace(
+                base.opts,
+                # shmap EP pays off where dispatch is big (training);
+                # decode-step MoE buffers are tiny and the fully-manual
+                # region trips an XLA CPU bug at B=1 — keep index there.
+                moe_impl="shmap" if entry == "train" else "index",
+                remat="full" if entry == "train" else base.opts.remat))
+        if cfg.name in BIG_ARCHS and entry == "train":
+            new = dataclasses.replace(new, accum_dtype="bfloat16",
+                                      micro_batches=16)
+        if cfg.name == "deepseek-v2-lite-16b" and entry == "train":
+            # Bisect (EXPERIMENTS.md §Perf): remat=full alone costs dsv2
+            # +52 GiB (recompute re-triggers MLA/MoE dispatch traffic);
+            # shmap + remat=dots is the winning combination here.
+            new = dataclasses.replace(
+                new, policy=base.policy,
+                opts=dataclasses.replace(new.opts, remat="dots"))
+        if entry != "train" and cfg.name in BIG_ARCHS:
+            # resident 2-D expert sharding beats per-step weight gathers;
+            # dense 76B fits TP-only (8.8 GiB params/chip)
+            new = dataclasses.replace(
+                new, policy="serve_ep2d" if cfg.moe is not None
+                else "serve_tp")
+        return new
+    raise KeyError(f"unknown variant {variant!r}")
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (useful-work estimate per the brief)
+# ---------------------------------------------------------------------------
+
+def active_param_count(cfg: ModelConfig) -> int:
+    total = param_count(lm.lm_specs(cfg))
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    n_moe_layers = sum(1 for k in cfg.layer_kinds() if k.endswith("_moe"))
+    per_expert = 3 * cfg.d_model * m.d_ff_expert if cfg.act == "swiglu" \
+        else 2 * cfg.d_model * m.d_ff_expert
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return total - inactive
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> Dict[str, float]:
+    s = SHAPES[shape_name]
+    n_active = active_param_count(cfg)
+    n_total = param_count(lm.lm_specs(cfg))
+    if s.entry == "train":
+        tokens = s.seq_len * s.global_batch
+        mf = 6.0 * n_active * tokens
+    elif s.entry == "prefill":
+        tokens = s.seq_len * s.global_batch
+        mf = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = s.global_batch
+        mf = 2.0 * n_active * tokens
+    # Attention context flops (not in 6ND): causal ≈ S²/2 per layer.
+    n_attn = sum(1 for k in cfg.layer_kinds() if k.startswith(("attn", "dec")))
+    hd = cfg.attn_qk_dim + cfg.attn_v_dim
+    if s.entry in ("train", "prefill"):
+        ctx = min(cfg.window or s.seq_len, s.seq_len)
+        af = 2.0 * s.global_batch * cfg.n_heads * hd * n_attn * \
+            s.seq_len * ctx * 0.5
+        if s.entry == "train":
+            af *= 3.0   # fwd + bwd(2×)
+    else:
+        ctx = min(cfg.window or s.seq_len, s.seq_len)
+        af = 2.0 * s.global_batch * cfg.n_heads * hd * n_attn * ctx
+    return {"n_params": n_total, "n_active": n_active,
+            "tokens": tokens, "model_flops": mf + af}
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def _jit_cell(cfg: ModelConfig, shape_name: str, mesh,
+              scfg: steps_lib.StepConfig):
+    s = SHAPES[shape_name]
+    policy = steps_lib.POLICIES[scfg.policy]
+    params_sh = steps_lib.param_tree_shardings(cfg, mesh, scfg.policy)
+    params_shapes = shape_tree(lm.lm_specs(cfg))
+    specs = input_specs(cfg, shape_name)
+
+    if s.entry == "train":
+        opt_shapes = steps_lib.opt_state_shapes(cfg, scfg, params_shapes)
+        opt_sh = steps_lib.opt_state_shardings(cfg, scfg, mesh)
+        batch_sh = steps_lib.batch_shardings(specs["batch"], mesh, policy)
+        fn = jax.jit(steps_lib.make_train_step(cfg, scfg, mesh),
+                     in_shardings=(params_sh, opt_sh, batch_sh),
+                     out_shardings=(params_sh, opt_sh, None),
+                     donate_argnums=(0, 1))
+        return fn.lower(params_shapes, opt_shapes, specs["batch"])
+
+    if s.entry == "prefill":
+        # kwargs + in_shardings don't mix in pjit: attach shardings to the
+        # ShapeDtypeStructs instead.
+        toks_sh = steps_lib.batch_shardings(
+            {k: v for k, v in specs.items()}, mesh, policy)
+        specs_sharded = jax.tree.map(
+            lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                                 sharding=sh),
+            specs, toks_sh)
+        params_sharded = jax.tree.map(
+            lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                                 sharding=sh),
+            params_shapes, params_sh)
+        cache_like = lm.cache_specs(cfg, s.global_batch, s.seq_len)
+        cache_sh = steps_lib.cache_shardings(cfg, cache_like, mesh, policy,
+                                             kv_layout=scfg.kv_layout)
+        fn = jax.jit(
+            steps_lib.make_prefill_step(cfg, scfg, mesh, max_len=s.seq_len),
+            out_shardings=(None, cache_sh))
+        return fn.lower(params_sharded, **specs_sharded)
+
+    # decode
+    cache_sh = steps_lib.cache_shardings(cfg, specs["cache"], mesh, policy,
+                                         kv_layout=scfg.kv_layout)
+    token_sh = steps_lib.batch_shardings(
+        {"token": specs["token"]}, mesh, policy)["token"]
+    fn = jax.jit(steps_lib.make_decode_step(cfg, scfg, mesh),
+                 in_shardings=(params_sh, token_sh, cache_sh,
+                               steps_lib.scalar_sharding(mesh)),
+                 out_shardings=(None, cache_sh),
+                 donate_argnums=(2,))
+    return fn.lower(params_shapes, specs["token"], specs["cache"],
+                    specs["pos"])
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "baseline", chip_name: str = PRODUCTION_CHIP,
+             hlo_limit: int = 0) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    s = SHAPES[shape_name]
+    ok, reason = shape_supported(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "variant": variant, "status": "skipped", "reason": reason}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.shape.values())
+    scfg = default_step_config(cfg, s.entry, variant)
+    with mesh:
+        lowered = _jit_cell(cfg, shape_name, mesh, scfg)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # While-aware HLO analysis: XLA's cost_analysis counts while bodies
+    # once; scan-over-layers needs trip-count multipliers (hlo_analysis.py).
+    stats = analyze_hlo(hlo, n_chips)
+    coll = stats
+    chip = get_chip(chip_name)
+    flops_dev = stats.flops
+    bytes_dev = stats.bytes
+    terms = roofline_terms(
+        hlo_flops=flops_dev, hlo_bytes=bytes_dev,
+        collective_bytes=coll.wire_bytes, n_chips=n_chips, chip=chip)
+    mf = model_flops(cfg, shape_name)
+    hlo_global = flops_dev * n_chips
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant, "status": "ok",
+        "entry": s.entry,
+        "n_chips": n_chips,
+        "step_config": {
+            "policy": scfg.policy, "micro_batches": scfg.micro_batches,
+            "remat": scfg.opts.remat, "attn_impl": scfg.opts.attn_impl,
+            "attn_chunk": scfg.opts.attn_chunk,
+            "opt_dtype": scfg.adamw.state_dtype,
+        },
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device": mem.argument_size_in_bytes +
+                               mem.output_size_in_bytes +
+                               mem.temp_size_in_bytes -
+                               mem.alias_size_in_bytes,
+            "hbm_per_device": chip.hbm_bytes,
+        },
+        "cost": {
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "xla_cost_analysis_flops": float(ca.get("flops", 0.0)),
+            "xla_cost_analysis_bytes": float(ca.get("bytes accessed", 0.0)),
+            "collective_wire_bytes_per_device": coll.wire_bytes,
+            "collective_ops": coll.op_bytes,
+            "collective_counts": coll.op_counts,
+        },
+        "roofline": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "step_s_lower_bound": terms.step_s,
+        },
+        "model_flops": mf,
+        "useful_ratio": mf["model_flops"] / hlo_global if hlo_global else 0.0,
+        "timing": {"lower_s": t_lower, "compile_s": t_compile},
+        "chip": chip_name,
+    }
+    if hlo_limit:
+        result["hlo_excerpt"] = hlo[:hlo_limit]
+    return result
+
+
+def cell_path(out_dir, arch, shape_name, multi_pod, variant):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh}__{variant}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS, action="append")
+    ap.add_argument("--shape", choices=list(SHAPES), action="append")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    archs = args.arch or (ARCHS if args.all else ARCHS[:1])
+    shapes = args.shape or list(SHAPES)
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                path = cell_path(args.out, arch, shape_name, multi_pod,
+                                 args.variant)
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached] {os.path.basename(path)}")
+                    continue
+                label = (f"{arch} × {shape_name} × "
+                         f"{'2x16x16' if multi_pod else '16x16'} "
+                         f"[{args.variant}]")
+                print(f"[dryrun] {label} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape_name, multi_pod, args.variant)
+                except Exception as e:   # record failures — they are bugs
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "variant": args.variant, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    n_fail += 1
+                    print(f"  ERROR {type(e).__name__}: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                if res["status"] == "ok":
+                    n_ok += 1
+                    r = res["roofline"]
+                    print(f"  ok: compute={r['compute_s']*1e3:.2f}ms "
+                          f"memory={r['memory_s']*1e3:.2f}ms "
+                          f"collective={r['collective_s']*1e3:.2f}ms "
+                          f"dominant={r['dominant']} "
+                          f"peak_mem={res['memory']['peak_per_device']/2**30:.2f}GiB "
+                          f"(compile {res['timing']['compile_s']:.0f}s)",
+                          flush=True)
+                elif res["status"] == "skipped":
+                    n_skip += 1
+                    print(f"  skipped: {res['reason']}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,239 @@
+"""Step builders: the jit'd train / prefill / decode entry points with full
+in/out sharding trees for a given (arch × mesh × policy).
+
+This module is where the distribution-level tunables live (the beyond-paper
+autotuning dimension, DESIGN.md §7):
+
+    policy          logical→mesh sharding rules (TP / FSDP+TP / 2-D serve)
+    micro_batches   gradient-accumulation factor
+    opts.remat      activation checkpoint policy
+    opts.attn_impl  chunked vs triangular attention lowering
+    zero1           optimizer-moment sharding over the batch domain
+    grad_compression  int8 error-feedback numerics
+
+All are plain data (StepConfig) so the §Perf hillclimb can sweep them with
+the same ConfigSpace machinery as kernel tuning.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distribution.sharding import (
+    POLICIES, ShardingPolicy, params_shardings, spec_for, use_sharding,
+)
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.lm import ForwardOpts
+from repro.models.param import axes_tree, shape_tree
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    policy: str = "train_tp"            # POLICIES key (params + activations)
+    opt_policy: str = "train_fsdp_tp"   # ZeRO-1: moments sharded over batch
+    opts: ForwardOpts = ForwardOpts()
+    micro_batches: int = 1
+    adamw: adamw.AdamWConfig = adamw.AdamWConfig()
+    grad_compression: bool = False
+    # Gradient-accumulation buffer dtype; bf16 halves a full param-sized
+    # buffer for ≥100B models (error feedback not needed: accumulation of
+    # ≤32 microbatches keeps bf16 relative error ~1e-2 of the update).
+    accum_dtype: str = "float32"
+    # KV-cache layout: "heads" (baseline) or "auto_seq" — shard the cache
+    # sequence dim over `model` when kv_heads doesn't divide it (§Perf
+    # hillclimb: the flash-decode k-split insight applied across chips).
+    kv_layout: str = "heads"
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+def param_tree_shardings(cfg: ModelConfig, mesh: Mesh, policy_name: str):
+    specs = lm.lm_specs(cfg)
+    return params_shardings(axes_tree(specs), shape_tree(specs),
+                            POLICIES[policy_name], mesh)
+
+
+_CACHE_AXES = {
+    "k": (None, "batch", None, "kv_heads", None),
+    "v": (None, "batch", None, "kv_heads", None),
+    "ckv": (None, "batch", None, None),
+    "krope": (None, "batch", None, None),
+    "conv": (None, "batch", None, None),
+    "state": (None, "batch", "ssm_heads", None, None),
+    "ck": (None, "batch", None, "kv_heads", None),
+    "cv": (None, "batch", None, "kv_heads", None),
+}
+# kv_layout="auto_seq": shard the cache sequence/slots dim over `model`
+# whenever head sharding can't use it (kv_heads ∤ model, or MLA's head-free
+# compressed cache). Decode softmax stats then combine via tiny all-reduces.
+_CACHE_AXES_SEQ = {
+    "k": (None, "batch", "kv_seq", "kv_heads", None),
+    "v": (None, "batch", "kv_seq", "kv_heads", None),
+    "ckv": (None, "batch", "kv_seq", None),
+    "krope": (None, "batch", "kv_seq", None),
+    "ck": (None, "batch", "kv_seq", "kv_heads", None),
+    "cv": (None, "batch", "kv_seq", "kv_heads", None),
+}
+
+
+def cache_shardings(cfg: ModelConfig, cache_tree, mesh: Mesh,
+                    policy: ShardingPolicy, kv_layout: str = "heads"):
+    model_size = math.prod(
+        mesh.shape[a] for a in policy.mesh_axes("kv_heads")
+        if a in mesh.shape) or 1
+    heads_ok = cfg.n_kv_heads % model_size == 0 and cfg.mla is None
+
+    def leaf_sharding(path, leaf):
+        key = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                key = str(p.key)
+                break
+        table = _CACHE_AXES
+        if kv_layout == "auto_seq" and not heads_ok and key in _CACHE_AXES_SEQ:
+            table = _CACHE_AXES_SEQ
+        axes = table.get(key, (None,) * leaf.ndim)
+        axes = axes[-leaf.ndim:] if len(axes) >= leaf.ndim else \
+            (None,) * (leaf.ndim - len(axes)) + tuple(axes)
+        return NamedSharding(mesh, spec_for(leaf.shape, axes, policy, mesh))
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        tdef, [leaf_sharding(p, l) for p, l in flat])
+
+
+def batch_shardings(batch_tree, mesh: Mesh, policy: ShardingPolicy):
+    def one(leaf):
+        axes = ("batch",) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, spec_for(leaf.shape, axes, policy, mesh))
+    return jax.tree.map(one, batch_tree)
+
+
+def scalar_sharding(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, scfg: StepConfig, mesh: Optional[Mesh]):
+    """Returns step(params, opt_state, batch) → (params, opt_state, metrics).
+
+    Gradient accumulation over ``micro_batches`` via lax.scan; optional
+    int8 error-feedback compression of the accumulated gradients.
+    """
+    policy = POLICIES[scfg.policy]
+    ocfg = scfg.adamw
+
+    def loss(params, batch):
+        return lm.loss_fn(params, cfg, batch, scfg.opts)
+
+    def grads_of(params, batch):
+        (l, metrics), g = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        metrics = dict(metrics, loss=l)
+        return g, metrics
+
+    def step(params, opt_state, batch):
+        with use_sharding(mesh, policy):
+            nm = scfg.micro_batches
+            accum_dt = jnp.dtype(scfg.accum_dtype)
+            if nm > 1:
+                micro = jax.tree.map(
+                    lambda x: x.reshape((nm, x.shape[0] // nm) + x.shape[1:]),
+                    batch)
+
+                def body(acc, mb):
+                    g, metrics = grads_of(params, mb)
+                    acc = jax.tree.map(
+                        lambda a, gg: (a + gg.astype(accum_dt)).astype(
+                            accum_dt), acc, g)
+                    return acc, metrics
+
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, accum_dt), params)
+                gsum, ms = jax.lax.scan(body, zero, micro)
+                grads = jax.tree.map(lambda g: g / nm, gsum)
+                metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+            else:
+                grads, metrics = grads_of(params, batch)
+
+            if scfg.grad_compression:
+                from repro.runtime.compression import ef_compress
+                grads, new_ef = ef_compress(grads, opt_state["ef"])
+            new_params, new_adamw, om = adamw.apply_updates(
+                ocfg, params, grads, opt_state["adamw"])
+            metrics.update(om)
+            new_state = {"adamw": new_adamw}
+            if scfg.grad_compression:
+                new_state["ef"] = new_ef
+            return new_params, new_state, metrics
+
+    return step
+
+
+def init_opt_state(cfg: ModelConfig, scfg: StepConfig, params):
+    state = {"adamw": adamw.init_state(scfg.adamw, params)}
+    if scfg.grad_compression:
+        from repro.runtime.compression import init_ef_state
+        state["ef"] = init_ef_state(params)
+    return state
+
+
+def opt_state_shapes(cfg: ModelConfig, scfg: StepConfig, param_shapes):
+    state = {"adamw": adamw.state_shape(scfg.adamw, param_shapes)}
+    if scfg.grad_compression:
+        state["ef"] = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), param_shapes)
+    return state
+
+
+def opt_state_shardings(cfg: ModelConfig, scfg: StepConfig, mesh: Mesh):
+    """ZeRO-1: moments follow opt_policy (batch-domain sharded)."""
+    specs = lm.lm_specs(cfg)
+    psh = params_shardings(axes_tree(specs), shape_tree(specs),
+                           POLICIES[scfg.opt_policy], mesh)
+    state = {"adamw": adamw.AdamWState(
+        step=scalar_sharding(mesh), m=psh, v=psh)}
+    if scfg.grad_compression:
+        state["ef"] = psh
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, scfg: StepConfig,
+                      mesh: Optional[Mesh], max_len: int):
+    policy = POLICIES[scfg.policy]
+
+    def step(params, tokens, **frontends):
+        with use_sharding(mesh, policy):
+            return lm.prefill(params, cfg, tokens, max_len=max_len,
+                              opts=scfg.opts, **frontends)
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, scfg: StepConfig,
+                     mesh: Optional[Mesh]):
+    policy = POLICIES[scfg.policy]
+
+    def step(params, token, cache, pos):
+        with use_sharding(mesh, policy):
+            return lm.decode_step(params, cfg, token, cache, pos,
+                                  opts=scfg.opts)
+
+    return step

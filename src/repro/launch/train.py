@@ -1,0 +1,76 @@
+"""Training launcher: any registry arch on the local mesh.
+
+Full-scale cluster runs use the same StepConfig/policy machinery as the
+dry-run (launch/dryrun.py) — this CLI drives real steps at whatever size
+the local devices allow (smoke configs by default on CPU).
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b \
+      --steps 50 --batch 8 --seq 128 [--full-config] [--resume]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_local_mesh
+from repro.models import lm
+from repro.models.param import init_params, param_count
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="phi4-mini-3.8b")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (paper-scale) config instead of smoke")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--data", choices=["synthetic", "file"],
+                    default="synthetic")
+    ap.add_argument("--data-path", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=not args.full_config)
+    mesh = make_local_mesh()
+    scfg = steps_lib.StepConfig(
+        micro_batches=args.micro_batches,
+        grad_compression=args.grad_compression,
+        opts=lm.ForwardOpts(attn_impl="chunked", attn_chunk=128,
+                            remat=args.remat),
+        adamw=adamw.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                total_steps=args.steps))
+    print(f"arch={cfg.name} params="
+          f"{param_count(lm.lm_specs(cfg))/1e6:.1f}M mesh={dict(mesh.shape)}")
+
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    opt_state = steps_lib.init_opt_state(cfg, scfg, params)
+    step = jax.jit(steps_lib.make_train_step(cfg, scfg, mesh))
+
+    stream = TokenStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, source=args.data, path=args.data_path))
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=max(args.steps // 4, 1), log_every=10),
+        step, params, opt_state, iter(stream),
+        data_state_fn=stream.state, data_restore_fn=stream.restore)
+    out = trainer.run()
+    print(f"finished at step {out['step']}; "
+          f"{len(out['stragglers'])} straggler steps flagged")
+
+
+if __name__ == "__main__":
+    main()

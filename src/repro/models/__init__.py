@@ -1,0 +1,8 @@
+from repro.models.config import MLAConfig, MoEConfig, ModelConfig, SSMConfig  # noqa: F401
+from repro.models.lm import (  # noqa: F401
+    ForwardOpts, cache_specs, decode_step, encode, forward, init, lm_specs,
+    loss_fn, prefill,
+)
+from repro.models.param import (  # noqa: F401
+    ParamSpec, axes_tree, init_params, param_bytes, param_count, shape_tree,
+)

@@ -1,0 +1,467 @@
+"""Attention module: GQA / MHA / MLA with selectable implementations.
+
+Implementations (``impl=``):
+  * "full"        — O(S·T) einsum + mask. Reference; smoke tests.
+  * "chunked"     — lax.scan over KV chunks with online softmax and a
+                    remat'd body: O(S) memory, XLA-native. This is the
+                    structural path used by the 512-device dry-run and the
+                    differentiable default for training (DESIGN.md §5).
+  * "triangular"  — Python-unrolled query chunks attending to static causal
+                    KV prefixes: removes the ~2× masked-tile waste of
+                    "chunked" at the cost of a larger HLO. A §Perf
+                    hillclimb lever.
+  * "pallas"      — the autotuned flash-attention kernel (TPU production
+                    path; interpret-mode here). Gradients via custom_vjp
+                    with a chunked-recompute backward.
+
+GQA is computed in grouped layout (B, Hkv, G, S, D) so KV is never
+materialized per query head. MLA (DeepSeek) keeps the compressed KV cache
+(c_kv ⊕ k_rope) and uses the absorbed formulation for decode.
+
+Sliding-window (SWA) decode uses a ring-buffer KV cache of size ``window``
+— the reason h2o-danube runs the long_500k cell with a 4k-slot cache.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distribution.sharding import shard, shard_heads_or_seq
+from repro.models.config import ModelConfig
+from repro.models.layers import rope
+from repro.models.param import ParamSpec
+
+Cache = Dict[str, jnp.ndarray]
+
+
+# ===========================================================================
+# Core attention math (layout: q (B,S,Hq,Dq); k (B,T,Hkv,Dq); v (B,T,Hkv,Dv))
+# ===========================================================================
+
+def _group(q, n_kv):
+    B, S, Hq, D = q.shape
+    return q.reshape(B, S, n_kv, Hq // n_kv, D)
+
+
+def _mask(sq, skv, *, causal, window, q_off, kv_off, kv_valid):
+    q_pos = q_off + jnp.arange(sq)[:, None]
+    k_pos = kv_off + jnp.arange(skv)[None, :]
+    m = jnp.ones((sq, skv), bool)
+    if causal:
+        m &= q_pos >= k_pos
+    if window is not None:
+        m &= (q_pos - k_pos) < window
+    if kv_valid is not None:
+        m &= k_pos < kv_valid
+    return m
+
+
+def full_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                   kv_offset=0, kv_valid=None, scale=None):
+    B, S, Hq, Dq = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    scale = scale or Dq ** -0.5
+    qg = _group(q, Hkv)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    m = _mask(S, T, causal=causal, window=window, q_off=q_offset,
+              kv_off=kv_offset, kv_valid=kv_valid)
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkv->bskgv", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def _bhsx(x):
+    """Constrain a (B, H, S, X) attention activation consistently with the
+    head-or-seq decision (keeps the online-softmax scan carry in ONE layout —
+    otherwise the SPMD partitioner re-shards it every chunk iteration)."""
+    from repro.distribution.sharding import shard_heads_or_seq
+    return shard_heads_or_seq(x, head_axis=1, seq_axis=2)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                      chunk_kv=512, scale=None):
+    B, S, Hq, Dq = q.shape
+    T, Hkv, Dv = k.shape[1], k.shape[2], v.shape[-1]
+    G = Hq // Hkv
+    scale = scale or Dq ** -0.5
+    ck = min(chunk_kv, T)
+    t_pad = -(-T // ck) * ck
+    if t_pad != T:
+        k = jnp.pad(k, ((0, 0), (0, t_pad - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad - T), (0, 0), (0, 0)))
+    nT = t_pad // ck
+    ks = jnp.moveaxis(k.reshape(B, nT, ck, Hkv, Dq), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nT, ck, Hkv, Dv), 1, 0)
+    qh = _bhsx(jnp.moveaxis(q, 2, 1))                       # (B,Hq,S,Dq)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        kj, vj, j = xs
+        if G > 1:   # broadcast the KV *chunk* to all query heads (cheap)
+            kj = jnp.repeat(kj, G, axis=2)
+            vj = jnp.repeat(vj, G, axis=2)
+        s = jnp.einsum("bhsd,bthd->bhst", qh, kj,
+                       preferred_element_type=jnp.float32) * scale
+        s = _bhsx(s)
+        msk = _mask(S, ck, causal=causal, window=window, q_off=q_offset,
+                    kv_off=j * ck, kv_valid=T)
+        s = jnp.where(msk, s, -1e30)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum(
+            "bhst,bthv->bhsv", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (_bhsx(m_new), _bhsx(l_new), _bhsx(acc)), None
+
+    init = (
+        _bhsx(jnp.full((B, Hq, S, 1), -1e30, jnp.float32)),
+        _bhsx(jnp.zeros((B, Hq, S, 1), jnp.float32)),
+        _bhsx(jnp.zeros((B, Hq, S, Dv), jnp.float32)),
+    )
+    (m_run, l_run, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (ks, vs, jnp.arange(nT)))
+    o = acc / jnp.maximum(l_run, 1e-30)
+    o = jnp.moveaxis(o, 1, 2)                                # (B,S,Hq,Dv)
+    return o.astype(q.dtype)
+
+
+def triangular_attention(q, k, v, *, window=None, chunk_q=512, scale=None):
+    """Causal self-attention with static per-q-chunk KV prefixes (no masked-
+    tile waste). Requires Sq == T and q_offset == 0."""
+    B, S, Hq, Dq = q.shape
+    if S != k.shape[1] or S % min(chunk_q, S) != 0:
+        return chunked_attention(q, k, v, causal=True, window=window,
+                                 scale=scale)
+    cq = min(chunk_q, S)
+    outs = []
+    for i in range(S // cq):
+        hi = (i + 1) * cq
+        lo = 0
+        if window is not None:
+            lo = max(0, (i * cq - window + 1) // cq * cq)
+        outs.append(full_attention(
+            q[:, i * cq:hi], k[:, lo:hi], v[:, lo:hi], causal=True,
+            window=window, q_offset=i * cq, kv_offset=lo, scale=scale))
+    return jnp.concatenate(outs, axis=1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _pallas_attention(q, k, v, causal, window, scale):
+    from repro.kernels import ops as kops
+    qt, kt, vt = (jnp.moveaxis(x, 2, 1) for x in (q, k, v))
+    o = kops.attention(qt, kt, vt, causal=causal, window=window)
+    return jnp.moveaxis(o, 1, 2)
+
+
+def _pallas_fwd(q, k, v, causal, window, scale):
+    from repro.kernels import ops as kops
+    qt, kt, vt = (jnp.moveaxis(x, 2, 1) for x in (q, k, v))
+    o, lse = kops.attention(qt, kt, vt, causal=causal, window=window,
+                            return_lse=True)
+    return jnp.moveaxis(o, 1, 2), (qt, kt, vt, o, lse)
+
+
+def _pallas_bwd(causal, window, scale, res, g):
+    """Pallas dq/dkv recompute kernels (flash_attention_bwd.py)."""
+    from repro.kernels import ops as kops
+    qt, kt, vt, o, lse = res
+    do = jnp.moveaxis(g, 2, 1)
+    dq, dk, dv = kops.attention_bwd(qt, kt, vt, o, lse, do, causal=causal,
+                                    window=window)
+    return tuple(jnp.moveaxis(x, 1, 2) for x in (dq, dk, dv))
+
+
+_pallas_attention.defvjp(_pallas_fwd, _pallas_bwd)
+
+
+def run_attention(q, k, v, *, impl="chunked", causal=True, window=None,
+                  q_offset=0, chunk=512, scale=None):
+    if impl == "full":
+        return full_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, scale=scale)
+    if impl == "triangular" and causal and q_offset == 0:
+        return triangular_attention(q, k, v, window=window, chunk_q=chunk,
+                                    scale=scale)
+    if impl == "pallas":
+        return _pallas_attention(q, k, v, causal, window, scale)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, chunk_kv=chunk, scale=scale)
+
+
+# ===========================================================================
+# Standard (GQA) attention layer
+# ===========================================================================
+
+def attn_specs(cfg: ModelConfig, cross: bool = False):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.mla is not None and not cross:
+        m = cfg.mla
+        return {
+            "wq": ParamSpec((d, hq * (m.qk_nope_dim + m.qk_rope_dim)),
+                            ("d_model", "heads"), dt),
+            "wdkv": ParamSpec((d, m.kv_lora_rank + m.qk_rope_dim),
+                              ("d_model", None), dt),
+            "kvnorm": ParamSpec((m.kv_lora_rank,), (None,), jnp.float32,
+                                "ones"),
+            "wuk": ParamSpec((hq, m.kv_lora_rank, m.qk_nope_dim),
+                             ("heads", None, None), dt),
+            "wuv": ParamSpec((hq, m.kv_lora_rank, m.v_head_dim),
+                             ("heads", None, None), dt),
+            "wo": ParamSpec((hq * m.v_head_dim, d), ("heads", "d_model"), dt),
+        }
+    specs = {
+        "wq": ParamSpec((d, hq * dh), ("d_model", "heads"), dt),
+        "wk": ParamSpec((d, hkv * dh), ("d_model", "kv_heads"), dt),
+        "wv": ParamSpec((d, hkv * dh), ("d_model", "kv_heads"), dt),
+        "wo": ParamSpec((hq * dh, d), ("heads", "d_model"), dt),
+    }
+    if cfg.norm == "layernorm":   # whisper-style biases
+        specs["bq"] = ParamSpec((hq * dh,), ("heads",), jnp.float32, "zeros")
+        specs["bv"] = ParamSpec((hkv * dh,), ("kv_heads",), jnp.float32,
+                                "zeros")
+        specs["bo"] = ParamSpec((d,), (None,), jnp.float32, "zeros")
+    return specs
+
+
+def _qkv(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = shard_heads_or_seq(q.reshape(B, S, hq, dh), head_axis=2, seq_axis=1,
+                           head_logical="heads")
+    k = shard(k.reshape(B, S, hkv, dh), "batch", None, "kv_heads", None)
+    v = shard(v.reshape(B, S, hkv, dh), "batch", None, "kv_heads", None)
+    if cfg.rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _proj_out(p, o, cfg: ModelConfig):
+    B, S = o.shape[:2]
+    out = o.reshape(B, S, -1) @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"].astype(out.dtype)
+    return shard(out, "batch", "seq", None)
+
+
+def attn_forward(p, x, cfg: ModelConfig, *, impl="chunked", chunk=512,
+                 causal=True, positions=None):
+    """Training / no-cache forward."""
+    if cfg.mla is not None:
+        return _mla_forward(p, x, cfg, impl=impl, chunk=chunk,
+                            positions=positions)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = _qkv(p, x, cfg, positions)
+    o = run_attention(q, k, v, impl=impl, causal=causal, window=cfg.window,
+                      chunk=chunk)
+    return _proj_out(p, o, cfg)
+
+
+# --- caches ------------------------------------------------------------------
+
+def attn_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStructs of this layer's decode cache."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), dt),
+            "krope": jax.ShapeDtypeStruct((batch, max_len, m.qk_rope_dim), dt),
+        }
+    slots = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (batch, slots, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dt),
+            "v": jax.ShapeDtypeStruct(shape, dt)}
+
+
+def attn_prefill(p, x, cfg: ModelConfig, *, max_len: int, impl="chunked",
+                 chunk=512):
+    """Forward over the prompt; returns (out, cache) with caches sized for
+    ``max_len`` total positions (ring-buffered to ``window`` slots for SWA)."""
+    if cfg.mla is not None:
+        return _mla_prefill(p, x, cfg, max_len=max_len, impl=impl, chunk=chunk)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _qkv(p, x, cfg, positions)
+    o = run_attention(q, k, v, impl=impl, causal=True, window=cfg.window,
+                      chunk=chunk)
+    slots = min(max_len, cfg.window) if cfg.window else max_len
+    ck = jnp.zeros((B, slots, cfg.n_kv_heads, cfg.head_dim), k.dtype)
+    cv = jnp.zeros_like(ck)
+    if cfg.window and S > slots:
+        idx = np.arange(S - slots, S)
+        ck = ck.at[:, idx % slots].set(k[:, idx])
+        cv = cv.at[:, idx % slots].set(v[:, idx])
+    else:
+        idx = np.arange(S) % slots
+        ck = ck.at[:, idx].set(k)
+        cv = cv.at[:, idx].set(v)
+    cache = {"k": shard(ck, "batch", None, "kv_heads", None),
+             "v": shard(cv, "batch", None, "kv_heads", None)}
+    return _proj_out(p, o, cfg), cache
+
+
+def attn_decode(p, x, cfg: ModelConfig, cache: Cache, pos, *, impl="full"):
+    """One-token decode. x (B, 1, d); pos scalar int32 (current index)."""
+    if cfg.mla is not None:
+        return _mla_decode(p, x, cfg, cache, pos)
+    B = x.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    slots = cache["k"].shape[1]
+    slot = pos % slots
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+
+    qg = _group(q, hkv).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, ck.astype(jnp.float32)) * dh ** -0.5
+    # Valid slots: s <= pos when the ring has not wrapped, else all.
+    slot_ids = jnp.arange(slots)
+    valid = jnp.logical_or(slot_ids <= pos, pos + 1 >= slots)
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkv->bskgv", prob, cv.astype(jnp.float32))
+    o = o.reshape(B, 1, hq, dh).astype(x.dtype)
+    return _proj_out(p, o, cfg), {"k": ck, "v": cv}
+
+
+# --- cross attention (whisper decoder) ----------------------------------------
+
+def cross_specs(cfg: ModelConfig):
+    return attn_specs(cfg, cross=True)
+
+
+def cross_kv(p, enc, cfg: ModelConfig):
+    B, T, _ = enc.shape
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    k = (enc @ p["wk"]).reshape(B, T, hkv, dh)
+    v = enc @ p["wv"]
+    if "bv" in p:
+        v = v + p["bv"].astype(v.dtype)
+    return {"ck": k, "cv": v.reshape(B, T, hkv, dh)}
+
+
+def cross_forward(p, x, cfg: ModelConfig, kv: Cache, *, impl="chunked",
+                  chunk=512):
+    B, S, _ = x.shape
+    hq, dh = cfg.n_heads, cfg.head_dim
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(B, S, hq, dh)
+    o = run_attention(q, kv["ck"], kv["cv"], impl=impl, causal=False,
+                      chunk=chunk)
+    return _proj_out(p, o, cfg)
+
+
+# ===========================================================================
+# MLA (DeepSeek multi-head latent attention)
+# ===========================================================================
+
+def _mla_qkv_rope_scale(cfg):
+    m = cfg.mla
+    return (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+
+
+def _mla_project_q(p, x, cfg, positions):
+    B, S, _ = x.shape
+    m = cfg.mla
+    hq = cfg.n_heads
+    q = (x @ p["wq"]).reshape(B, S, hq, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_compress(p, x, cfg, positions):
+    from repro.models.layers import apply_norm
+    m = cfg.mla
+    dkv = x @ p["wdkv"]
+    ckv, krope = dkv[..., :m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    xf = ckv.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    ckv = (xf * jax.lax.rsqrt(var + 1e-6) * p["kvnorm"]).astype(x.dtype)
+    krope = rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, krope
+
+
+def _mla_forward(p, x, cfg, *, impl="chunked", chunk=512, positions=None):
+    B, S, _ = x.shape
+    m = cfg.mla
+    hq = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(S)
+    q_nope, q_rope = _mla_project_q(p, x, cfg, positions)
+    ckv, krope = _mla_compress(p, x, cfg, positions)
+    # Decompress K/V per head (training form).
+    k_nope = jnp.einsum("btc,hcn->bthn", ckv, p["wuk"].astype(x.dtype))
+    v = jnp.einsum("btc,hcv->bthv", ckv, p["wuv"].astype(x.dtype))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                  (B, S, hq, m.qk_rope_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = run_attention(q, k, v, impl=impl, causal=True, chunk=chunk,
+                      scale=_mla_qkv_rope_scale(cfg))
+    return _proj_out(p, o, cfg)
+
+
+def _mla_prefill(p, x, cfg, *, max_len, impl="chunked", chunk=512):
+    B, S, _ = x.shape
+    out = _mla_forward(p, x, cfg, impl=impl, chunk=chunk)
+    positions = jnp.arange(S)
+    ckv, krope = _mla_compress(p, x, cfg, positions)
+    m = cfg.mla
+    cc = jnp.zeros((B, max_len, m.kv_lora_rank), x.dtype).at[:, :S].set(ckv)
+    cr = jnp.zeros((B, max_len, m.qk_rope_dim), x.dtype).at[:, :S].set(krope)
+    return out, {"ckv": shard(cc, "batch", None, None),
+                 "krope": shard(cr, "batch", None, None)}
+
+
+def _mla_decode(p, x, cfg, cache: Cache, pos):
+    """Absorbed-MLA decode over the compressed cache (the 93%-smaller-KV
+    trick that makes deepseek-v2 serving cheap)."""
+    B = x.shape[0]
+    m = cfg.mla
+    hq = cfg.n_heads
+    positions = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _mla_project_q(p, x, cfg, positions)
+    ckv_t, krope_t = _mla_compress(p, x, cfg, positions)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_t, pos, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope_t, pos,
+                                                axis=1)
+    # Absorb W_uk into the query: q̃ (B,1,H,C)
+    q_abs = jnp.einsum("bshn,hcn->bshc", q_nope, p["wuk"].astype(x.dtype))
+    s = jnp.einsum("bshc,btc->bhst", q_abs.astype(jnp.float32),
+                   ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                       krope.astype(jnp.float32))
+    s = s * _mla_qkv_rope_scale(cfg)
+    T = ckv.shape[1]
+    valid = jnp.arange(T) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhst,btc->bshc", prob, ckv.astype(jnp.float32))
+    o = jnp.einsum("bshc,hcv->bshv", ctx,
+                   p["wuv"].astype(jnp.float32)).astype(x.dtype)
+    return _proj_out(p, o, cfg), {"ckv": ckv, "krope": krope}

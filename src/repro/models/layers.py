@@ -1,0 +1,133 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings.
+
+All math runs in the input dtype with fp32 reductions; norm weights are
+fp32. ``norm_impl="pallas"`` routes RMS norm through the autotuned Pallas
+kernel (interpret-mode on CPU) — the production-TPU path; the default
+``"jnp"`` path lowers to the same fused HLO XLA would emit and is used for
+the 512-device structural dry-run (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+
+
+# --- norms ------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": ParamSpec((d,), (None,), jnp.float32, "ones"),
+                "b": ParamSpec((d,), (None,), jnp.float32, "zeros")}
+    return {"w": ParamSpec((d,), (None,), jnp.float32, "ones")}
+
+
+def apply_norm(p, x, cfg: ModelConfig, *, eps: float = 1e-6,
+               impl: str = "jnp"):
+    if cfg.norm == "layernorm":
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["w"] + p["b"]).astype(x.dtype)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.rmsnorm(x, p["w"].astype(x.dtype), eps=eps)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["w"]).astype(x.dtype)
+
+
+# --- rotary position embeddings ----------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """x (..., S, H, D) rotated by positions (S,) or (B, S)."""
+    D = x.shape[-1]
+    half = D // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq     # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # Insert head axis.
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- feed-forward --------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.act == "swiglu":
+        return {
+            "wi": ParamSpec((d, 2 * f), ("d_model", "ff"), dt),
+            "wo": ParamSpec((f, d), ("ff", "d_model"), dt),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("d_model", "ff"), dt),
+        "bi": ParamSpec((f,), ("ff",), jnp.float32, "zeros"),
+        "wo": ParamSpec((f, d), ("ff", "d_model"), dt),
+        "bo": ParamSpec((d,), (None,), jnp.float32, "zeros"),
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        gu = shard(x @ p["wi"], "batch", "seq", "act_model")
+        g, u = jnp.split(gu, 2, axis=-1)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = (x @ p["wi"] + p["bi"].astype(x.dtype))
+        h = shard(h, "batch", "seq", "act_model")
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out = h @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return shard(out, "batch", "seq", None)
+
+
+# --- embeddings ----------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    specs = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model),
+                              ("vocab", "d_model"), dt, "normal", 1.0)}
+    if cfg.learned_pos:
+        specs["pos"] = ParamSpec((max(cfg.max_position, cfg.enc_seq or 0),
+                                  cfg.d_model), (None, "d_model"), dt,
+                                 "normal", 0.02)
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                     ("d_model", "vocab"), dt)
+    return specs
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig,
+                 positions: Optional[jnp.ndarray] = None):
+    h = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.learned_pos:
+        pos = positions if positions is not None else jnp.arange(
+            tokens.shape[-1])
+        h = h + jnp.take(p["pos"], pos, axis=0)
+    return shard(h, "batch", "seq", None)
+
+
+def logits_out(p, h, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        out = h @ p["tok"].T.astype(h.dtype)
+    else:
+        out = h @ p["unembed"]
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        out = c * jnp.tanh(out.astype(jnp.float32) / c)
+    return shard(out.astype(jnp.float32), "batch", "seq", "vocab")

@@ -1,0 +1,421 @@
+"""Language-model composition: embeddings → scanned layer units → logits.
+
+Layer stacking follows ``ModelConfig.scan_plan()``: maximal repeating unit
+patterns are stacked and driven by ``lax.scan`` so the HLO stays compact for
+80-layer models (essential for the 512-device dry-run), with non-repeating
+prologue layers (e.g. deepseek's first dense layer) unrolled.
+
+Entry points:
+    lm_specs / init            — parameter trees (ParamSpec-based)
+    forward / loss_fn          — training path (differentiable)
+    encode                     — whisper encoder (stub frame embeddings in)
+    prefill / decode_step      — serving path with stacked caches
+All take a ``ForwardOpts`` bundle selecting attention impl, chunk sizes,
+MoE dispatch, remat policy, and norm impl — these are the distribution-level
+tunables swept by the §Perf hillclimbs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import shard
+from repro.models import attention as ATT
+from repro.models import mamba2 as MAM
+from repro.models import moe as MOE
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_mlp, apply_norm, embed_specs, embed_tokens, logits_out, mlp_specs,
+    norm_specs,
+)
+from repro.models.param import ParamSpec, init_params, stack_tree
+
+
+@dataclasses.dataclass(frozen=True)
+class ForwardOpts:
+    attn_impl: str = "chunked"       # full | chunked | triangular | pallas
+    attn_chunk: int = 512
+    moe_impl: str = "index"          # index | einsum
+    remat: str = "none"              # none | full | dots
+    norm_impl: str = "jnp"           # jnp | pallas
+    ssd_chunk: Optional[int] = None  # None → cfg.ssm.chunk
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def layer_specs(cfg: ModelConfig, kind: str):
+    mixer, ffn = kind.split("_")
+    specs: Dict[str, Any] = {"ln1": norm_specs(cfg)}
+    if mixer in ("attn", "enc", "dec"):
+        specs["mix"] = ATT.attn_specs(cfg)
+    else:
+        specs["mix"] = MAM.mamba_specs(cfg)
+    if mixer == "dec":
+        specs["lnx"] = norm_specs(cfg)
+        specs["cross"] = ATT.cross_specs(cfg)
+    if ffn == "mlp":
+        specs["ln2"] = norm_specs(cfg)
+        specs["ffn"] = mlp_specs(cfg, cfg.d_ff_dense or cfg.d_ff)
+    elif ffn == "moe":
+        specs["ln2"] = norm_specs(cfg)
+        specs["ffn"] = MOE.moe_specs(cfg)
+    return specs
+
+
+def _unit_specs(cfg: ModelConfig, unit: Tuple[str, ...]):
+    return {f"l{i}": layer_specs(cfg, kind) for i, kind in enumerate(unit)}
+
+
+def lm_specs(cfg: ModelConfig):
+    specs: Dict[str, Any] = {"embed": embed_specs(cfg),
+                             "final_ln": norm_specs(cfg)}
+    for ui, (unit, reps) in enumerate(cfg.scan_plan()):
+        u = _unit_specs(cfg, unit)
+        specs[f"u{ui}"] = stack_tree(u, reps) if reps > 1 else u
+    if cfg.family == "encdec":
+        enc_unit = _unit_specs(cfg, ("enc_mlp",))
+        specs["enc"] = {
+            "pos": ParamSpec((cfg.enc_seq, cfg.d_model), (None, "d_model"),
+                             jnp.dtype(cfg.dtype), "normal", 0.02),
+            "units": stack_tree(enc_unit, cfg.n_enc_layers),
+            "final_ln": norm_specs(cfg),
+        }
+    return specs
+
+
+def init(rng, cfg: ModelConfig):
+    return init_params(rng, lm_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Train-path blocks
+# ---------------------------------------------------------------------------
+
+def _block_apply(p, h, kind, cfg: ModelConfig, opts: ForwardOpts,
+                 cross_kv=None):
+    mixer, ffn = kind.split("_")
+    hn = apply_norm(p["ln1"], h, cfg, impl=opts.norm_impl)
+    if mixer in ("attn", "enc", "dec"):
+        mix = ATT.attn_forward(p["mix"], hn, cfg, impl=opts.attn_impl,
+                               chunk=opts.attn_chunk,
+                               causal=(mixer != "enc"))
+    else:
+        mix = MAM.mamba_forward(p["mix"], hn, cfg, chunk=opts.ssd_chunk)
+    h = h + mix
+    if mixer == "dec":
+        hx = apply_norm(p["lnx"], h, cfg, impl=opts.norm_impl)
+        h = h + ATT.cross_forward(p["cross"], hx, cfg, cross_kv,
+                                  impl="chunked", chunk=opts.attn_chunk)
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "mlp":
+        dense_cfg = (dataclasses.replace(cfg, d_ff=cfg.d_ff_dense)
+                     if cfg.d_ff_dense else cfg)
+        h = h + apply_mlp(p["ffn"], apply_norm(p["ln2"], h, cfg,
+                                               impl=opts.norm_impl), dense_cfg)
+    elif ffn == "moe":
+        fn = _moe_fn(opts)
+        mo, aux = fn(p["ffn"], apply_norm(p["ln2"], h, cfg,
+                                          impl=opts.norm_impl), cfg)
+        h = h + mo
+    return h, aux
+
+
+def _moe_fn(opts: ForwardOpts):
+    return {"index": MOE.apply_moe, "einsum": MOE.apply_moe_einsum,
+            "shmap": MOE.apply_moe_shmap}[opts.moe_impl]
+
+
+def _unit_apply(pu, h, unit, cfg, opts, cross_kv=None):
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(unit):
+        h, a = _block_apply(pu[f"l{i}"], h, kind, cfg, opts,
+                            cross_kv=cross_kv)
+        aux = aux + a
+    return h, aux
+
+
+def _maybe_remat(fn, opts: ForwardOpts):
+    if opts.remat == "none":
+        return fn
+    if opts.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _run_units(params, h, cfg: ModelConfig, opts: ForwardOpts, cross_kv=None):
+    aux_total = jnp.zeros((), jnp.float32)
+    for ui, (unit, reps) in enumerate(cfg.scan_plan()):
+        pu = params[f"u{ui}"]
+        if reps == 1:
+            fn = _maybe_remat(
+                lambda p_, h_: _unit_apply(p_, h_, unit, cfg, opts, cross_kv),
+                opts)
+            h, aux = fn(pu, h)
+            aux_total = aux_total + aux
+        else:
+            def body(h_, pl, unit=unit):
+                h2, aux = _unit_apply(pl, h_, unit, cfg, opts, cross_kv)
+                return h2, aux
+            h, auxs = jax.lax.scan(_maybe_remat(
+                lambda c, x: body(c, x), opts), h, pu)
+            aux_total = aux_total + jnp.sum(auxs)
+    return h, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Public: encode / forward / loss
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, enc_embeds,
+           opts: ForwardOpts = ForwardOpts()):
+    """Whisper encoder over stub frame embeddings (B, enc_seq, d)."""
+    pe = params["enc"]
+    h = enc_embeds + pe["pos"].astype(enc_embeds.dtype)
+    h = shard(h, "batch", "seq", None)
+
+    def body(h_, pl):
+        h2, _ = _unit_apply(pl, h_, ("enc_mlp",), cfg, opts)
+        return h2, None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, opts), h, pe["units"])
+    return apply_norm(pe["final_ln"], h, cfg, impl=opts.norm_impl)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,
+            enc_embeds=None, opts: ForwardOpts = ForwardOpts()):
+    """tokens (B, S) → logits (B, S_total, vocab) fp32. ``prefix_embeds``
+    (VLM stub patches) are prepended; ``enc_embeds`` feed the encoder."""
+    h = embed_tokens(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+        h = shard(h, "batch", "seq", None)
+    cross = None
+    if cfg.family == "encdec":
+        assert enc_embeds is not None
+        enc_h = encode(params, cfg, enc_embeds, opts)
+        # Cross-KV shared across decoder layers is wrong — each layer has
+        # its own projections; pass enc states and project per layer.
+        cross = enc_h
+    h, aux = _run_units_with_cross(params, h, cfg, opts, cross)
+    h = apply_norm(params["final_ln"], h, cfg, impl=opts.norm_impl)
+    return logits_out(params["embed"], h, cfg), aux
+
+
+def _run_units_with_cross(params, h, cfg, opts, enc_h):
+    if enc_h is None:
+        return _run_units(params, h, cfg, opts)
+    # Decoder units project their own cross-KV from enc_h inside the layer.
+    aux_total = jnp.zeros((), jnp.float32)
+    for ui, (unit, reps) in enumerate(cfg.scan_plan()):
+        pu = params[f"u{ui}"]
+
+        def body(h_, pl, unit=unit):
+            hh = h_
+            aux = jnp.zeros((), jnp.float32)
+            for i, kind in enumerate(unit):
+                p = pl[f"l{i}"]
+                kv = ATT.cross_kv(p["cross"], enc_h, cfg) \
+                    if kind.startswith("dec") else None
+                hh, a = _block_apply(p, hh, kind, cfg, opts, cross_kv=kv)
+                aux = aux + a
+            return hh, aux
+
+        if reps == 1:
+            h, aux = _maybe_remat(body, opts)(h, pu)
+            aux_total += aux
+        else:
+            h, auxs = jax.lax.scan(_maybe_remat(body, opts), h, pu)
+            aux_total += jnp.sum(auxs)
+    return h, aux_total
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            opts: ForwardOpts = ForwardOpts()):
+    """batch: tokens (B,S) int32, labels (B,S) int32 (−1 = masked), plus
+    optional prefix_embeds / enc_embeds. Returns (loss, metrics)."""
+    logits, aux = forward(
+        params, cfg, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_embeds=batch.get("enc_embeds"), opts=opts)
+    labels = batch["labels"]
+    if batch.get("prefix_embeds") is not None:
+        logits = logits[:, batch["prefix_embeds"].shape[1]:]
+    valid = labels >= 0
+    labels_safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # One-hot contraction instead of take_along_axis: stays sharded over a
+    # tensor-parallel vocab axis (a gather would all-gather the logits —
+    # tens of GB/device at 200k vocab).
+    onehot = jax.nn.one_hot(labels_safe, logits.shape[-1],
+                            dtype=logits.dtype)
+    ll = jnp.sum(logits * onehot, axis=-1)
+    ce = jnp.where(valid, lse - ll, 0.0)
+    n_valid = jnp.maximum(jnp.sum(valid), 1)
+    ce_mean = jnp.sum(ce) / n_valid
+    aux_coef = cfg.moe.aux_loss_coef if cfg.moe is not None else 0.0
+    loss = ce_mean + aux_coef * aux
+    acc = jnp.sum(
+        jnp.where(valid, (jnp.argmax(logits, -1) == labels_safe), 0)
+    ) / n_valid
+    return loss, {"ce": ce_mean, "aux": aux, "acc": acc,
+                  "tokens": n_valid.astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with stacked caches
+# ---------------------------------------------------------------------------
+
+def _block_prefill(p, h, kind, cfg, opts, max_len, enc_h=None):
+    mixer, ffn = kind.split("_")
+    cache: Dict[str, Any] = {}
+    hn = apply_norm(p["ln1"], h, cfg, impl=opts.norm_impl)
+    if mixer in ("attn", "dec"):
+        mix, c = ATT.attn_prefill(p["mix"], hn, cfg, max_len=max_len,
+                                  impl=opts.attn_impl, chunk=opts.attn_chunk)
+        cache["self"] = c
+    else:
+        mix, c = MAM.mamba_prefill(p["mix"], hn, cfg, chunk=opts.ssd_chunk)
+        cache["ssm"] = c
+    h = h + mix
+    if mixer == "dec":
+        kv = ATT.cross_kv(p["cross"], enc_h, cfg)
+        hx = apply_norm(p["lnx"], h, cfg, impl=opts.norm_impl)
+        h = h + ATT.cross_forward(p["cross"], hx, cfg, kv,
+                                  chunk=opts.attn_chunk)
+        cache["cross"] = kv
+    if ffn == "mlp":
+        dense_cfg = (dataclasses.replace(cfg, d_ff=cfg.d_ff_dense)
+                     if cfg.d_ff_dense else cfg)
+        h = h + apply_mlp(p["ffn"], apply_norm(p["ln2"], h, cfg,
+                                               impl=opts.norm_impl), dense_cfg)
+    elif ffn == "moe":
+        mo, _ = _moe_fn(opts)(p["ffn"], apply_norm(p["ln2"], h, cfg,
+                                                   impl=opts.norm_impl), cfg)
+        h = h + mo
+    return h, cache
+
+
+def _block_decode(p, h, kind, cfg, opts, cache, pos):
+    mixer, ffn = kind.split("_")
+    new: Dict[str, Any] = dict(cache)
+    hn = apply_norm(p["ln1"], h, cfg, impl=opts.norm_impl)
+    if mixer in ("attn", "dec"):
+        mix, c = ATT.attn_decode(p["mix"], hn, cfg, cache["self"], pos)
+        new["self"] = c
+    else:
+        mix, c = MAM.mamba_decode(p["mix"], hn, cfg, cache["ssm"])
+        new["ssm"] = c
+    h = h + mix
+    if mixer == "dec":
+        hx = apply_norm(p["lnx"], h, cfg, impl=opts.norm_impl)
+        h = h + ATT.cross_forward(p["cross"], hx, cfg, cache["cross"],
+                                  impl="full")
+    if ffn == "mlp":
+        dense_cfg = (dataclasses.replace(cfg, d_ff=cfg.d_ff_dense)
+                     if cfg.d_ff_dense else cfg)
+        h = h + apply_mlp(p["ffn"], apply_norm(p["ln2"], h, cfg,
+                                               impl=opts.norm_impl), dense_cfg)
+    elif ffn == "moe":
+        mo, _ = _moe_fn(opts)(p["ffn"], apply_norm(p["ln2"], h, cfg,
+                                                   impl=opts.norm_impl), cfg)
+        h = h + mo
+    return h, new
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, max_len: int,
+            enc_embeds=None, prefix_embeds=None,
+            opts: ForwardOpts = ForwardOpts()):
+    """Run the prompt, return (last-position logits, cache)."""
+    h = embed_tokens(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    enc_h = encode(params, cfg, enc_embeds, opts) if cfg.family == "encdec" \
+        else None
+    caches = {}
+    for ui, (unit, reps) in enumerate(cfg.scan_plan()):
+        pu = params[f"u{ui}"]
+
+        def body(h_, pl, unit=unit):
+            hh = h_
+            cs = {}
+            for i, kind in enumerate(unit):
+                hh, c = _block_prefill(pl[f"l{i}"], hh, kind, cfg, opts,
+                                       max_len, enc_h=enc_h)
+                cs[f"l{i}"] = c
+            return hh, cs
+
+        if reps == 1:
+            h, cs = body(h, pu)
+        else:
+            h, cs = jax.lax.scan(body, h, pu)
+        caches[f"u{ui}"] = cs
+    h = apply_norm(params["final_ln"], h, cfg, impl=opts.norm_impl)
+    logits = logits_out(params["embed"], h[:, -1:], cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos,
+                opts: ForwardOpts = ForwardOpts()):
+    """token (B, 1) int32; pos scalar int32. → (logits (B, vocab), cache)."""
+    if cfg.learned_pos:
+        h = (jnp.take(params["embed"]["tok"], token, axis=0) +
+             params["embed"]["pos"][pos][None, None, :].astype(
+                 jnp.dtype(cfg.dtype)))
+    else:
+        h = embed_tokens(params["embed"], token, cfg)
+    new_cache = {}
+    for ui, (unit, reps) in enumerate(cfg.scan_plan()):
+        pu = params[f"u{ui}"]
+        cu = cache[f"u{ui}"]
+
+        def body(h_, xs, unit=unit):
+            pl, cl = xs
+            hh = h_
+            ncs = {}
+            for i, kind in enumerate(unit):
+                hh, nc = _block_decode(pl[f"l{i}"], hh, kind, cfg, opts,
+                                       cl[f"l{i}"], pos)
+                ncs[f"l{i}"] = nc
+            return hh, ncs
+
+        if reps == 1:
+            h, ncs = body(h, (pu, cu))
+        else:
+            h, ncs = jax.lax.scan(body, h, (pu, cu))
+        new_cache[f"u{ui}"] = ncs
+    h = apply_norm(params["final_ln"], h, cfg, impl=opts.norm_impl)
+    logits = logits_out(params["embed"], h, cfg)
+    return logits[:, 0], new_cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct tree matching prefill's cache (for the dry-run)."""
+    caches = {}
+    for ui, (unit, reps) in enumerate(cfg.scan_plan()):
+        cs = {}
+        for i, kind in enumerate(unit):
+            mixer = kind.split("_")[0]
+            c: Dict[str, Any] = {}
+            if mixer in ("attn", "dec"):
+                c["self"] = ATT.attn_cache_spec(cfg, batch, max_len)
+            else:
+                c["ssm"] = MAM.mamba_cache_spec(cfg, batch)
+            if mixer == "dec":
+                dt = jnp.dtype(cfg.dtype)
+                kvs = (batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim)
+                c["cross"] = {"ck": jax.ShapeDtypeStruct(kvs, dt),
+                              "cv": jax.ShapeDtypeStruct(kvs, dt)}
+            cs[f"l{i}"] = c
+        if reps > 1:
+            cs = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((reps,) + s.shape, s.dtype), cs)
+        caches[f"u{ui}"] = cs
+    return caches

@@ -1,0 +1,219 @@
+"""Mamba-2 (SSD — state-space duality) mixer [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk "attention-like"
+lower-triangular products + an inter-chunk lax.scan over compressed states.
+The chunk length is a *tunable* registered with the autotuner (the paper's
+thesis applied to an attention-free mixer: block size vs VMEM/overhead
+trade-offs exist here too — see configs/shipped spaces).
+
+Decode carries (conv_state, ssm_state) — O(1) per token, which is why
+mamba2 / jamba run the long_500k cell.
+
+Layout notes: heads are sharded over the ``model`` axis ("ssm_heads"); the
+B/C projections are head-shared (n_groups=1) and replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+
+Cache = Dict[str, jnp.ndarray]
+
+
+def mamba_specs(cfg: ModelConfig):
+    s = cfg.ssm
+    d, di, H, N = cfg.d_model, cfg.d_inner, cfg.ssm_heads, s.d_state
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wzx": ParamSpec((d, 2 * di), ("d_model", "ff"), dt),
+        "wbc": ParamSpec((d, 2 * N), ("d_model", None), dt),
+        "wdt": ParamSpec((d, H), ("d_model", "ssm_heads"), dt),
+        "conv_x": ParamSpec((s.d_conv, di), (None, "ff"), jnp.float32,
+                            "normal", 0.5),
+        "conv_bc": ParamSpec((s.d_conv, 2 * N), (None, None), jnp.float32,
+                             "normal", 0.5),
+        "conv_x_b": ParamSpec((di,), ("ff",), jnp.float32, "zeros"),
+        "conv_bc_b": ParamSpec((2 * N,), (None,), jnp.float32, "zeros"),
+        "a_log": ParamSpec((H,), ("ssm_heads",), jnp.float32, "zeros"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), jnp.float32, "zeros"),
+        "skip_d": ParamSpec((H,), ("ssm_heads",), jnp.float32, "ones"),
+        "norm_w": ParamSpec((di,), ("ff",), jnp.float32, "ones"),
+        "wout": ParamSpec((di, d), ("ff", "d_model"), dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifted adds. x (B,S,C); w (K,C)."""
+    K = w.shape[0]
+    out = x * w[-1] + b
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[-1 - i]
+    return out.astype(x.dtype)
+
+
+def _segsum(x):
+    """x (..., Q) → (..., Q, Q) with [i,j] = Σ_{k∈(j,i]} x_k (lower-tri)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(xdt, dA, B_, C_, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xdt (B,S,H,P) = x·dt ; dA (B,S,H) = dt·A (≤0); B_, C_ (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    B, S, H, P = xdt.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    s_pad = -(-S // Q) * Q
+    if s_pad != S:
+        pad = ((0, 0), (0, s_pad - S))
+        xdt = jnp.pad(xdt, pad + ((0, 0), (0, 0)))
+        dA = jnp.pad(dA, pad + ((0, 0),))
+        B_ = jnp.pad(B_, pad + ((0, 0),))
+        C_ = jnp.pad(C_, pad + ((0, 0),))
+    nc = s_pad // Q
+    xc = xdt.reshape(B, nc, Q, H, P)
+    dac = dA.reshape(B, nc, Q, H).astype(jnp.float32)
+    bc = B_.reshape(B, nc, Q, N)
+    cc = C_.reshape(B, nc, Q, N)
+
+    a_cs = jnp.cumsum(dac, axis=2)                     # (B,nc,Q,H)
+    L = jnp.exp(_segsum(jnp.moveaxis(dac, 3, 2)))      # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))
+    att = scores[:, :, None] * L                       # (B,nc,H,Q,K)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", att.astype(xdt.dtype), xc)
+
+    chunk_sum = a_cs[:, :, -1]                         # (B,nc,H)
+    decay_states = jnp.exp(chunk_sum[:, :, None] - a_cs)   # (B,nc,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                        bc.astype(jnp.float32), decay_states,
+                        xc.astype(jnp.float32))        # (B,nc,H,N,P)
+
+    def body(st, xs):
+        states_c, csum_c = xs
+        st_prev = st
+        st = st * jnp.exp(csum_c)[:, :, None, None] + states_c
+        return st, st_prev
+
+    st0 = (jnp.zeros((B, H, N, P), jnp.float32) if init_state is None
+           else init_state.astype(jnp.float32))
+    final, st_prev = jax.lax.scan(
+        body, st0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_sum, 1, 0)))
+    st_prev = jnp.moveaxis(st_prev, 0, 1)              # (B,nc,H,N,P)
+
+    y_off = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", cc.astype(jnp.float32),
+                       st_prev, jnp.exp(a_cs))
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(B, s_pad, H, P)
+    return y[:, :S].astype(xdt.dtype), final
+
+
+def _project(p, x, cfg: ModelConfig):
+    s = cfg.ssm
+    di, H, N = cfg.d_inner, cfg.ssm_heads, s.d_state
+    zx = x @ p["wzx"]
+    z, xin = zx[..., :di], zx[..., di:]
+    bc_raw = x @ p["wbc"]
+    dt_raw = x @ p["wdt"]
+    return z, xin, bc_raw, dt_raw
+
+
+def _finish(p, y, z, cfg: ModelConfig):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = (yf * jax.lax.rsqrt(var + 1e-6) * p["norm_w"]).astype(y.dtype)
+    return shard(yn @ p["wout"], "batch", "seq", None)
+
+
+def mamba_forward(p, x, cfg: ModelConfig, *, chunk=None):
+    """Train/no-cache forward. x (B,S,d)."""
+    out, _ = _mamba_scan(p, x, cfg, chunk=chunk)
+    return out
+
+
+def _mamba_scan(p, x, cfg: ModelConfig, *, chunk=None, init_state=None):
+    s = cfg.ssm
+    B, S, _ = x.shape
+    H, P, N = cfg.ssm_heads, s.headdim, s.d_state
+    z, xin, bc_raw, dt_raw = _project(p, x, cfg)
+    xin = jax.nn.silu(_causal_conv(xin, p["conv_x"], p["conv_x_b"])
+                      .astype(jnp.float32)).astype(x.dtype)
+    bc = jax.nn.silu(_causal_conv(bc_raw, p["conv_bc"], p["conv_bc_b"])
+                     .astype(jnp.float32)).astype(x.dtype)
+    B_, C_ = bc[..., :N], bc[..., N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    xh = shard(xin.reshape(B, S, H, P), "batch", "seq", "ssm_heads", None)
+    xdt = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    y, final = ssd_chunked(xdt, dt * A, B_, C_, chunk or s.chunk,
+                           init_state=init_state)
+    y = y.astype(jnp.float32) + p["skip_d"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    return _finish(p, y, z, cfg), final
+
+
+# --- decode -------------------------------------------------------------------
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    H, P, N = cfg.ssm_heads, s.headdim, s.d_state
+    ch = cfg.d_inner + 2 * N
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, ch),
+                                     jnp.dtype(cfg.dtype)),
+        "state": jax.ShapeDtypeStruct((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_prefill(p, x, cfg: ModelConfig, *, chunk=None):
+    """Forward + build decode cache from the prompt tail."""
+    s = cfg.ssm
+    N = s.d_state
+    out, final = _mamba_scan(p, x, cfg, chunk=chunk)
+    _, xin, bc_raw, _ = _project(p, x, cfg)
+    tail = jnp.concatenate([xin, bc_raw], axis=-1)[:, -(s.d_conv - 1):]
+    if x.shape[1] < s.d_conv - 1:
+        tail = jnp.pad(tail, ((0, 0), (s.d_conv - 1 - x.shape[1], 0), (0, 0)))
+    return out, {"conv": tail, "state": final}
+
+
+def mamba_decode(p, x, cfg: ModelConfig, cache: Cache):
+    """One token. x (B,1,d)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, s.headdim, s.d_state
+    z, xin, bc_raw, dt_raw = _project(p, x, cfg)
+    new_ch = jnp.concatenate([xin, bc_raw], axis=-1)       # (B,1,ch)
+    win = jnp.concatenate([cache["conv"], new_ch], axis=1)  # (B,d_conv,ch)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+    conv_b = jnp.concatenate([p["conv_x_b"], p["conv_bc_b"]], axis=-1)
+    di = cfg.d_inner
+    convd = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32), conv_w) + conv_b
+    convd = jax.nn.silu(convd)
+    xin1, bc1 = convd[..., :di].astype(x.dtype), convd[..., di:]
+    B_, C_ = bc1[..., :N], bc1[..., N:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dt * A)                                   # (B,H)
+    xh = xin1.reshape(B, H, P).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+    st = cache["state"] * dA[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", B_.astype(jnp.float32), xdt)
+    y = jnp.einsum("bn,bhnp->bhp", C_.astype(jnp.float32), st)
+    y = y + p["skip_d"][:, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    out = _finish(p, y, z, cfg)
+    return out, {"conv": win[:, 1:], "state": st}

@@ -1,0 +1,236 @@
+"""Mixture-of-Experts layer (olmoe / deepseek-v2 / jamba).
+
+Two dispatch implementations:
+
+  * ``index``  (default) — capacity-bounded gather/scatter dispatch. Tokens
+    are ranked within their (batch-row, expert) bucket via a scatter-add
+    histogram + rank computation; each expert processes a dense (C, d)
+    buffer. Because activations are replicated across the ``model`` mesh
+    axis under TP while expert weights are sharded over it (EP), dispatch is
+    *local masked selection* — no all-to-all is needed on the TPU mesh
+    (the torch.distributed A2A pattern maps away; DESIGN.md §2 note 4).
+    Per-batch-row capacity keeps routing local to the data shard.
+
+  * ``einsum``  — the GShard/Switch one-hot dispatch-einsum formulation.
+    O(S·E·C) memory/compute; kept as the cross-validation oracle for tests
+    and for small expert counts.
+
+Aux output is the Switch-style load-balance loss (coef in MoEConfig).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mlp, mlp_specs
+from repro.models.param import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig):
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    wi_cols = 2 * f if cfg.act == "swiglu" else f
+    specs = {
+        "router": ParamSpec((d, E), ("d_model", None), jnp.float32),
+        "wi": ParamSpec((E, d, wi_cols), ("experts", "d_model", "ff"), dt),
+        "wo": ParamSpec((E, f, d), ("experts", "ff", "d_model"), dt),
+    }
+    if m.n_shared_experts:
+        specs["shared"] = mlp_specs(cfg, f * m.n_shared_experts)
+    return specs
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = int(tokens_per_group * m.top_k * m.capacity_factor / m.n_experts)
+    return max(4, -(-c // 4) * 4)
+
+
+def _route(p, xt, cfg: ModelConfig):
+    """xt (..., d) → (weights (..., k), idx (..., k), probs (..., E))."""
+    m = cfg.moe
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, m.top_k)
+    if m.norm_topk:
+        vals = vals / jnp.sum(vals, axis=-1, keepdims=True)
+    return vals, idx, probs
+
+
+def _aux_loss(probs, idx, cfg: ModelConfig):
+    """Switch load-balance loss: E · Σ_e f_e · P_e."""
+    E = cfg.moe.n_experts
+    assign = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32)  # top-1 share
+    f_e = jnp.mean(assign, axis=tuple(range(assign.ndim - 1)))
+    p_e = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return E * jnp.sum(f_e * p_e)
+
+
+def _rank_in_expert(flat_e, E: int):
+    """Rank of each (token, choice) within its expert bucket, per batch row.
+    Pure integer work; independent of expert sharding."""
+    B, Sk = flat_e.shape
+    order = jnp.argsort(flat_e, axis=-1, stable=True)      # (B, Sk)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    counts = jax.vmap(
+        lambda e: jnp.zeros((E,), jnp.int32).at[e].add(1))(flat_e)
+    starts = jnp.cumsum(counts, axis=-1) - counts          # exclusive cumsum
+    rank_sorted = jnp.arange(Sk)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=-1)
+    return jax.vmap(
+        lambda o, r: jnp.zeros((Sk,), jnp.int32).at[o].set(r))(
+        order, rank_sorted)                                # (B, Sk)
+
+
+def _ffn_on_slice(x, wvals, flat_e, rank, wi, wo, cfg: ModelConfig,
+                  e_lo, E_local: int, C: int):
+    """Dispatch/FFN/combine for the expert slice [e_lo, e_lo+E_local).
+    Everything here is local to one expert shard (no collectives)."""
+    B, S, d = x.shape
+    k = cfg.moe.top_k
+    local_e = flat_e - e_lo
+    keep = (local_e >= 0) & (local_e < E_local) & (rank < C)
+    dest = jnp.where(keep, local_e * C + rank, E_local * C)   # drop slot
+    xk = jnp.repeat(x, k, axis=1)                             # (B, Sk, d)
+    buf = jax.vmap(
+        lambda dd, xx: jnp.zeros((E_local * C, d), x.dtype).at[dd].set(
+            xx, mode="drop"))(dest, xk)
+    buf = buf.reshape(B, E_local, C, d)
+
+    h = jnp.einsum("becd,edf->becf", buf, wi)
+    if cfg.act == "swiglu":
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out_buf = jnp.einsum("becf,efd->becd", h, wo)
+
+    flat_out = out_buf.reshape(B, E_local * C, d)
+    gathered = jax.vmap(
+        lambda ob, dd: ob.at[dd, :].get(mode="fill", fill_value=0))(
+        flat_out, jnp.minimum(dest, E_local * C - 1))
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    gathered = gathered.reshape(B, S, k, d)
+    return jnp.sum(gathered * wvals[..., None].astype(x.dtype), axis=2)
+
+
+def apply_moe(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Index-dispatch MoE. x (B, S, d) → (out (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.n_experts, m.top_k
+    C = _capacity(cfg, S)
+    w, idx, probs = _route(p, x, cfg)                      # (B,S,k) ×2
+    flat_e = idx.reshape(B, S * k)
+    rank = _rank_in_expert(flat_e, E)
+    out = _ffn_on_slice(x, w, flat_e, rank, p["wi"], p["wo"], cfg,
+                        jnp.int32(0), E, C)
+    if m.n_shared_experts:
+        out = out + apply_mlp(p["shared"], x, cfg)
+    return shard(out, "batch", "seq", None), _aux_loss(probs, idx, cfg)
+
+
+def apply_moe_shmap(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Expert-parallel MoE with an explicit shard_map over the `model` axis.
+
+    Why: under pure pjit auto-sharding, the capacity scatter's output is
+    expert-sharded but its indices are data-dependent, so the SPMD
+    partitioner replicates the (B, E, C, d) buffers and all-reduces them —
+    ~600 GB/device/step for olmoe train_4k (measured; §Perf). Making the
+    expert slice explicit turns dispatch into purely local scatters, and the
+    only collective left is one activation-sized psum (the EP combine).
+    Falls back to ``apply_moe`` when no mesh is active or E ∤ model size.
+    """
+    from repro.distribution import sharding as dsh
+    active = dsh._ACTIVE.get()
+    m = cfg.moe
+    E = m.n_experts
+    if active is None:
+        return apply_moe(p, x, cfg)
+    mesh, policy = active
+    axes = [a for a in policy.mesh_axes("experts") if a in mesh.shape]
+    msize = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    if msize <= 1 or E % msize != 0 or len(axes) != 1:
+        return apply_moe(p, x, cfg)
+    axis = axes[0]
+    E_local = E // msize
+    B, S, d = x.shape
+    C = _capacity(cfg, S)
+    w, idx, probs = _route(p, x, cfg)
+    flat_e = idx.reshape(B, S * m.top_k)
+    rank = _rank_in_expert(flat_e, E)
+
+    from jax.sharding import PartitionSpec as P
+
+    # FULLY-manual region (every mesh axis): the SPMD partitioner never sees
+    # the dispatch scatter, sidestepping both the replicate+all-reduce
+    # pathology and an XLA CPU crash on partially-manual scatters. The batch
+    # dim is split over whatever prefix of (pod, data) divides it evenly;
+    # any remaining axes see replicated activations (small per-microbatch).
+    batch_axes = []
+    b_left = B
+    for a in ("pod", "data"):
+        if a in mesh.shape and b_left % mesh.shape[a] == 0:
+            batch_axes.append(a)
+            b_left //= mesh.shape[a]
+    bspec = tuple(batch_axes) if batch_axes else None
+
+    def body(x_, w_, fe_, rk_, wi_, wo_):
+        e_lo = jax.lax.axis_index(axis) * E_local
+        out = _ffn_on_slice(x_, w_, fe_, rk_, wi_[0], wo_[0], cfg,
+                            e_lo, E_local, C)
+        return jax.lax.psum(out, axis)        # EP combine: the ONE collective
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec), P(bspec), P(bspec), P(bspec), P(axis), P(axis)),
+        out_specs=P(bspec),
+        axis_names=frozenset(mesh.axis_names),
+        check_vma=False)
+    out = fn(x, w, flat_e, rank,
+             p["wi"].reshape(msize, E_local, *p["wi"].shape[1:]),
+             p["wo"].reshape(msize, E_local, *p["wo"].shape[1:]))
+    if m.n_shared_experts:
+        out = out + apply_mlp(p["shared"], x, cfg)
+    return shard(out, "batch", "seq", None), _aux_loss(probs, idx, cfg)
+
+
+def apply_moe_einsum(p, x, cfg: ModelConfig):
+    """GShard one-hot dispatch (oracle for tests; O(S·E·C) memory)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.n_experts, m.top_k
+    C = _capacity(cfg, S)
+    w, idx, probs = _route(p, x, cfg)
+    # position of each choice within its expert, via cumulative one-hots
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.int32)           # (B,S,k,E)
+    flat = oh.reshape(B, S * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                  # exclusive
+    rank = jnp.sum(pos * flat, axis=-1)                    # (B, Sk)
+    keep = rank < C
+    disp = (flat[..., :, None] *
+            jax.nn.one_hot(rank, C, dtype=jnp.int32)[..., None, :] *
+            keep[..., None, None])
+    # disp (B, Sk, E, C) one-hot dispatch tensor
+    disp = disp.reshape(B, S, k, E, C)
+    comb = disp.astype(jnp.float32) * w[..., None, None]
+    xk = x[:, :, None, :, None]  # unused; explicit einsum below
+    buf = jnp.einsum("bskec,bsd->becd", disp.astype(x.dtype), x)
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"])
+    if cfg.act == "swiglu":
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"])
+    out = jnp.einsum("bskec,becd->bsd", comb.astype(x.dtype), out_buf)
+    if m.n_shared_experts:
+        out = out + apply_mlp(p["shared"], x, cfg)
+    return out, _aux_loss(probs, idx, cfg)

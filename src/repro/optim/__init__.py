@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, apply_updates, init_state, schedule_lr  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.runtime.trainer import InjectedFailure, Trainer, TrainerConfig  # noqa: F401
+from repro.runtime.compression import ef_compress, init_ef_state, make_compressed_allreduce  # noqa: F401

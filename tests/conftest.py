@@ -1,0 +1,41 @@
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+# Tests run on the single host CPU device (the dry-run sets its own flags in
+# a separate process). Keep kernels in interpret mode and tuning caches in
+# tmp dirs so tests never touch the user cache.
+os.environ.setdefault("REPRO_TARGET_CHIP", "tpu_v5e")
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path):
+    from repro.core.cache import TuningCache
+    return TuningCache(cache_dir=str(tmp_path / "tuning"))
+
+
+@pytest.fixture()
+def tuner(tmp_cache):
+    from repro.core import Autotuner, AnalyticalMeasure, get_chip
+    return Autotuner(cache=tmp_cache,
+                     backend=AnalyticalMeasure(get_chip("tpu_v5e")))
+
+
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 300) -> str:
+    """Run python code in a fresh process with N forced host devices —
+    multi-device tests can't share the main test process (jax locks the
+    device count on first init)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout

@@ -1,0 +1,158 @@
+"""Persistent tuning cache (Q4.3) + Autotuner JIT/off-critical-path (Q4.4)."""
+
+import json
+import math
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AnalyticalMeasure, Autotuner, ConfigSpace, ExhaustiveSearch,
+    KernelWorkload, Param, TunableKernel, TuningCache, TuningContext,
+    get_chip,
+)
+from repro.core.cache import CacheEntry, make_entry
+
+
+def space():
+    return ConfigSpace("k", [Param("blk", (64, 128, 256))])
+
+
+def kernel(workload=None):
+    def wl(cfg, ctx):
+        return KernelWorkload(flops=1e9, hbm_bytes=1e8 / cfg["blk"],
+                              grid_steps=4096 // cfg["blk"], vmem_bytes=1024)
+    return TunableKernel("k", space(), workload_fn=workload or wl,
+                         heuristic=lambda ctx: {"blk": 64})
+
+
+def ctx(chip="tpu_v5e", seq=1024):
+    return TuningContext(chip=get_chip(chip), shapes={"x": (seq, 128)})
+
+
+def test_cache_roundtrip(tmp_cache):
+    e = make_entry({"blk": 128}, 1e-3, 3, "exhaustive", "analytical:tpu_v5e",
+                   "tpu_v5e")
+    tmp_cache.put("k", 1, space(), ctx(), e)
+    got = tmp_cache.get("k", 1, space(), ctx())
+    assert got.config == {"blk": 128}
+    assert len(tmp_cache) == 1
+
+
+def test_cache_persists_across_instances(tmp_path):
+    c1 = TuningCache(cache_dir=str(tmp_path))
+    c1.put("k", 1, space(), ctx(),
+           make_entry({"blk": 256}, 1.0, 1, "s", "b", "tpu_v5e"))
+    c2 = TuningCache(cache_dir=str(tmp_path))   # fresh process equivalent
+    assert c2.get("k", 1, space(), ctx()).config == {"blk": 256}
+
+
+def test_cache_misses_on_different_ctx(tmp_cache):
+    tmp_cache.put("k", 1, space(), ctx(seq=1024),
+                  make_entry({"blk": 256}, 1.0, 1, "s", "b", "tpu_v5e"))
+    assert tmp_cache.get("k", 1, space(), ctx(seq=2048)) is None
+    assert tmp_cache.get("k", 2, space(), ctx(seq=1024)) is None
+
+
+def test_cache_rejects_foreign_fingerprint(tmp_cache):
+    tmp_cache.put("k", 1, space(), ctx(),
+                  make_entry({"blk": 256}, 1.0, 1, "s", "wall_clock",
+                             "cpu_host"))
+    assert tmp_cache.get(
+        "k", 1, space(), ctx(),
+        require_fingerprint={"backend": "analytical:tpu_v5e"}) is None
+
+
+def test_cache_invalidated_when_space_changes(tmp_cache):
+    tmp_cache.put("k", 1, space(), ctx(),
+                  make_entry({"blk": 256}, 1.0, 1, "s", "b", "tpu_v5e"))
+    sp2 = ConfigSpace("k", [Param("blk", (64, 128, 256))], version=9)
+    assert tmp_cache.get("k", 1, sp2, ctx()) is None
+
+
+def test_cache_rejects_now_invalid_config(tmp_cache):
+    """Chip-conditional constraints may invalidate stored configs."""
+    sp = space()
+    tmp_cache.put("k", 1, sp, ctx(),
+                  make_entry({"blk": 512}, 1.0, 1, "s", "b", "tpu_v5e"))
+    assert tmp_cache.get("k", 1, sp, ctx()) is None   # 512 not in domain
+
+
+def test_cache_db_is_json(tmp_path):
+    c = TuningCache(cache_dir=str(tmp_path))
+    c.put("k", 1, space(), ctx(),
+          make_entry({"blk": 128}, 1.0, 1, "s", "b", "tpu_v5e"))
+    with open(c.db_path) as f:
+        db = json.load(f)
+    assert len(db) == 1
+
+
+# ---------------------------------------------------------------------------
+# Autotuner behaviour
+# ---------------------------------------------------------------------------
+
+def test_tune_persists_and_hits(tuner):
+    k = kernel()
+    cfg1 = tuner.best_config(k, ctx())
+    assert tuner.stats["tunes"] == 1
+    cfg2 = tuner.best_config(k, ctx())
+    assert cfg2 == cfg1
+    assert tuner.stats["hits"] == 1
+
+
+def test_on_miss_heuristic_defers(tmp_cache):
+    t = Autotuner(cache=tmp_cache,
+                  backend=AnalyticalMeasure(get_chip("tpu_v5e")),
+                  on_miss="heuristic")
+    k = kernel()
+    cfg = t.best_config(k, ctx())
+    assert cfg == {"blk": 64}            # the heuristic, instantly
+    assert len(t.queue) == 1
+    assert t.flush_tuning_queue() == 1   # idle-time tuning (Q4.4)
+    cfg2 = t.best_config(k, ctx())
+    assert t.stats["hits"] == 1
+    assert cfg2 == {"blk": 256}          # tuned optimum (fewest grid steps)
+
+
+def test_on_miss_error(tmp_cache):
+    t = Autotuner(cache=tmp_cache,
+                  backend=AnalyticalMeasure(get_chip("tpu_v5e")),
+                  on_miss="error")
+    with pytest.raises(LookupError):
+        t.best_config(kernel(), ctx())
+
+
+def test_cross_chip_retuning(tmp_path):
+    """Same kernel+shape tuned for different chips may disagree — the
+    paper's central portability claim, TPU-generation flavoured."""
+    from repro.kernels import ops
+    best = {}
+    for chip in ("tpu_v4", "tpu_v6e"):
+        t = Autotuner(cache=TuningCache(str(tmp_path / chip)),
+                      backend=AnalyticalMeasure(get_chip(chip)))
+        c = TuningContext(chip=get_chip(chip),
+                          shapes={"q": (8, 32, 4096, 256),
+                                  "k": (8, 8, 4096, 256)},
+                          dtype="bfloat16", extra={"causal": True})
+        best[chip] = t.tune(ops.FLASH_ATTENTION, c).config
+    assert best["tpu_v4"] != best["tpu_v6e"]
+
+
+def test_failed_tuning_records_inf(tmp_cache):
+    def bad(cfg, ctx):
+        raise RuntimeError("boom")
+    t = Autotuner(cache=tmp_cache,
+                  backend=AnalyticalMeasure(get_chip("tpu_v5e")))
+    e = t.tune(kernel(workload=bad), ctx())
+    assert math.isinf(e.metric)
+    assert e.config == {"blk": 64}       # falls back to heuristic default
+
+
+@given(st.dictionaries(st.sampled_from(["blk"]),
+                       st.sampled_from([64, 128, 256]), min_size=1),
+       st.floats(1e-9, 1e3))
+@settings(max_examples=25, deadline=None)
+def test_cache_entry_json_roundtrip(cfg, metric):
+    e = make_entry(cfg, metric, 7, "random", "b", "tpu_v5e")
+    assert CacheEntry.from_json(json.loads(json.dumps(e.to_json()))) == e

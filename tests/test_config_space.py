@@ -1,0 +1,130 @@
+"""ConfigSpace / constraint / pruning tests (paper Q4.1) + hypothesis
+properties."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ConfigSpace, Param, TuningContext, get_chip
+from repro.core.config_space import (
+    at_most_dim, divides, dtype_bytes, lane_aligned, multiple_of, ordered,
+    sublane_aligned, vmem_fits,
+)
+
+
+def ctx(chip="tpu_v5e", **shapes):
+    return TuningContext(chip=get_chip(chip), shapes=shapes)
+
+
+def simple_space():
+    sp = ConfigSpace("t", [Param("a", (1, 2, 4)), Param("b", (8, 16))])
+    sp.constrain("a<=b", lambda c, x: c["a"] <= c["b"])
+    return sp
+
+
+def test_cardinality_and_enumeration():
+    sp = simple_space()
+    assert sp.cardinality == 6
+    cfgs = list(sp.iter_all())
+    assert len(cfgs) == 6
+    assert all(set(c) == {"a", "b"} for c in cfgs)
+
+
+def test_constraints_prune():
+    sp = ConfigSpace("t", [Param("a", (1, 64))])
+    sp.constrain("too_big", lambda c, x: c["a"] <= 8)
+    valid = sp.valid_configs(ctx(x=(16,)))
+    assert valid == [{"a": 1}]
+    rep = sp.pruning_report(ctx(x=(16,)))
+    assert rep == {"valid": 1, "too_big": 1}
+
+
+def test_default_is_first_valid():
+    sp = simple_space()
+    assert sp.default(ctx()) == {"a": 1, "b": 8}
+
+
+def test_no_valid_config_raises():
+    sp = ConfigSpace("t", [Param("a", (1,))])
+    sp.constrain("never", lambda c, x: False)
+    with pytest.raises(ValueError):
+        sp.default(ctx())
+
+
+def test_duplicate_param_rejected():
+    with pytest.raises(ValueError):
+        ConfigSpace("t", [Param("a", (1,)), Param("a", (2,))])
+
+
+def test_empty_domain_rejected():
+    with pytest.raises(ValueError):
+        Param("a", ())
+
+
+def test_vmem_constraint_is_chip_conditional():
+    """Paper Fig. 4: configs valid on one platform are invalid on another."""
+    sp = ConfigSpace("t", [Param("blk", (128, 4096))])
+    sp.constrain("vmem", vmem_fits(lambda c, x: c["blk"] * 4096))
+    v5e = sp.valid_configs(ctx("tpu_v5e"))
+    v4 = sp.valid_configs(ctx("tpu_v4"))
+    assert {"blk": 4096} in v5e
+    assert {"blk": 4096} not in v4          # 32 MiB > 16 MiB budget
+    assert {"blk": 128} in v4
+
+
+def test_constraint_builders():
+    c = ctx(x=(256, 128))
+    assert divides("p", "x", 0)({"p": 64}, c)
+    assert not divides("p", "x", 0)({"p": 96}, c)
+    assert at_most_dim("p", "x", 1)({"p": 128}, c)
+    assert not at_most_dim("p", "x", 1)({"p": 256}, c)
+    assert multiple_of("p", 8)({"p": 64}, c)
+    assert lane_aligned("p")({"p": 256}, c)
+    assert not lane_aligned("p")({"p": 100}, c)
+    assert sublane_aligned("p")({"p": 8}, c)
+    assert ordered("p", "q")({"p": 2, "q": 4}, c)
+    assert dtype_bytes("bfloat16") == 2
+
+
+def test_space_hash_changes_with_version():
+    a = ConfigSpace("t", [Param("a", (1,))], version=1)
+    b = ConfigSpace("t", [Param("a", (1,))], version=2)
+    assert a.space_hash() != b.space_hash()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+@st.composite
+def spaces(draw):
+    n = draw(st.integers(1, 3))
+    params = []
+    for i in range(n):
+        vals = draw(st.lists(st.integers(1, 64), min_size=1, max_size=4,
+                             unique=True))
+        params.append(Param(f"p{i}", tuple(vals)))
+    return ConfigSpace("h", params)
+
+
+@given(spaces(), st.integers(0, 2 ** 31))
+@settings(max_examples=50, deadline=None)
+def test_valid_subset_of_all(sp, threshold):
+    sp.constrain("thresh", lambda c, x: sum(c.values()) % 7 != threshold % 7)
+    c = ctx()
+    all_cfgs = list(sp.iter_all())
+    valid = sp.valid_configs(c)
+    assert len(all_cfgs) == sp.cardinality
+    for cfg in valid:
+        assert sp.is_valid(cfg, c)
+        assert cfg in all_cfgs
+    for cfg in all_cfgs:
+        why = sp.why_invalid(cfg, c)
+        assert (why is None) == (cfg in valid)
+
+
+@given(spaces())
+@settings(max_examples=30, deadline=None)
+def test_pruning_report_partitions_space(sp):
+    sp.constrain("even", lambda c, x: sum(c.values()) % 2 == 0)
+    rep = sp.pruning_report(ctx())
+    assert sum(rep.values()) == sp.cardinality

@@ -1,0 +1,83 @@
+"""Dry-run driver helpers (no 512-device compile — that runs via
+`python -m repro.launch.dryrun`; its outputs are checked in results/)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, input_specs, shape_supported
+from repro.launch import dryrun as DR
+from repro.models.lm import cache_specs
+
+
+ALL_VARIANTS = [
+    "baseline", "triangular", "remat_full", "remat_none", "micro2", "micro4",
+    "micro16", "fsdp", "tp_only", "serve_2d", "serve_tp", "seqpar", "chunk4k",
+    "grad_compress", "opt_bf16", "kvseq", "accum_bf16", "moe_shmap",
+    "jamba_fit", "jamba_fit8", "serve_ep2d", "tuned",
+]
+
+
+@pytest.mark.parametrize("variant", ALL_VARIANTS)
+def test_variants_construct_for_every_arch(variant):
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for entry in ("train", "prefill", "decode"):
+            scfg = DR.default_step_config(cfg, entry, variant)
+            assert scfg.policy in DR.steps_lib.POLICIES
+
+
+def test_unknown_variant_raises():
+    with pytest.raises(KeyError):
+        DR.default_step_config(get_config(ARCHS[0]), "train", "nope")
+
+
+def test_model_flops_sane():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if not shape_supported(cfg, shape)[0]:
+                continue
+            mf = DR.model_flops(cfg, shape)
+            assert mf["n_active"] <= mf["n_params"]
+            assert mf["model_flops"] > 0
+    # MoE: active ≪ total
+    mf = DR.model_flops(get_config("olmoe-1b-7b"), "train_4k")
+    assert mf["n_active"] < 0.3 * mf["n_params"]
+
+
+def test_input_specs_shapes():
+    cfg = get_config("phi4-mini-3.8b")
+    tr = input_specs(cfg, "train_4k")
+    assert tr["batch"]["tokens"].shape == (256, 4096)
+    pf = input_specs(cfg, "prefill_32k")
+    assert pf["tokens"].shape == (32, 32768)
+    dc = input_specs(cfg, "decode_32k")
+    assert dc["token"].shape == (128, 1)
+    assert dc["pos"].shape == ()
+    # decode cache leaves carry the model dtype
+    cs = cache_specs(cfg, 128, 32768)
+    leaves = jax.tree.leaves(cs)
+    assert all(l.dtype == jnp.dtype(cfg.dtype) for l in leaves)
+
+
+def test_frontend_stubs_present():
+    wh = input_specs(get_config("whisper-medium"), "train_4k")
+    assert wh["batch"]["enc_embeds"].shape == (256, 1500, 1024)
+    vl = input_specs(get_config("internvl2-76b"), "train_4k")
+    assert vl["batch"]["prefix_embeds"].shape == (256, 256, 8192)
+
+
+def test_long_500k_applicability():
+    runs = [a for a in ARCHS
+            if shape_supported(get_config(a), "long_500k")[0]]
+    assert sorted(runs) == sorted(
+        ["h2o-danube-3-4b", "mamba2-2.7b", "jamba-1.5-large-398b"])
+
+
+def test_swa_cache_is_window_bounded():
+    cfg = get_config("h2o-danube-3-4b")
+    cs = cache_specs(cfg, 1, 524288)
+    k = cs["u0"]["l0"]["self"]["k"]
+    assert k.shape[2] == cfg.window     # ring buffer, not 524288 slots
+

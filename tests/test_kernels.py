@@ -1,0 +1,239 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py pure-jnp oracles, plus
+hypothesis properties on kernel math invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul import matmul
+from repro.kernels.rms_norm import rms_norm
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             jnp.float32).astype(dtype)
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, Hq, Hkv, Sq, Skv, D, causal, window, bq, bk
+    (2, 4, 2, 256, 256, 64, True, None, 64, 128),
+    (1, 8, 8, 128, 128, 128, True, None, 128, 128),    # MHA
+    (2, 6, 2, 200, 200, 96, True, None, 64, 128),      # ragged + GQA3 + D96
+    (1, 4, 1, 256, 256, 128, True, 64, 64, 128),       # sliding window
+    (1, 2, 2, 64, 512, 128, False, None, 64, 256),     # cross attention
+    (1, 4, 2, 320, 320, 160, True, None, 64, 128),     # stablelm head_dim
+    (1, 32, 32, 128, 128, 96, True, None, 128, 128),   # phi3-like MHA D96
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(case, dtype):
+    B, Hq, Hkv, Sq, Skv, D, causal, window, bq, bk = case
+    q = rand(0, (B, Hq, Sq, D), dtype)
+    k = rand(1, (B, Hkv, Skv, D), dtype)
+    v = rand(2, (B, Hkv, Skv, D), dtype)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        block_q=bq, block_kv=bk)
+    oref = ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(oref, np.float32), atol=tol(dtype))
+
+
+def test_flash_attention_lse():
+    q, k, v = (rand(i, (1, 2, 128, 64), jnp.float32) for i in range(3))
+    o, lse = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64,
+                             return_lse=True)
+    _, lse_ref = ref.attention(q, k, v, causal=True, return_lse=True)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref),
+                               atol=1e-4)
+
+
+def test_flash_block_config_does_not_change_result():
+    """The paper's core premise: configs change speed, never semantics."""
+    q, k, v = (rand(i, (1, 4, 256, 64), jnp.float32) for i in range(3))
+    outs = [flash_attention(q, k, v, block_q=bq, block_kv=bk)
+            for bq, bk in [(64, 128), (128, 128), (256, 256), (64, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    # B, Hq, Hkv, T, D, block_kv, k_splits
+    (2, 4, 2, 512, 64, 128, 2),
+    (1, 8, 8, 300, 128, 128, 4),     # MHA, ragged T
+    (3, 6, 2, 1024, 128, 256, 1),
+    (1, 16, 2, 2048, 64, 512, 8),    # deep GQA, many splits
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_vs_ref(case, dtype):
+    B, Hq, Hkv, T, D, bk, ks = case
+    q = rand(0, (B, Hq, D), dtype)
+    k = rand(1, (B, Hkv, T, D), dtype)
+    v = rand(2, (B, Hkv, T, D), dtype)
+    lens = jax.random.randint(jax.random.PRNGKey(3), (B,), 1, T + 1)
+    o = decode_attention(q, k, v, kv_len=lens, block_kv=bk, k_splits=ks)
+    oref = ref.decode_attention(q, k, v, kv_len=lens)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(oref, np.float32), atol=tol(dtype))
+
+
+def test_decode_ragged_lengths_mask_tail():
+    """Keys beyond kv_len must not influence the output."""
+    B, Hq, Hkv, T, D = 2, 4, 2, 256, 64
+    q = rand(0, (B, Hq, D), jnp.float32)
+    k = rand(1, (B, Hkv, T, D), jnp.float32)
+    v = rand(2, (B, Hkv, T, D), jnp.float32)
+    lens = jnp.array([100, 17], jnp.int32)
+    o1 = decode_attention(q, k, v, kv_len=lens, block_kv=128, k_splits=2)
+    k2 = k.at[:, :, 200:].set(99.0)     # garbage in the masked tail
+    v2 = v.at[:, :, 200:].set(-99.0)
+    o2 = decode_attention(q, k2, v2, kv_len=lens, block_kv=128, k_splits=2)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rms norm + matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,block", [((256, 1024), 64),
+                                         ((100, 3072), 128),
+                                         ((512, 512), 8),
+                                         ((33, 160), 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rms_norm_vs_ref(shape, block, dtype):
+    x = rand(0, shape, dtype)
+    w = rand(1, (shape[-1],), dtype)
+    o = rms_norm(x, w, block_rows=block)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref.rms_norm(x, w), np.float32),
+                               atol=tol(dtype))
+
+
+@pytest.mark.parametrize("mnk,blocks", [((256, 512, 256), (128, 128, 256)),
+                                        ((200, 300, 100), (128, 128, 128)),
+                                        ((64, 64, 64), (128, 128, 128))])
+def test_matmul_vs_ref(mnk, blocks):
+    M, K, N = mnk
+    bm, bn, bk = blocks
+    x = rand(0, (M, K), jnp.float32)
+    y = rand(1, (K, N), jnp.float32)
+    o = matmul(x, y, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref.matmul(x, y)),
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 3), st.integers(1, 4), st.floats(0.1, 10.0))
+@settings(max_examples=10, deadline=None)
+def test_rms_norm_scale_invariance(b, blk_pow, c):
+    """rms_norm(c·x) == rms_norm(x) for c > 0 (degree-0 homogeneity)."""
+    x = rand(b, (32, 128), jnp.float32)
+    w = jnp.ones((128,), jnp.float32)
+    o1 = rms_norm(x, w, block_rows=8 * 2 ** blk_pow)
+    o2 = rms_norm(x * c, w, block_rows=8 * 2 ** blk_pow)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=1e-3)
+
+
+@given(st.integers(0, 5))
+@settings(max_examples=8, deadline=None)
+def test_attention_softmax_shift_invariance(seed):
+    """attention(q, k, v) is invariant to adding a constant to all scores
+    (softmax shift) — uniform scaling of q must equal temperature change,
+    and duplicate keys must average their values."""
+    q = rand(seed, (1, 2, 64, 32), jnp.float32)
+    k = rand(seed + 1, (1, 2, 64, 32), jnp.float32)
+    v = rand(seed + 2, (1, 2, 64, 32), jnp.float32)
+    # duplicate every key/value: output must be identical (weights halve)
+    k2 = jnp.concatenate([k, k], axis=2)
+    v2 = jnp.concatenate([v, v], axis=2)
+    o1 = flash_attention(q, k, v, causal=False, block_q=64, block_kv=64)
+    o2 = flash_attention(q, k2, v2, causal=False, block_q=64, block_kv=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+@given(st.sampled_from([64, 128, 256]), st.sampled_from([128, 256]))
+@settings(max_examples=6, deadline=None)
+def test_matmul_blocks_semantics_free(bm, bk):
+    x = rand(0, (128, 256), jnp.float32)
+    y = rand(1, (256, 128), jnp.float32)
+    o = matmul(x, y, block_m=bm, block_n=128, block_k=bk)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(x @ y), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention backward kernels
+# ---------------------------------------------------------------------------
+
+BWD_CASES = [
+    # B, Hq, Hkv, Sq, Skv, D, causal, window, bq, bk
+    (1, 4, 2, 128, 128, 64, True, None, 64, 128),
+    (2, 2, 2, 200, 200, 64, True, None, 64, 128),
+    (1, 6, 2, 128, 128, 64, True, 48, 64, 128),
+    (1, 2, 1, 64, 256, 64, False, None, 64, 128),
+]
+
+
+@pytest.mark.parametrize("case", BWD_CASES)
+def test_flash_attention_bwd_vs_autodiff(case):
+    from repro.kernels.flash_attention_bwd import flash_attention_bwd
+    B, Hq, Hkv, Sq, Skv, D, causal, window, bq, bk = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D))
+    k = jax.random.normal(ks[1], (B, Hkv, Skv, D))
+    v = jax.random.normal(ks[2], (B, Hkv, Skv, D))
+    do = jax.random.normal(ks[3], (B, Hq, Sq, D))
+    o, lse = flash_attention(q, k, v, causal=causal, window=window,
+                             block_q=bq, block_kv=bk, return_lse=True)
+    dq, dk, dv = flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                     window=window, block_q=bq, block_kv=bk)
+    gq, gk, gv = jax.grad(
+        lambda q_, k_, v_: jnp.sum(ref.attention(
+            q_, k_, v_, causal=causal, window=window) * do),
+        argnums=(0, 1, 2))(q, k, v)
+    for got, want in ((dq, gq), (dk, gk), (dv, gv)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=5e-4)
+
+
+def test_flash_bwd_block_config_semantics_free():
+    from repro.kernels.flash_attention_bwd import flash_attention_bwd
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    do = jax.random.normal(ks[3], (1, 2, 256, 64))
+    o, lse = flash_attention(q, k, v, return_lse=True, block_q=64,
+                             block_kv=128)
+    base = flash_attention_bwd(q, k, v, o, lse, do, block_q=64, block_kv=128)
+    for bq, bk in [(128, 128), (256, 256), (64, 256)]:
+        out = flash_attention_bwd(q, k, v, o, lse, do, block_q=bq,
+                                  block_kv=bk)
+        for a, b in zip(out, base):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)

@@ -1,0 +1,183 @@
+"""Model zoo: per-arch smoke tests (reduced configs, one fwd/train step on
+CPU, shape + finiteness asserts) and impl-equivalence tests."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import (
+    ForwardOpts, decode_step, forward, init, loss_fn, prefill,
+)
+from repro.models import attention as ATT
+from repro.models import mamba2 as MAM
+from repro.models import moe as MOE
+from repro.models.config import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from repro.models.param import init_params, param_count
+from repro.models.lm import lm_specs
+
+
+def _batch(cfg, B=2, S=24, seed=0):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (B, cfg.enc_seq, cfg.d_model))
+    if cfg.n_prefix:
+        batch["prefix_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 2), (B, cfg.n_prefix, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_grad(arch):
+    """One forward + one gradient step on the reduced config: output shapes
+    correct, loss finite, grads finite and nonzero."""
+    cfg = get_config(arch, smoke=True)
+    params = init(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    B, S = batch["tokens"].shape
+
+    logits, _ = forward(params, cfg, batch["tokens"],
+                        prefix_embeds=batch.get("prefix_embeds"),
+                        enc_embeds=batch.get("enc_embeds"))
+    exp_s = S + (cfg.n_prefix if cfg.n_prefix else 0)
+    assert logits.shape == (B, exp_s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, B=1, S=20)
+    toks = batch["tokens"]
+    fkw = {k: batch[k] for k in ("prefix_embeds", "enc_embeds") if k in batch}
+    off = batch["prefix_embeds"].shape[1] if "prefix_embeds" in batch else 0
+    logits, _ = forward(params, cfg, toks, **fkw)
+    lp, cache = prefill(params, cfg, toks[:, :16], max_len=off + 20, **fkw)
+    errs = [float(jnp.max(jnp.abs(lp - logits[:, off + 15])))]
+    for t in range(16, 20):
+        ld, cache = decode_step(params, cfg, toks[:, t:t + 1], cache,
+                                jnp.int32(off + t))
+        errs.append(float(jnp.max(jnp.abs(ld - logits[:, off + t]))))
+    assert max(errs) < 5e-4, f"{arch}: prefill/decode drift {max(errs)}"
+
+
+def test_full_configs_match_published_param_counts():
+    expected = {
+        "phi4-mini-3.8b": 3.8e9, "stablelm-12b": 12.1e9,
+        "h2o-danube-3-4b": 4.0e9, "phi3-mini-3.8b": 3.8e9,
+        "olmoe-1b-7b": 6.9e9, "deepseek-v2-lite-16b": 15.7e9,
+        "whisper-medium": 0.79e9, "internvl2-76b": 70.6e9,
+        "mamba2-2.7b": 2.7e9, "jamba-1.5-large-398b": 398e9,
+    }
+    for arch, want in expected.items():
+        got = param_count(lm_specs(get_config(arch)))
+        assert abs(got - want) / want < 0.05, (arch, got, want)
+
+
+def test_scan_plan_covers_all_layers():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        plan = cfg.scan_plan()
+        assert sum(len(u) * r for u, r in plan) == cfg.n_layers
+        # round-trip: plan expansion == layer kinds
+        flat = [k for u, r in plan for _ in range(r) for k in u]
+        assert flat == cfg.layer_kinds()
+
+
+def test_jamba_pattern_is_1_to_7_with_moe_every_other():
+    cfg = get_config("jamba-1.5-large-398b")
+    kinds = cfg.layer_kinds()
+    assert sum(k.startswith("attn") for k in kinds) == 9       # 72 / 8
+    assert sum(k.endswith("_moe") for k in kinds) == 36        # every 2nd
+
+
+# ---------------------------------------------------------------------------
+# impl equivalence
+# ---------------------------------------------------------------------------
+
+def _qkv(seed=0, B=2, S=128, Hq=8, Hkv=2, D=32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (B, S, Hq, D)),
+            jax.random.normal(ks[1], (B, S, Hkv, D)),
+            jax.random.normal(ks[2], (B, S, Hkv, D)))
+
+
+@pytest.mark.parametrize("window", [None, 48])
+def test_attention_impls_agree(window):
+    q, k, v = _qkv()
+    base = ATT.full_attention(q, k, v, causal=True, window=window)
+    for impl in ("chunked", "triangular", "pallas"):
+        out = ATT.run_attention(q, k, v, impl=impl, causal=True,
+                                window=window, chunk=32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   atol=2e-5, err_msg=impl)
+
+
+def test_attention_grads_agree_across_impls():
+    q, k, v = _qkv(S=64)
+    def loss(impl):
+        return jax.grad(lambda q_: ATT.run_attention(
+            q_, k, v, impl=impl, causal=True, chunk=32).sum())(q)
+    g_full = loss("full")
+    for impl in ("chunked", "pallas", "triangular"):
+        np.testing.assert_allclose(np.asarray(loss(impl)),
+                                   np.asarray(g_full), atol=2e-4,
+                                   err_msg=impl)
+
+
+def test_moe_index_vs_einsum_dispatch():
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=4, head_dim=8, d_ff=64,
+                      vocab_size=100, dtype="float32",
+                      moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=48,
+                                    n_shared_experts=1, capacity_factor=8.0))
+    p = init_params(jax.random.PRNGKey(0), MOE.moe_specs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32))
+    o1, a1 = MOE.apply_moe(p, x, cfg)
+    o2, a2 = MOE.apply_moe_einsum(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    assert abs(float(a1) - float(a2)) < 1e-6
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity factor 1.0 some tokens drop, but the layer stays
+    finite and the load-balance loss is well-defined."""
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=4, head_dim=8, d_ff=64,
+                      vocab_size=100, dtype="float32",
+                      moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=48,
+                                    capacity_factor=1.0))
+    p = init_params(jax.random.PRNGKey(0), MOE.moe_specs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    o, aux = MOE.apply_moe(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(o))) and bool(jnp.isfinite(aux))
+
+
+def test_ssd_chunk_size_semantics_free():
+    """SSD chunk length is an autotunable: it must never change results."""
+    B, S, H, P, N = 1, 64, 2, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    xdt = jax.random.normal(ks[0], (B, S, H, P)) * 0.3
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    B_ = jax.random.normal(ks[2], (B, S, N)) * 0.3
+    C_ = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    y8, st8 = MAM.ssd_chunked(xdt, dA, B_, C_, 8)
+    for chunk in (4, 16, 64):
+        y, st = MAM.ssd_chunked(xdt, dA, B_, C_, chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y8), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(st8),
+                                   atol=1e-4)

@@ -1,0 +1,110 @@
+"""Search strategies (paper Q4.2): correctness + hypothesis invariants."""
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ConfigSpace, EvolutionarySearch, ExhaustiveSearch, Param, RandomSearch,
+    SuccessiveHalving, TuningContext, get_chip, make_strategy,
+)
+
+
+def space():
+    return ConfigSpace("s", [Param("a", (1, 2, 4, 8, 16)),
+                             Param("b", (1, 2, 4, 8))])
+
+
+def ctx():
+    return TuningContext(chip=get_chip("tpu_v5e"), shapes={})
+
+
+def bowl(cfg, fidelity=1):
+    # Smooth landscape, optimum at a=4, b=2.
+    return (cfg["a"] - 4) ** 2 + (cfg["b"] - 2) ** 2 + 0.1
+
+
+def test_exhaustive_finds_optimum():
+    res = ExhaustiveSearch().run(space(), ctx(), bowl)
+    assert res.best == {"a": 4, "b": 2}
+    assert res.evaluations == 20
+
+
+def test_exhaustive_budget_cap():
+    res = ExhaustiveSearch(max_configs=5).run(space(), ctx(), bowl)
+    assert res.evaluations == 5
+
+
+def test_random_budget():
+    res = RandomSearch(budget=10, seed=1).run(space(), ctx(), bowl)
+    assert res.evaluations == 10
+    assert res.best is not None
+
+
+def test_evolutionary_converges_on_smooth_landscape():
+    res = EvolutionarySearch(population=4, generations=8, children=6,
+                             seed=0).run(space(), ctx(), bowl)
+    assert res.best_metric <= 1.2   # at/near the bowl bottom
+    assert res.evaluations < 20     # cheaper than exhaustive (dedup works)
+
+
+def test_successive_halving_raises_fidelity():
+    fidelities = []
+
+    def noisy(cfg, fidelity=1):
+        fidelities.append(fidelity)
+        return bowl(cfg)
+
+    res = SuccessiveHalving(initial=12, rungs=3, base_fidelity=1,
+                            fidelity_mult=4).run(space(), ctx(), noisy)
+    assert res.best is not None
+    assert max(fidelities) >= 4     # survivors re-measured more precisely
+
+
+def test_failed_measurements_are_skipped():
+    def flaky(cfg, fidelity=1):
+        if cfg["a"] == 4:
+            return math.inf
+        return bowl(cfg)
+
+    res = ExhaustiveSearch().run(space(), ctx(), flaky)
+    assert res.best["a"] != 4
+
+
+def test_all_failed_gives_none():
+    res = ExhaustiveSearch().run(space(), ctx(),
+                                 lambda c, fidelity=1: math.inf)
+    assert res.best is None
+
+
+def test_make_strategy_registry():
+    for name in ("exhaustive", "random", "evolutionary",
+                 "successive_halving"):
+        kwargs = {"budget": 4} if name == "random" else {}
+        assert make_strategy(name, **kwargs).name == name
+
+
+@given(st.integers(0, 1000), st.sampled_from(["random", "evolutionary",
+                                              "successive_halving"]))
+@settings(max_examples=25, deadline=None)
+def test_searchers_return_valid_configs(seed, strat_name):
+    sp = space()
+    sp.constrain("a!=8", lambda c, x: c["a"] != 8)
+    kwargs = {"seed": seed}
+    if strat_name == "random":
+        kwargs["budget"] = 6
+    strat = make_strategy(strat_name, **kwargs)
+    res = strat.run(sp, ctx(), bowl)
+    assert res.best is not None
+    assert sp.is_valid(res.best, ctx())
+    # Reported best is the min over everything it measured.
+    measured = [t.metric for t in res.trials if t.ok()]
+    assert math.isclose(res.best_metric, min(measured))
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_search_deterministic_given_seed(seed):
+    a = RandomSearch(budget=8, seed=seed).run(space(), ctx(), bowl)
+    b = RandomSearch(budget=8, seed=seed).run(space(), ctx(), bowl)
+    assert a.best == b.best and a.best_metric == b.best_metric
