@@ -1,0 +1,61 @@
+"""Decode-kernel latency — heuristic vs autotuned across the registry.
+
+The serving hot path is single-token decode; the registry tags every kernel
+that runs there (``scenario="decode"``: GQA flash-decode, ragged GQA, MLA
+latent decode, rms_norm). For each such kernel's host-scale bench case we
+wall-clock the untuned heuristic config (the vendor-default role) against
+the exhaustively tuned winner — the per-kernel analogue of paper Fig. 2's
+"is one hand-picked config competitive?" question, asked across the whole
+decode kernel family instead of a hard-coded list."""
+
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import write_csv
+from repro.core import (
+    Autotuner, ExhaustiveSearch, TuningCache, WallClockTimer, get_chip,
+)
+from repro.kernels.registry import list_kernels
+
+
+def main(fast: bool = True) -> list:
+    chip = get_chip("tpu_v5e")
+    timer = WallClockTimer(reps=3, warmup=1)
+    rows = []
+    for spec in list_kernels(scenario="decode"):
+        if spec.tunable.make_runner is None:
+            print(f"[decode_latency] skip {spec.name}: no runner factory")
+            continue
+        cases = spec.cases(scale="host")
+        if not cases:
+            print(f"[decode_latency] skip {spec.name}: no host bench case")
+            continue
+        for case in cases:
+            ctx = case.context(chip)
+            tuner = Autotuner(
+                cache=TuningCache(tempfile.mkdtemp()), backend=timer,
+                strategy=ExhaustiveSearch(max_configs=6 if fast else None))
+            heur = spec.tunable.default_config(ctx)
+            t_heur = timer.time_runner(spec.tunable.make_runner(heur, ctx))
+            entry = tuner.tune(spec.tunable, ctx)
+            t_tuned = timer.time_runner(
+                spec.tunable.make_runner(entry.config, ctx))
+            rows.append({
+                "kernel": spec.name, "case": case.label,
+                "heuristic_ms": round(t_heur * 1e3, 3),
+                "autotuned_ms": round(t_tuned * 1e3, 3),
+                "tuned_vs_heuristic": round(t_heur / max(t_tuned, 1e-12), 3),
+                "heuristic_config": str(heur),
+                "winner_config": str(entry.config),
+                "n_evaluated": entry.n_evaluated,
+            })
+    path = write_csv("decode_latency", rows, rows[0].keys())
+    print(f"[decode_latency] -> {path}")
+    for r in rows:
+        print("  ", r)
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -26,10 +26,12 @@ from repro.core import (
     Autotuner, ExhaustiveSearch, TuningCache, TuningContext, WallClockTimer,
     get_chip,
 )
-from repro.kernels import ops, ref
+from repro.kernels import ops
+from repro.kernels.registry import get_kernel
 
 
 def main(fast: bool = True) -> list:
+    spec = get_kernel("flash_attention")
     rows = []
     workloads = ATTN_WORKLOADS[:2] if fast else ATTN_WORKLOADS
     manual_configs = [
@@ -49,20 +51,19 @@ def main(fast: bool = True) -> list:
         k = rand(1, (B, Hkv, S, D))
         v = rand(2, (B, Hkv, S, D))
 
-        native = jax.jit(lambda a, b, c: ref.attention(a, b, c, causal=True))
+        native = jax.jit(lambda a, b, c: spec.reference(a, b, c, causal=True))
         t_native = time_fn(lambda: native(q, k, v))
         manual_ts = []
         for cfg in manual_configs:
             fn = jax.jit(functools.partial(
-                ops._flash_dispatch, causal=True, window=None, config=cfg))
+                spec.entry_point, causal=True, config=cfg))
             manual_ts.append(time_fn(lambda fn=fn: fn(q, k, v)))
 
         ctx = ops._ctx(tuner, {"q": q.shape, "k": k.shape}, "float32",
                        causal=True, window=0)
-        entry = tuner.tune(ops.FLASH_ATTENTION, ctx)
+        entry = tuner.tune(spec.tunable, ctx)
         fn = jax.jit(functools.partial(
-            ops._flash_dispatch, causal=True, window=None,
-            config=entry.config))
+            spec.entry_point, causal=True, config=entry.config))
         t_tuned = time_fn(lambda: fn(q, k, v))
 
         rows.append({

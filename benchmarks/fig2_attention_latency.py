@@ -16,7 +16,8 @@ import jax
 
 from benchmarks.common import rand, time_fn, write_csv
 from repro.core import Autotuner, ExhaustiveSearch, TuningCache, WallClockTimer
-from repro.kernels import ops, ref
+from repro.kernels import ops
+from repro.kernels.registry import get_kernel
 
 GRID = [(256, 1), (256, 2), (512, 1), (512, 2), (1024, 1)]
 
@@ -26,23 +27,24 @@ def main(fast: bool = True) -> list:
     tuner = Autotuner(cache=TuningCache(tempfile.mkdtemp()),
                       backend=WallClockTimer(reps=3, warmup=1),
                       strategy=ExhaustiveSearch(max_configs=9))
+    spec = get_kernel("flash_attention")
     rows = []
     base_ms = None
     for S, B in grid:
         Hq, Hkv, D = 4, 1, 128
         q, k, v = (rand(i, (B, h, S, D)) for i, h in
                    enumerate((Hq, Hkv, Hkv)))
-        native = jax.jit(lambda a, b, c: ref.attention(a, b, c, causal=True))
+        native = jax.jit(lambda a, b, c: spec.reference(a, b, c, causal=True))
         t_native = time_fn(lambda: native(q, k, v))
-        heur = ops.FLASH_ATTENTION.heuristic(None)
-        fn_h = jax.jit(functools.partial(ops._flash_dispatch, causal=True,
-                                         window=None, config=heur))
+        heur = spec.tunable.heuristic(None)
+        fn_h = jax.jit(functools.partial(spec.entry_point, causal=True,
+                                         config=heur))
         t_heur = time_fn(lambda: fn_h(q, k, v))
         ctx = ops._ctx(tuner, {"q": q.shape, "k": k.shape}, "float32",
                        causal=True, window=0)
-        entry = tuner.tune(ops.FLASH_ATTENTION, ctx)
-        fn_t = jax.jit(functools.partial(ops._flash_dispatch, causal=True,
-                                         window=None, config=entry.config))
+        entry = tuner.tune(spec.tunable, ctx)
+        fn_t = jax.jit(functools.partial(spec.entry_point, causal=True,
+                                         config=entry.config))
         t_tuned = time_fn(lambda: fn_t(q, k, v))
         if base_ms is None:
             base_ms = t_heur * 1e3

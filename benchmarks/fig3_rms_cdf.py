@@ -14,23 +14,25 @@ import jax
 from benchmarks.common import RMS_WORKLOADS, rand, time_fn, write_csv
 from repro.core import Autotuner, ExhaustiveSearch, TuningCache, WallClockTimer
 from repro.kernels import ops
-from repro.kernels.rms_norm import rms_norm
+from repro.kernels.registry import get_kernel
 
 
 def main(fast: bool = True) -> list:
     shapes = RMS_WORKLOADS[:3] if fast else RMS_WORKLOADS
     tuner = Autotuner(cache=TuningCache(tempfile.mkdtemp()),
                       backend=WallClockTimer(reps=3, warmup=1))
+    spec = get_kernel("rms_norm")
     rows = []
     for name, N, D in shapes:
         x = rand(0, (N, D))
         w = rand(1, (D,))
-        heur = {"block_rows": 128}
-        fn_h = jax.jit(functools.partial(rms_norm, **heur))
+        heur = spec.tunable.heuristic(None)
+        fn_h = jax.jit(functools.partial(spec.entry_point, config=heur))
         t_h = time_fn(lambda: fn_h(x, w))
         ctx = ops._ctx(tuner, {"x": x.shape}, "float32")
-        entry = tuner.tune(ops.RMS_NORM, ctx)
-        fn_t = jax.jit(functools.partial(rms_norm, **entry.config))
+        entry = tuner.tune(spec.tunable, ctx)
+        fn_t = jax.jit(functools.partial(spec.entry_point,
+                                         config=entry.config))
         t_t = time_fn(lambda: fn_t(x, w))
         rows.append({
             "shape": name,

@@ -21,7 +21,7 @@ from benchmarks.common import write_csv
 from repro.core import (
     AnalyticalMeasure, Autotuner, TuningCache, TuningContext, get_chip,
 )
-from repro.kernels import ops
+from repro.kernels.registry import get_kernel
 
 # cpu_host (8 MiB VMEM budget) plays the "very different platform" role:
 # big-chip configs are INVALID there, reproducing the paper's missing bars.
@@ -30,7 +30,7 @@ SHAPE = {"q": (8, 32, 4096, 256), "k": (8, 8, 4096, 256)}
 
 
 def main(fast: bool = True) -> list:
-    kernel = ops.FLASH_ATTENTION
+    kernel = get_kernel("flash_attention").tunable
     best, evalf = {}, {}
     for chip in CHIPS:
         t = Autotuner(cache=TuningCache(tempfile.mkdtemp()),

@@ -1,94 +1,90 @@
 """Paper Fig. 5 — code-diversity analysis of autotuning-explored variants.
 
 The paper counted unique PTX instructions and .cubin sizes across all 450
-Triton configs vs 30 CUDA templates. The JAX/Pallas analogue: for every
-valid flash-attention config, lower the kernel and measure
+Triton configs vs 30 CUDA templates. The JAX/Pallas analogue, generalized
+over every kernel in the registry (no hard-coded kernel list): for each
+registered kernel's canonical host-scale workload, lower every sampled
+valid config and measure
   * unique StableHLO op kinds (≈ unique instruction mnemonics),
   * total lowered ops (≈ code size),
   * the declared VMEM working set (the paper's occupancy-side diversity).
-The "template library" comparison set is the 5 hand-picked manual configs
-from fig1 — autotuning explores a strictly larger, more diverse space
-(the paper's 15× claim is checked in derived stats)."""
+The "template library" comparison is each kernel's single heuristic config
+(the vendor-default role) — autotuning explores a strictly larger, more
+diverse space per kernel."""
 
 from __future__ import annotations
 
-import collections
-import functools
 import re
-import tempfile
 
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import rand, write_csv
-from repro.core import TuningContext, get_chip
-from repro.kernels import ops
-from repro.kernels.flash_attention import flash_attention
+from benchmarks.common import write_csv
+from repro.core import get_chip
+from repro.kernels.registry import list_kernels
 
 
-def lowered_stats(q, k, v, cfg):
-    fn = jax.jit(functools.partial(
-        ops._flash_dispatch, causal=True, window=None, config=cfg))
-    txt = fn.lower(q, k, v).as_text()
+def lowered_stats(runner) -> tuple:
+    txt = runner.lowered_text()
     opcodes = re.findall(r"=\s*\"?([a-z_][\w\.]*)\"?\(", txt)
     ops_all = [o for o in opcodes if not o.startswith("func")]
     return len(set(ops_all)), len(ops_all)
 
 
 def main(fast: bool = True) -> list:
-    B, Hq, Hkv, S, D = 1, 4, 1, 512, 128
-    q, k, v = (rand(i, (B, h, S, D)) for i, h in enumerate((Hq, Hkv, Hkv)))
     chip = get_chip("tpu_v5e")
-    ctx = TuningContext(chip=chip, shapes={"q": q.shape, "k": k.shape},
-                        dtype="float32", extra={"causal": True, "window": 0})
-    space = ops.FLASH_ATTENTION.space
-    valid = space.valid_configs(ctx)
-    if fast:
-        valid = valid[::4]
-    manual = [{"block_q": 64, "block_kv": 128, "pad_head_dim": False},
-              {"block_q": 128, "block_kv": 128, "pad_head_dim": False},
-              {"block_q": 256, "block_kv": 256, "pad_head_dim": False}]
-
-    rows = []
-    for group, cfgs in (("autotuning_space", valid), ("templates", manual)):
-        for cfg in cfgs:
-            uniq, total = lowered_stats(q, k, v, cfg)
-            vmem = ops._flash_vmem(cfg, ctx)
-            w = ops._flash_workload(cfg, ctx)
-            # executed-op proxy ≈ .cubin-size analogue: the grid iteration
-            # count is what loop unrolling/pipelining trades against.
-            rows.append({"group": group, "config": str(cfg),
-                         "unique_ops": uniq, "total_ops": total,
-                         "grid_steps": w.grid_steps,
-                         "executed_ops": total * w.grid_steps,
-                         "vmem_bytes": vmem})
-    auto = [r for r in rows if r["group"] == "autotuning_space"]
-    tmpl = [r for r in rows if r["group"] == "templates"]
-    derived = {
-        "explored_configs": len(auto),
-        "template_configs": len(tmpl),
-        "exploration_ratio": round(
-            space.cardinality / max(len(tmpl), 1), 1),
-        "vmem_spread_auto": round(
-            max(r["vmem_bytes"] for r in auto) /
-            min(r["vmem_bytes"] for r in auto), 1),
-        "vmem_spread_templates": round(
-            max(r["vmem_bytes"] for r in tmpl) /
-            min(r["vmem_bytes"] for r in tmpl), 1),
-        "total_ops_spread_auto": round(
-            max(r["total_ops"] for r in auto) /
-            max(1, min(r["total_ops"] for r in auto)), 2),
-        "executed_ops_spread_auto": round(
-            max(r["executed_ops"] for r in auto) /
-            max(1, min(r["executed_ops"] for r in auto)), 1),
-        "executed_ops_spread_templates": round(
-            max(r["executed_ops"] for r in tmpl) /
-            max(1, min(r["executed_ops"] for r in tmpl)), 1),
-    }
+    max_cfgs = 8 if fast else 32
+    rows, derived = [], []
+    for spec in list_kernels():
+        if spec.tunable.make_runner is None:
+            print(f"[fig5] skip {spec.name}: no runner factory")
+            continue
+        cases = spec.cases(scale="host")
+        if not cases:
+            print(f"[fig5] skip {spec.name}: no host-scale bench case")
+            continue
+        case = cases[0]
+        ctx = case.context(chip)
+        valid = spec.space.valid_configs(ctx)
+        stride = max(1, -(-len(valid) // max_cfgs))
+        sampled = valid[::stride]
+        if len(sampled) < len(valid):
+            print(f"[fig5] {spec.name}: sampling {len(sampled)}/{len(valid)} "
+                  "valid configs (use --full for denser coverage)")
+        heuristic = spec.tunable.default_config(ctx)
+        for group, cfgs in (("autotuning_space", sampled),
+                            ("heuristic_template", [heuristic])):
+            for cfg in cfgs:
+                runner = spec.tunable.make_runner(cfg, ctx)
+                uniq, total = lowered_stats(runner)
+                w = spec.tunable.workload_fn(cfg, ctx)
+                # executed-op proxy ≈ .cubin-size analogue: the grid
+                # iteration count is what unrolling/pipelining trades against
+                rows.append({"kernel": spec.name, "case": case.label,
+                             "group": group, "config": str(cfg),
+                             "unique_ops": uniq, "total_ops": total,
+                             "grid_steps": w.grid_steps,
+                             "executed_ops": total * w.grid_steps,
+                             "vmem_bytes": w.vmem_bytes})
+        auto = [r for r in rows
+                if r["kernel"] == spec.name and r["group"] == "autotuning_space"]
+        derived.append({
+            "kernel": spec.name,
+            "explored_configs": len(auto),
+            "space_cardinality": spec.space.cardinality,
+            "space_valid": len(valid),
+            "vmem_spread": round(
+                max(r["vmem_bytes"] for r in auto) /
+                max(1, min(r["vmem_bytes"] for r in auto)), 1),
+            "total_ops_spread": round(
+                max(r["total_ops"] for r in auto) /
+                max(1, min(r["total_ops"] for r in auto)), 2),
+            "executed_ops_spread": round(
+                max(r["executed_ops"] for r in auto) /
+                max(1, min(r["executed_ops"] for r in auto)), 1),
+        })
     path = write_csv("fig5_config_diversity", rows, rows[0].keys())
     print(f"[fig5] -> {path}")
-    print("  derived:", derived)
-    return [derived]
+    for d in derived:
+        print("  derived:", d)
+    return derived
 
 
 if __name__ == "__main__":

@@ -22,9 +22,9 @@ def main() -> None:
     fast = not args.full
 
     from benchmarks import (
-        fig1_attention_portability, fig2_attention_latency, fig3_rms_cdf,
-        fig4_config_transfer, fig5_config_diversity, roofline_report,
-        search_efficiency, tab1_loc,
+        decode_latency, fig1_attention_portability, fig2_attention_latency,
+        fig3_rms_cdf, fig4_config_transfer, fig5_config_diversity,
+        roofline_report, search_efficiency, tab1_loc,
     )
     benches = [
         ("fig1_attention_portability", fig1_attention_portability.main),
@@ -32,6 +32,7 @@ def main() -> None:
         ("fig3_rms_cdf", fig3_rms_cdf.main),
         ("fig4_config_transfer", fig4_config_transfer.main),
         ("fig5_config_diversity", fig5_config_diversity.main),
+        ("decode_latency", decode_latency.main),
         ("tab1_loc", tab1_loc.main),
         ("search_efficiency", search_efficiency.main),
         ("roofline_report", roofline_report.main),

@@ -2,29 +2,28 @@
 within 5% of the space optimum (the Triton autotuner is exhaustive-only; the
 paper calls for better).
 
-Deterministic analytical backend ⇒ reproducible counts."""
+Scenarios come from the registry: every kernel's paper-scale bench cases
+(production shapes, analytical backend). Deterministic ⇒ reproducible
+counts."""
 
 from __future__ import annotations
 
 import math
-import tempfile
 
 from benchmarks.common import write_csv
 from repro.core import (
     AnalyticalMeasure, EvolutionarySearch, ExhaustiveSearch, RandomSearch,
-    SuccessiveHalving, TuningContext, get_chip,
+    SuccessiveHalving, get_chip,
 )
-from repro.kernels import ops
+from repro.kernels.registry import list_kernels
 
-SCENARIOS = [
-    ("flash/train4k", ops.FLASH_ATTENTION,
-     {"q": (8, 32, 4096, 128), "k": (8, 8, 4096, 128)}),
-    ("flash/prefill32k", ops.FLASH_ATTENTION,
-     {"q": (1, 32, 32768, 128), "k": (1, 8, 32768, 128)}),
-    ("decode/32k", ops.DECODE_ATTENTION,
-     {"q": (4, 32, 128), "k": (4, 8, 32768, 128)}),
-    ("matmul/8k", ops.MATMUL, {"x": (8192, 8192), "y": (8192, 8192)}),
-]
+
+def scenarios():
+    for spec in list_kernels():
+        if spec.tunable.workload_fn is None:
+            continue
+        for case in spec.cases(scale="paper"):
+            yield f"{spec.name}/{case.label}", spec.tunable, case
 
 
 def evals_to_within(trials, target, tol=1.05):
@@ -40,10 +39,12 @@ def evals_to_within(trials, target, tol=1.05):
 def main(fast: bool = True) -> list:
     chip = get_chip("tpu_v5e")
     rows = []
-    scenarios = SCENARIOS[:2] if fast else SCENARIOS
-    for name, kernel, shapes in scenarios:
-        ctx = TuningContext(chip=chip, shapes=shapes, dtype="bfloat16",
-                            extra={"causal": True, "window": 0})
+    cases = list(scenarios())
+    if fast:
+        print(f"[search_efficiency] fast: first 3 of {len(cases)} scenarios")
+        cases = cases[:3]
+    for name, kernel, case in cases:
+        ctx = case.context(chip)
         ev = AnalyticalMeasure(chip).evaluator(kernel, ctx)
         ex = ExhaustiveSearch().run(kernel.space, ctx, ev)
         target = ex.best_metric

@@ -16,11 +16,11 @@ from repro.core import (
     AnalyticalMeasure, Autotuner, ExhaustiveSearch, SuccessiveHalving,
     TuningCache, TuningContext, WallClockTimer, get_chip,
 )
-from repro.kernels import ops
+from repro.kernels.registry import get_kernel
 
 
 def main():
-    kernel = ops.MATMUL
+    kernel = get_kernel("matmul").tunable
     shapes = {"x": (4096, 8192), "y": (8192, 4096)}
 
     print("=== analytical tuning per TPU generation ===")

@@ -47,7 +47,7 @@ def main():
                             shapes={"q": (8, 32, 4096, 256),
                                     "k": (8, 8, 4096, 256)},
                             dtype="bfloat16", extra={"causal": True})
-        e = t.tune(ops.FLASH_ATTENTION, ctx)
+        e = t.tune("flash_attention", ctx)   # resolved via the registry
         print(f"{chip}: best config {e.config} "
               f"(modelled {e.metric*1e3:.2f} ms, {e.n_evaluated} configs)")
 

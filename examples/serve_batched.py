@@ -30,12 +30,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--arch", default="h2o-danube-3-4b")
+    ap.add_argument("--decode-impl", choices=("full", "pallas"),
+                    default="full",
+                    help="pallas = autotuned registry decode kernels")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)   # reduced config on CPU
     mesh = make_local_mesh()
-    scfg = steps_lib.StepConfig(policy="serve_tp",
-                                opts=lm.ForwardOpts(attn_chunk=64))
+    scfg = steps_lib.StepConfig(
+        policy="serve_tp",
+        opts=lm.ForwardOpts(attn_chunk=64, decode_impl=args.decode_impl))
     params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
 
     B, P, G = args.requests, args.prompt_len, args.gen
@@ -69,6 +73,58 @@ def main():
     print(f"sample continuation (request 0): {gen[0][:12].tolist()}")
     assert gen.shape == (B, G - 1) or gen.shape == (B, G)
     assert np.all(gen >= 0) and np.all(gen < cfg.vocab_size)
+
+    ragged_kernel_report(cfg, B, max_len)
+
+
+def ragged_kernel_report(cfg, batch: int, max_len: int):
+    """Registry-driven view of the decode hot path: for each decode-scenario
+    kernel, tune this serve shape (ragged per-request fills) and validate
+    the winner against the kernel's ref.py oracle."""
+    from repro.core import default_tuner
+    from repro.kernels import ops
+    from repro.kernels.registry import list_kernels
+
+    tuner = default_tuner()
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rng = np.random.default_rng(1)
+    lens = jnp.asarray(rng.integers(1, max_len + 1, size=batch), jnp.int32)
+    print(f"\nregistry decode kernels @ B={batch} T={max_len} "
+          f"(ragged fills {lens.tolist()}):")
+    for spec in list_kernels(scenario="decode"):
+        if spec.name == "gqa_decode_ragged":
+            q = jnp.asarray(rng.standard_normal((batch, hq, dh)), jnp.float32)
+            k = jnp.asarray(
+                rng.standard_normal((batch, hkv, max_len, dh)), jnp.float32)
+            v = jnp.asarray(
+                rng.standard_normal((batch, hkv, max_len, dh)), jnp.float32)
+            ctx = ops._ctx(tuner, {"q": q.shape, "k": k.shape}, "float32")
+            best = tuner.best_config(spec.tunable, ctx)
+            out = spec.entry_point(q, k, v, kv_len=lens, config=best)
+            err = float(jnp.max(jnp.abs(
+                out - spec.reference(q, k, v, kv_len=lens))))
+        elif spec.name == "mla_decode" and cfg.mla is not None:
+            m = cfg.mla
+            qa = jnp.asarray(
+                rng.standard_normal((batch, hq, m.kv_lora_rank)), jnp.float32)
+            qr = jnp.asarray(
+                rng.standard_normal((batch, hq, m.qk_rope_dim)), jnp.float32)
+            ckv = jnp.asarray(rng.standard_normal(
+                (batch, max_len, m.kv_lora_rank)), jnp.float32)
+            kr = jnp.asarray(rng.standard_normal(
+                (batch, max_len, m.qk_rope_dim)), jnp.float32)
+            ctx = ops._ctx(tuner, {"q_abs": qa.shape, "q_rope": qr.shape,
+                                   "ckv": ckv.shape, "krope": kr.shape},
+                           "float32")
+            best = tuner.best_config(spec.tunable, ctx)
+            scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+            out = spec.entry_point(qa, qr, ckv, kr, kv_len=lens, scale=scale,
+                                   config=best)
+            err = float(jnp.max(jnp.abs(spec.reference(
+                qa, qr, ckv, kr, kv_len=lens, scale=scale) - out)))
+        else:
+            continue
+        print(f"  {spec.name:<20} config={best}  max|err vs oracle|={err:.2e}")
 
 
 if __name__ == "__main__":

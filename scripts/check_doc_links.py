@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Doc-link checker: fail on references to files that do not exist.
+
+Guards against "DESIGN.md §2"-style dangling citations (the seed repo cited
+a DESIGN.md that was never written). Two scans:
+
+  1. Markdown files: every markdown link target and every backticked
+     path-looking token (``src/...``, ``docs/*.md``, ``benchmarks/fig5_*``)
+     must resolve relative to the repo root or the file's directory.
+  2. Python sources (src/, benchmarks/, examples/, tests/, scripts/):
+     every ``*.md`` file mentioned in comments/docstrings must exist.
+
+Exit code 0 = clean; 1 = dangling references (listed on stderr).
+
+Run:  python scripts/check_doc_links.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
+PY_DIRS = ("src", "benchmarks", "examples", "tests", "scripts")
+SKIP_DIRS = {".git", ".github", "results", "__pycache__", ".pytest_cache"}
+# ISSUE.md is the (transient) driver task file; results/ paths are generated
+# benchmark artifacts that need not exist in a fresh checkout.
+SKIP_FILES = {"ISSUE.md"}
+GENERATED_PREFIXES = ("results/",)
+
+# path-looking tokens we validate: contain a slash or end in a known
+# extension; URLs, globs, and placeholders are exempt.
+EXTS = (".md", ".py", ".json", ".yml", ".yaml", ".txt", ".csv")
+MD_LINK = re.compile(r"\]\(([^)#?\s]+)")
+BACKTICK = re.compile(r"`([^`\s]+)`")
+PY_MD_REF = re.compile(r"[A-Za-z0-9_./-]*[A-Za-z0-9_-]\.md")
+
+
+def is_checkable(tok: str) -> bool:
+    if tok.startswith(("http://", "https://", "mailto:", "#", "$")):
+        return False
+    if any(c in tok for c in "*<>{}$@=,"):
+        return False
+    if tok.startswith(GENERATED_PREFIXES):
+        return False
+    if not tok.endswith(EXTS):
+        return False
+    # require a path-ish token: either a slash or a known doc at repo root
+    return "/" in tok or tok[0].isupper() or tok.islower()
+
+
+def resolves(tok: str, base_dir: str) -> bool:
+    tok = tok.rstrip(".,;:")
+    for root in (REPO, base_dir):
+        if os.path.exists(os.path.normpath(os.path.join(root, tok))):
+            return True
+    return False
+
+
+def iter_files():
+    for dirpath, dirnames, filenames in os.walk(REPO):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        rel = os.path.relpath(dirpath, REPO)
+        for fn in filenames:
+            if fn in SKIP_FILES:
+                continue
+            if fn.endswith(".md"):
+                yield "md", os.path.join(dirpath, fn)
+            elif fn.endswith(".py") and (
+                    rel == "." or rel.split(os.sep)[0] in PY_DIRS):
+                yield "py", os.path.join(dirpath, fn)
+
+
+def check() -> list:
+    problems = []
+    for kind, path in iter_files():
+        base = os.path.dirname(path)
+        rel = os.path.relpath(path, REPO)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        if kind == "md":
+            tokens = MD_LINK.findall(text) + [
+                t for t in BACKTICK.findall(text) if is_checkable(t)]
+        else:
+            tokens = PY_MD_REF.findall(text)
+        for tok in tokens:
+            if tok.startswith(GENERATED_PREFIXES):
+                continue
+            if kind == "md" and not is_checkable(tok):
+                continue
+            if not resolves(tok, base):
+                problems.append(f"{rel}: dangling reference {tok!r}")
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    if problems:
+        print(f"{len(problems)} dangling doc reference(s):", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print("doc links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

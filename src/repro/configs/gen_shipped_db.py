@@ -18,14 +18,18 @@ from repro.core import (
     AnalyticalMeasure, Autotuner, TuningCache, TuningContext, get_chip,
 )
 from repro.core.cache import cache_key
-from repro.kernels import ops
+from repro.kernels.registry import get_kernel
 
 CHIPS = ("tpu_v4", "tpu_v5e", "tpu_v5p", "tpu_v6e")
 OUT = os.path.join(os.path.dirname(__file__), "shipped_tuning_db.json")
 
 
 def scenarios():
-    """Representative (kernel, shapes, extra) per arch × serving context."""
+    """Representative (kernel, shapes, extra) per arch × serving context.
+
+    Kernels resolve through the registry; every arch contributes its
+    prefill, dense decode, ragged serving decode, and (for MLA archs) the
+    latent-cache decode scenario."""
     seen = set()
     for arch in ARCHS:
         cfg = get_config(arch)
@@ -37,13 +41,25 @@ def scenarios():
             if key in seen:
                 continue
             seen.add(key)
-            yield (ops.FLASH_ATTENTION,
+            yield ("flash_attention",
                    {"q": (b, hq, s, dh), "k": (b, hkv, s, dh)},
                    {"causal": True, "window": cfg.window or 0})
-        yield (ops.DECODE_ATTENTION,
+        yield ("decode_attention",
                {"q": (16, hq, dh), "k": (16, hkv, 32768, dh)}, {})
-        yield (ops.RMS_NORM, {"x": (8192, cfg.d_model)}, {})
-    yield (ops.MATMUL, {"x": (8192, 8192), "y": (8192, 8192)}, {})
+        # No "fill" extra here: the runtime lookup in ops.ragged_decode
+        # builds its context without extras, and extras are part of the
+        # cache key — a fill-tagged entry would never be hit at serve time.
+        yield ("gqa_decode_ragged",
+               {"q": (16, hq, dh), "k": (16, hkv, 32768, dh)}, {})
+        if cfg.mla is not None:
+            m = cfg.mla
+            yield ("mla_decode",
+                   {"q_abs": (16, hq, m.kv_lora_rank),
+                    "q_rope": (16, hq, m.qk_rope_dim),
+                    "ckv": (16, 32768, m.kv_lora_rank),
+                    "krope": (16, 32768, m.qk_rope_dim)}, {})
+        yield ("rms_norm", {"x": (8192, cfg.d_model)}, {})
+    yield ("matmul", {"x": (8192, 8192), "y": (8192, 8192)}, {})
 
 
 def main():
@@ -54,7 +70,8 @@ def main():
         tuner = Autotuner(cache=TuningCache(cache_dir="/tmp/_shipped_tmp"),
                           backend=AnalyticalMeasure(chip))
         tuner.cache.clear()
-        for kernel, shapes, extra in scenarios():
+        for name, shapes, extra in scenarios():
+            kernel = get_kernel(name).tunable
             ctx = TuningContext(chip=chip, shapes=shapes, dtype="bfloat16",
                                 extra=extra)
             try:

@@ -17,7 +17,8 @@ from repro.core.costmodel import (  # noqa: F401
 )
 from repro.core.cache import TuningCache, CacheEntry  # noqa: F401
 from repro.core.measure import (  # noqa: F401
-    AnalyticalMeasure, HybridMeasure, MeasureBackend, WallClockTimer,
+    AnalyticalMeasure, HybridMeasure, KernelRunner, MeasureBackend,
+    WallClockTimer,
 )
 from repro.core.search import (  # noqa: F401
     EvolutionarySearch, ExhaustiveSearch, RandomSearch, SearchResult,

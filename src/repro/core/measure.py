@@ -36,6 +36,27 @@ RunnerFactory = Callable[[Config, TuningContext], Callable[[], Any]]
 WorkloadFn = Callable[[Config, TuningContext], "KernelWorkload"]  # noqa: F821
 
 
+class KernelRunner:
+    """Zero-arg runner that keeps (fn, args) inspectable.
+
+    Timing backends just call it; registry-driven analyses (fig5 code
+    diversity) additionally use ``.fn``/``.args``/``.kwargs`` to lower the
+    jitted fn against the real operands without baking them into the trace
+    as constants. Runner factories in kernels/ops.py return these.
+    """
+
+    def __init__(self, fn: Callable[..., Any], *args: Any, **kwargs: Any):
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs
+
+    def __call__(self) -> Any:
+        return self.fn(*self.args, **self.kwargs)
+
+    def lowered_text(self) -> str:
+        return self.fn.lower(*self.args, **self.kwargs).as_text()
+
+
 class MeasureBackend:
     name = "base"
 

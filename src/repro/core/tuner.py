@@ -9,6 +9,11 @@ A ``TunableKernel`` bundles everything the tuner needs:
   * ``heuristic``    — optional untuned default (the "vendor heuristic"
                        baseline the paper compares against).
 
+Kernels are usually resolved through the kernel registry
+(``repro.kernels.registry``): ``tune``/``best_config`` accept either a
+``TunableKernel`` or a registered kernel *name*, so callers can say
+``tuner.best_config("mla_decode", ctx)`` without importing kernel modules.
+
 ``Autotuner.best_config`` is the JIT entry point used by kernels' ops.py at
 call time:
 
@@ -100,10 +105,21 @@ class Autotuner:
         self.stats = {"hits": 0, "misses": 0, "tunes": 0, "heuristic_uses": 0}
 
     # -- core API ----------------------------------------------------------
-    def tune(self, kernel: TunableKernel, ctx: TuningContext,
+    @staticmethod
+    def resolve(kernel) -> TunableKernel:
+        """Accept a TunableKernel or a registry name (registry-driven
+        construction: the registry is the only kernel enumeration point)."""
+        if isinstance(kernel, str):
+            from repro.kernels.registry import get_kernel
+            return get_kernel(kernel).tunable
+        return kernel
+
+    def tune(self, kernel, ctx: TuningContext,
              strategy: Optional[search_lib.SearchStrategy] = None
              ) -> cache_lib.CacheEntry:
-        """Run the search now and persist the winner."""
+        """Run the search now and persist the winner. ``kernel`` may be a
+        TunableKernel or a registered kernel name."""
+        kernel = self.resolve(kernel)
         strat = strategy or self.strategy
         evaluate = self.backend.evaluator(kernel, ctx)
         result = strat.run(kernel.space, ctx, evaluate)
@@ -126,7 +142,8 @@ class Autotuner:
                  entry.n_evaluated)
         return entry
 
-    def best_config(self, kernel: TunableKernel, ctx: TuningContext) -> Config:
+    def best_config(self, kernel, ctx: TuningContext) -> Config:
+        kernel = self.resolve(kernel)
         entry = self.cache.get(
             kernel.name, kernel.version, kernel.space, ctx,
             require_fingerprint={"backend": self.backend.name})

@@ -1,17 +1,33 @@
 """Pallas TPU kernels for the paper's performance-critical LLM hot spots.
 
 Layout per the repo convention:
-    flash_attention.py / decode_attention.py / rms_norm.py / matmul.py
+    flash_attention.py / flash_attention_bwd.py / decode_attention.py /
+    gqa_decode.py / mla_decode.py / rms_norm.py / matmul.py
         — pl.pallas_call + BlockSpec kernel bodies
-    ops.py  — autotuned jit'd public wrappers (ConfigSpaces + workloads)
-    ref.py  — pure-jnp oracles
+    ops.py      — autotuned jit'd public wrappers: per-kernel ConfigSpaces,
+                  analytical workloads, runner factories, heuristics, and
+                  the ``register()`` calls that publish each kernel
+    registry.py — the declarative kernel registry (KernelSpec: tunable +
+                  scenario tags + oracle + entry point + bench cases);
+                  every consumer enumerates kernels through it
+    ref.py      — pure-jnp oracles
+
+Adding a kernel is a drop-in: write the kernel body module, declare its
+ConfigSpace/workload/runner in ops.py, and ``register()`` it — the tuner,
+tests, benchmarks, and serving pick it up with no further wiring
+(DESIGN.md §1).
 
 All kernels run under interpret=True on this CPU container (validated
 against ref.py in tests/); on a TPU host the same calls lower via Mosaic.
 """
 
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops, ref, registry  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
-    ALL_KERNELS, DECODE_ATTENTION, FLASH_ATTENTION, MATMUL, RMS_NORM,
-    attention, decode, matmul, rmsnorm,
+    DECODE_ATTENTION, FLASH_ATTENTION, FLASH_ATTENTION_BWD,
+    GQA_DECODE_RAGGED, MATMUL, MLA_DECODE, RMS_NORM,
+    attention, decode, latent_decode, matmul, ragged_decode, rmsnorm,
+)
+from repro.kernels.registry import (  # noqa: F401
+    BenchCase, KernelSpec, get_kernel, kernel_names, list_kernels, register,
+    unregister,
 )

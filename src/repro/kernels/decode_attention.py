@@ -50,9 +50,12 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref,     # inputs
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    kv_len = len_ref[0, 0]
+    # Clamp to the physical cache length: a caller may pass kv_len > T
+    # (e.g. decode position past a full cache — "attend everything"), and
+    # rows in [T, t_pad) are zero padding that must never score.
+    kv_len = jnp.minimum(len_ref[0, 0], seq_kv)
     k_start = (si * blocks_per_split + bi) * block_kv
-    run = k_start < jnp.minimum(kv_len, seq_kv)
+    run = k_start < kv_len
 
     @pl.when(run)
     def _body():

@@ -8,13 +8,22 @@ autotuner: for each kernel it declares
   * a ``make_runner`` factory for wall-clock tuning (interpret-mode on this
     container, real kernels on a TPU host),
   * a ``heuristic`` — the untuned "pick something reasonable" default that
-    plays the role of the paper's vendor/template baseline configuration.
+    plays the role of the paper's vendor/template baseline configuration,
 
-Public entry points (``attention``, ``decode``, ``rmsnorm``, ``matmul``)
-look up the best known config from the process tuner (persistent-cache hit,
-JIT tune, or heuristic + background enqueue, per policy) and dispatch.
-Every entry point accepts ``config=`` to bypass tuning (used by benchmarks
-that sweep configs explicitly, reproducing the paper's Fig. 4/5 analyses).
+and then **registers** the kernel in ``repro.kernels.registry`` together
+with its scenario tags (prefill / decode / gqa / mla / ...), its ``ref.py``
+oracle, its public entry point, and canonical benchmark cases. The registry
+is the single enumeration point — the tuner, benchmarks, serving launcher,
+and model layers all discover kernels through it (see DESIGN.md §1);
+nothing else keeps a kernel list.
+
+Public entry points (``attention``, ``decode``, ``ragged_decode``,
+``latent_decode``, ``rmsnorm``, ``matmul``; entry names differ from their
+kernel-body module names so the package namespace never collides) look up the best known config from
+the process tuner (persistent-cache hit, JIT tune, or heuristic +
+background enqueue, per policy) and dispatch. Every entry point accepts
+``config=`` to bypass tuning (used by benchmarks that sweep configs
+explicitly, reproducing the paper's Fig. 4/5 analyses).
 """
 
 from __future__ import annotations
@@ -27,8 +36,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    Autotuner, Config, ConfigSpace, KernelWorkload, MatmulShape, Param,
-    TunableKernel, TuningContext, default_tuner,
+    Autotuner, Config, ConfigSpace, KernelRunner, KernelWorkload,
+    MatmulShape, Param, TunableKernel, TuningContext, default_tuner,
 )
 from repro.core.config_space import dtype_bytes, vmem_fits
 
@@ -134,7 +143,7 @@ def _flash_runner(cfg: Config, ctx: TuningContext):
     fn = jax.jit(functools.partial(
         _flash_dispatch, causal=bool(ctx.extra.get("causal", True)),
         window=ctx.extra.get("window") or None, config=dict(cfg)))
-    return lambda: fn(q, k, v)
+    return KernelRunner(fn, q, k, v)
 
 
 def _flash_dispatch(q, k, v, *, causal, window, config, q_offset=0,
@@ -329,7 +338,7 @@ def _decode_runner(cfg: Config, ctx: TuningContext):
     v = _rand(keys[2], k_s, dtype)
     from repro.kernels.decode_attention import decode_attention
     fn = jax.jit(functools.partial(decode_attention, **cfg))
-    return lambda: fn(q, k, v)
+    return KernelRunner(fn, q, k, v)
 
 
 DECODE_ATTENTION = TunableKernel(
@@ -352,6 +361,217 @@ def decode(q, k, v, *, kv_len=None, config: Optional[Config] = None,
         config = tuner.best_config(DECODE_ATTENTION, ctx)
     return decode_attention(q, k, v, kv_len=kv_len, interpret=interpret,
                             **config)
+
+
+# ===========================================================================
+# Ragged GQA decode (variable per-sequence KV lengths — serving hot path)
+# ===========================================================================
+
+def _gqa_decode_vmem(cfg: Config, ctx: TuningContext) -> int:
+    B, Hq, D = ctx.shape("q")
+    Hkv = ctx.shape("k")[1]
+    g = max(1, Hq // Hkv) if cfg.get("pack_gqa", True) else 1
+    ib = dtype_bytes(ctx.dtype)
+    bk = cfg["block_kv"]
+    buf = 2 * (2 * bk * D * ib + g * D * ib)
+    scratch = g * D * 4 + 2 * g * LANES * 4
+    out = 2 * (g * D * 4 + g * LANES * 4)
+    return buf + scratch + out
+
+
+def gqa_decode_space() -> ConfigSpace:
+    sp = ConfigSpace(
+        "gqa_decode_ragged",
+        [
+            Param("block_kv", (128, 256, 512, 1024, 2048)),
+            Param("k_splits", (1, 2, 4, 8, 16, 32)),
+            Param("pack_gqa", (True, False)),
+        ],
+        version=1,
+    )
+    sp.constrain("vmem", vmem_fits(_gqa_decode_vmem))
+    sp.constrain(
+        "splits<=blocks",
+        lambda c, x: c["k_splits"] <= max(1, _cdiv(x.shape("k")[2],
+                                                   c["block_kv"])))
+    return sp
+
+
+def _gqa_decode_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
+    B, Hq, D = ctx.shape("q")
+    _, Hkv, T, _ = ctx.shape("k")
+    group = max(1, Hq // Hkv)
+    pack = cfg.get("pack_gqa", True)
+    g = group if pack else 1
+    rows = B * Hkv if pack else B * Hq
+    # Mean fraction of the padded cache that is actually valid — ragged
+    # batches stream proportionally less KV (block skipping on kv_len).
+    fill = float(ctx.extra.get("fill", 1.0))
+    ib = dtype_bytes(ctx.dtype)
+    bk = min(cfg["block_kv"], _rup(T, 128))
+    ks = cfg["k_splits"]
+    t_pad = _rup(T, bk * ks)
+    blocks = t_pad // bk
+    run_rows = max(1.0, t_pad * fill)
+    flops = 4.0 * B * Hq * T * D * fill
+    bytes_kv = 2.0 * rows * run_rows * D * ib     # unpacked re-reads KV/head
+    bytes_q = rows * ks * g * D * ib
+    bytes_part = 2.0 * rows * ks * g * (D + LANES) * 4
+    return KernelWorkload(
+        flops=flops,
+        hbm_bytes=bytes_kv + bytes_q + bytes_part,
+        grid_steps=int(rows * max(1, round(blocks * fill))),
+        vmem_bytes=_gqa_decode_vmem(cfg, ctx),
+        matmuls=[MatmulShape(g, D, bk), MatmulShape(g, bk, D)],
+        vector_flops=6.0 * B * Hq * T * fill,
+        dtype=ctx.dtype,
+        parallel_grid=rows * ks,
+    )
+
+
+def _gqa_decode_heuristic(ctx: TuningContext) -> Config:
+    return {"block_kv": 512, "k_splits": 1, "pack_gqa": True}
+
+
+def _gqa_decode_runner(cfg: Config, ctx: TuningContext):
+    from repro.kernels.gqa_decode import gqa_decode as gqa_kernel
+    q_s, k_s = ctx.shape("q"), ctx.shape("k")
+    dtype = jnp.dtype(ctx.dtype)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(keys[0], q_s, dtype)
+    k = _rand(keys[1], k_s, dtype)
+    v = _rand(keys[2], k_s, dtype)
+    T = k_s[2]
+    fill = float(ctx.extra.get("fill", 1.0))
+    lens = jax.random.randint(jax.random.PRNGKey(7), (q_s[0],), 1,
+                              max(2, int(T * fill)) + 1)
+    fn = jax.jit(functools.partial(gqa_kernel, **cfg))
+    return KernelRunner(fn, q, k, v, kv_len=lens)
+
+
+GQA_DECODE_RAGGED = TunableKernel(
+    name="gqa_decode_ragged",
+    space=gqa_decode_space(),
+    version=1,
+    workload_fn=_gqa_decode_workload,
+    make_runner=_gqa_decode_runner,
+    heuristic=_gqa_decode_heuristic,
+)
+
+
+def ragged_decode(q, k, v, *, kv_len=None, config: Optional[Config] = None,
+                  tuner: Optional[Autotuner] = None, interpret: bool = True):
+    """Autotuned ragged GQA decode. q (B,Hq,D); k,v (B,Hkv,T,D);
+    kv_len (B,) int32 per-request valid lengths."""
+    from repro.kernels.gqa_decode import gqa_decode as gqa_kernel
+    if config is None:
+        tuner = tuner or default_tuner()
+        ctx = _ctx(tuner, {"q": q.shape, "k": k.shape}, str(q.dtype))
+        config = tuner.best_config(GQA_DECODE_RAGGED, ctx)
+    return gqa_kernel(q, k, v, kv_len=kv_len, interpret=interpret, **config)
+
+
+# ===========================================================================
+# MLA decode (absorbed latent attention over the compressed KV cache)
+# ===========================================================================
+
+def _mla_decode_vmem(cfg: Config, ctx: TuningContext) -> int:
+    B, H, C = ctx.shape("q_abs")
+    R = ctx.shape("q_rope")[2]
+    ib = dtype_bytes(ctx.dtype)
+    bk = cfg["block_kv"]
+    buf = 2 * (bk * C * ib + bk * R * ib + H * C * ib + H * R * ib)
+    scratch = H * C * 4 + 2 * H * LANES * 4
+    out = 2 * (H * C * 4 + H * LANES * 4)
+    return buf + scratch + out
+
+
+def mla_decode_space() -> ConfigSpace:
+    sp = ConfigSpace(
+        "mla_decode",
+        [
+            Param("block_kv", (128, 256, 512, 1024, 2048)),
+            Param("k_splits", (1, 2, 4, 8, 16, 32)),
+        ],
+        version=1,
+    )
+    sp.constrain("vmem", vmem_fits(_mla_decode_vmem))
+    sp.constrain(
+        "splits<=blocks",
+        lambda c, x: c["k_splits"] <= max(1, _cdiv(x.shape("ckv")[1],
+                                                   c["block_kv"])))
+    return sp
+
+
+def _mla_decode_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
+    B, H, C = ctx.shape("q_abs")
+    _, T, _ = ctx.shape("ckv")
+    R = ctx.shape("q_rope")[2]
+    ib = dtype_bytes(ctx.dtype)
+    bk = min(cfg["block_kv"], _rup(T, 128))
+    ks = cfg["k_splits"]
+    t_pad = _rup(T, bk * ks)
+    blocks = t_pad // bk
+    # scores (C- and R-contractions) + latent context accumulation
+    flops = 2.0 * B * H * T * (2 * C + R)
+    bytes_kv = B * t_pad * (C + R) * ib           # shared latent cache, read once
+    bytes_q = B * ks * H * (C + R) * ib
+    bytes_part = 2.0 * B * ks * H * (C + LANES) * 4
+    return KernelWorkload(
+        flops=flops,
+        hbm_bytes=bytes_kv + bytes_q + bytes_part,
+        grid_steps=B * blocks,
+        vmem_bytes=_mla_decode_vmem(cfg, ctx),
+        matmuls=[MatmulShape(H, C, bk), MatmulShape(H, R, bk),
+                 MatmulShape(H, bk, C)],
+        vector_flops=6.0 * B * H * T,
+        dtype=ctx.dtype,
+        parallel_grid=B * ks,
+    )
+
+
+def _mla_decode_heuristic(ctx: TuningContext) -> Config:
+    return {"block_kv": 512, "k_splits": 1}
+
+
+def _mla_decode_runner(cfg: Config, ctx: TuningContext):
+    from repro.kernels.mla_decode import mla_decode as mla_kernel
+    dtype = jnp.dtype(ctx.dtype)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    qa = _rand(keys[0], ctx.shape("q_abs"), dtype)
+    qr = _rand(keys[1], ctx.shape("q_rope"), dtype)
+    ckv = _rand(keys[2], ctx.shape("ckv"), dtype)
+    kr = _rand(keys[3], ctx.shape("krope"), dtype)
+    scale = float(ctx.extra.get("scale", 1.0))
+    fn = jax.jit(functools.partial(mla_kernel, scale=scale, **cfg))
+    return KernelRunner(fn, qa, qr, ckv, kr)
+
+
+MLA_DECODE = TunableKernel(
+    name="mla_decode",
+    space=mla_decode_space(),
+    version=1,
+    workload_fn=_mla_decode_workload,
+    make_runner=_mla_decode_runner,
+    heuristic=_mla_decode_heuristic,
+)
+
+
+def latent_decode(q_abs, q_rope, ckv, krope, *, kv_len=None,
+                  scale: Optional[float] = None,
+                  config: Optional[Config] = None,
+                  tuner: Optional[Autotuner] = None, interpret: bool = True):
+    """Autotuned absorbed-MLA decode. q_abs (B,H,C); q_rope (B,H,R);
+    ckv (B,T,C); krope (B,T,R). Returns attended latents (B,H,C) f32."""
+    from repro.kernels.mla_decode import mla_decode as mla_kernel
+    if config is None:
+        tuner = tuner or default_tuner()
+        ctx = _ctx(tuner, {"q_abs": q_abs.shape, "q_rope": q_rope.shape,
+                           "ckv": ckv.shape, "krope": krope.shape},
+                   str(ckv.dtype))
+        config = tuner.best_config(MLA_DECODE, ctx)
+    return mla_kernel(q_abs, q_rope, ckv, krope, kv_len=kv_len, scale=scale,
+                      interpret=interpret, **config)
 
 
 # ===========================================================================
@@ -411,7 +631,7 @@ def _rms_runner(cfg: Config, ctx: TuningContext):
     x = _rand(keys[0], x_s, dtype)
     w = _rand(keys[1], (x_s[-1],), dtype)
     fn = jax.jit(functools.partial(rms_norm, **cfg))
-    return lambda: fn(x, w)
+    return KernelRunner(fn, x, w)
 
 
 def rmsnorm(x, weight, *, eps: float = 1e-6, config: Optional[Config] = None,
@@ -477,7 +697,7 @@ def _mm_runner(cfg: Config, ctx: TuningContext):
     x = _rand(keys[0], ctx.shape("x"), dtype)
     y = _rand(keys[1], ctx.shape("y"), dtype)
     fn = jax.jit(functools.partial(mm, **cfg))
-    return lambda: fn(x, y)
+    return KernelRunner(fn, x, y)
 
 
 MATMUL = TunableKernel(
@@ -500,18 +720,120 @@ def matmul(x, y, *, config: Optional[Config] = None,
     return mm(x, y, interpret=interpret, **config)
 
 
-ALL_KERNELS = {
-    "flash_attention": FLASH_ATTENTION,
-    "flash_attention_bwd": FLASH_ATTENTION_BWD,
-    "decode_attention": DECODE_ATTENTION,
-    "rms_norm": RMS_NORM,
-    "matmul": MATMUL,
-}
-
-
 def _cdiv(a: int, b: int) -> int:
     return -(-a // b)
 
 
 def _rup(a: int, b: int) -> int:
     return -(-a // b) * b
+
+
+# ===========================================================================
+# Registry — the single enumeration point for every consumer
+# ===========================================================================
+
+def _register_builtin_kernels() -> None:
+    from repro.kernels import ref
+    from repro.kernels.registry import BenchCase, KernelSpec, register
+
+    register(KernelSpec(
+        tunable=FLASH_ATTENTION,
+        scenarios=("prefill", "training", "gqa"),
+        reference=ref.attention,
+        entry_point=attention,
+        description="Flash attention forward (prefill / training)",
+        bench_cases=(
+            BenchCase("s512", {"q": (1, 4, 512, 128), "k": (1, 1, 512, 128)},
+                      extra={"causal": True, "window": 0}),
+            BenchCase("train4k",
+                      {"q": (8, 32, 4096, 128), "k": (8, 8, 4096, 128)},
+                      dtype="bfloat16",
+                      extra={"causal": True, "window": 0}, scale="paper"),
+            BenchCase("prefill32k",
+                      {"q": (1, 32, 32768, 128), "k": (1, 8, 32768, 128)},
+                      dtype="bfloat16",
+                      extra={"causal": True, "window": 0}, scale="paper"),
+        ),
+    ))
+    register(KernelSpec(
+        tunable=FLASH_ATTENTION_BWD,
+        scenarios=("training",),
+        entry_point=attention_bwd,
+        description="Flash attention backward (dq/dk/dv recompute)",
+        bench_cases=(
+            BenchCase("train4k",
+                      {"q": (8, 32, 4096, 128), "k": (8, 8, 4096, 128)},
+                      dtype="bfloat16",
+                      extra={"causal": True, "window": 0}, scale="paper"),
+        ),
+    ))
+    register(KernelSpec(
+        tunable=DECODE_ATTENTION,
+        scenarios=("decode", "gqa"),
+        reference=ref.decode_attention,
+        entry_point=decode,
+        description="Flash-decode attention (one token vs KV cache)",
+        bench_cases=(
+            BenchCase("d1024", {"q": (2, 4, 128), "k": (2, 1, 1024, 128)}),
+            BenchCase("decode32k",
+                      {"q": (16, 32, 128), "k": (16, 8, 32768, 128)},
+                      dtype="bfloat16", scale="paper"),
+        ),
+    ))
+    register(KernelSpec(
+        tunable=GQA_DECODE_RAGGED,
+        scenarios=("decode", "gqa", "ragged", "serving"),
+        reference=ref.gqa_decode,
+        entry_point=ragged_decode,
+        description="Ragged batched GQA decode (per-request KV lengths)",
+        bench_cases=(
+            BenchCase("r1024", {"q": (2, 8, 128), "k": (2, 2, 1024, 128)},
+                      extra={"fill": 0.5}),
+            BenchCase("serve32k",
+                      {"q": (16, 32, 128), "k": (16, 8, 32768, 128)},
+                      dtype="bfloat16", extra={"fill": 0.5}, scale="paper"),
+        ),
+    ))
+    register(KernelSpec(
+        tunable=MLA_DECODE,
+        scenarios=("decode", "mla", "serving"),
+        reference=ref.mla_decode,
+        entry_point=latent_decode,
+        description="Absorbed-MLA decode over the compressed latent cache",
+        bench_cases=(
+            BenchCase("m1024", {"q_abs": (2, 4, 256), "q_rope": (2, 4, 64),
+                                "ckv": (2, 1024, 256),
+                                "krope": (2, 1024, 64)}),
+            BenchCase("dsv2_32k",
+                      {"q_abs": (8, 16, 512), "q_rope": (8, 16, 64),
+                       "ckv": (8, 32768, 512), "krope": (8, 32768, 64)},
+                      dtype="bfloat16", scale="paper"),
+        ),
+    ))
+    register(KernelSpec(
+        tunable=RMS_NORM,
+        scenarios=("prefill", "decode", "training"),
+        reference=ref.rms_norm,
+        entry_point=rmsnorm,
+        description="RMS layer norm",
+        bench_cases=(
+            BenchCase("r1024x2048", {"x": (1024, 2048)}),
+            BenchCase("r8192x4096", {"x": (8192, 4096)}, dtype="bfloat16",
+                      scale="paper"),
+        ),
+    ))
+    register(KernelSpec(
+        tunable=MATMUL,
+        scenarios=("prefill", "training"),
+        reference=ref.matmul,
+        entry_point=matmul,
+        description="Blocked matmul",
+        bench_cases=(
+            BenchCase("m256", {"x": (256, 256), "y": (256, 256)}),
+            BenchCase("mm8k", {"x": (8192, 8192), "y": (8192, 8192)},
+                      dtype="bfloat16", scale="paper"),
+        ),
+    ))
+
+
+_register_builtin_kernels()

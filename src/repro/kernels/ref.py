@@ -73,6 +73,38 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return o[:, :, 0, :]
 
 
+def gqa_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+               kv_len: Optional[jnp.ndarray] = None,
+               scale: Optional[float] = None) -> jnp.ndarray:
+    """Ragged batched GQA decode: semantically identical to
+    ``decode_attention`` — the kernel's pack_gqa/k_splits are pure layout."""
+    return decode_attention(q, k, v, kv_len=kv_len, scale=scale)
+
+
+def mla_decode(q_abs: jnp.ndarray, q_rope: jnp.ndarray, ckv: jnp.ndarray,
+               krope: jnp.ndarray, *, kv_len: Optional[jnp.ndarray] = None,
+               scale: float = 1.0) -> jnp.ndarray:
+    """Absorbed-MLA decode oracle.
+
+    q_abs (B, H, C) queries with W_uk absorbed; q_rope (B, H, R);
+    ckv (B, T, C) latent cache; krope (B, T, R). Returns the attended
+    latent context (B, H, C) float32 — W_uv applies downstream.
+    """
+    s = jnp.einsum("bhc,btc->bht", q_abs.astype(jnp.float32),
+                   ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bhr,btr->bht", q_rope.astype(jnp.float32),
+                       krope.astype(jnp.float32))
+    s = s * scale
+    if kv_len is not None:
+        T = ckv.shape[1]
+        s = jnp.where(jnp.arange(T)[None, None, :] < kv_len[:, None, None],
+                      s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bht,btc->bhc", p, ckv.astype(jnp.float32))
+
+
 def rms_norm(x: jnp.ndarray, weight: jnp.ndarray,
              eps: float = 1e-6) -> jnp.ndarray:
     """RMS layer norm [Zhang & Sennrich 2019] over the last axis."""

@@ -1,0 +1,153 @@
+"""Declarative kernel registry — the single source of truth for tunable
+kernels.
+
+The paper's approach pays off most when the *set* of tunable kernels grows
+(MHA prefill, GQA decode, MLA decode, norms, matmuls, ...): every consumer —
+the tuner, the benchmarks, the serving launcher, the model layers — must
+discover kernels instead of hard-coding them. A kernel registers once, as a
+``KernelSpec`` bundling:
+
+  * ``tunable``     — the ``TunableKernel`` (ConfigSpace + workload_fn +
+                      make_runner + heuristic) the Autotuner consumes,
+  * ``scenarios``   — tags ("prefill", "decode", "gqa", "mla", "training",
+                      ...) so callers can ask "all decode kernels",
+  * ``reference``   — the pure-jnp oracle from ``ref.py`` (ground truth for
+                      tests and the numerics baseline in benchmarks),
+  * ``entry_point`` — the autotuned public function (``ops.attention`` etc.),
+  * ``bench_cases`` — canonical workloads at two scales: ``scale="host"``
+                      cases are CPU-feasible (wall-clock benchmarks on this
+                      container), ``scale="paper"`` cases are production
+                      shapes for the analytical backend.
+
+Consumers:
+
+    from repro.kernels.registry import get_kernel, list_kernels
+    list_kernels(scenario="decode")        # every decode kernel
+    get_kernel("mla_decode").tunable       # feed the Autotuner
+    get_kernel("mla_decode").reference     # oracle for an allclose sweep
+
+Registration happens at import of ``repro.kernels.ops`` (importing this
+module via the ``repro.kernels`` package triggers it). Adding a kernel is a
+~100-line drop-in: kernel body module + ConfigSpace/workload/runner in
+ops.py + one ``register()`` call. Duplicate names are rejected so two
+modules cannot silently fight over a name.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+from repro.core.config_space import ConfigSpace, TuningContext
+from repro.core.hardware import ChipSpec
+from repro.core.tuner import TunableKernel
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchCase:
+    """One canonical workload for a kernel, used by registry-driven
+    benchmarks (fig5 diversity, decode latency, search efficiency) and by
+    ``gen_shipped_db``-style warm-start sweeps."""
+
+    label: str
+    shapes: Mapping[str, Tuple[int, ...]]
+    dtype: str = "float32"
+    extra: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    scale: str = "host"            # "host" (CPU-feasible) | "paper"
+
+    def context(self, chip: ChipSpec) -> TuningContext:
+        return TuningContext(chip=chip, shapes=dict(self.shapes),
+                             dtype=self.dtype, extra=dict(self.extra))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Everything the rest of the system needs to know about one kernel."""
+
+    tunable: TunableKernel
+    scenarios: Tuple[str, ...]
+    reference: Optional[Callable[..., Any]] = None
+    entry_point: Optional[Callable[..., Any]] = None
+    bench_cases: Tuple[BenchCase, ...] = ()
+    description: str = ""
+
+    @property
+    def name(self) -> str:
+        return self.tunable.name
+
+    @property
+    def space(self) -> ConfigSpace:
+        return self.tunable.space
+
+    def cases(self, scale: Optional[str] = None) -> Tuple[BenchCase, ...]:
+        if scale is None:
+            return self.bench_cases
+        return tuple(c for c in self.bench_cases if c.scale == scale)
+
+
+_LOCK = threading.Lock()
+_REGISTRY: Dict[str, KernelSpec] = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    """Add a kernel to the registry. Rejects duplicate names."""
+    if not isinstance(spec, KernelSpec):
+        raise TypeError(f"register() takes a KernelSpec, got {type(spec)!r}")
+    if not spec.scenarios:
+        raise ValueError(f"kernel {spec.name!r} declares no scenarios")
+    with _LOCK:
+        if spec.name in _REGISTRY:
+            raise ValueError(
+                f"kernel {spec.name!r} is already registered; "
+                "unregister() it first or pick another name")
+        _REGISTRY[spec.name] = spec
+    return spec
+
+
+def unregister(name: str) -> None:
+    """Remove a kernel (tests register throwaway kernels)."""
+    with _LOCK:
+        _REGISTRY.pop(name, None)
+
+
+def get_kernel(name: str) -> KernelSpec:
+    _ensure_builtins()
+    with _LOCK:
+        try:
+            return _REGISTRY[name]
+        except KeyError:
+            known = ", ".join(sorted(_REGISTRY)) or "<empty>"
+            raise KeyError(
+                f"no kernel {name!r} in the registry (known: {known})"
+            ) from None
+
+
+def list_kernels(scenario: Optional[str] = None) -> List[KernelSpec]:
+    """All registered kernels, name-sorted; optionally filtered by a
+    scenario tag (e.g. ``scenario="decode"``)."""
+    _ensure_builtins()
+    with _LOCK:
+        specs = sorted(_REGISTRY.values(), key=lambda s: s.name)
+    if scenario is None:
+        return specs
+    return [s for s in specs if scenario in s.scenarios]
+
+
+def kernel_names(scenario: Optional[str] = None) -> List[str]:
+    return [s.name for s in list_kernels(scenario)]
+
+
+def scenarios() -> List[str]:
+    """Every scenario tag any kernel declares."""
+    tags = set()
+    for s in list_kernels():
+        tags.update(s.scenarios)
+    return sorted(tags)
+
+
+def _ensure_builtins() -> None:
+    """Importing repro.kernels.ops registers the built-in kernels; make the
+    registry self-initializing for callers that import this module first."""
+    if not _REGISTRY:
+        from repro.kernels import ops  # noqa: F401  (import side effect)

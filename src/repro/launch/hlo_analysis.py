@@ -157,10 +157,15 @@ class _Comp:
                 if not hits:
                     continue
                 uses += len(hits)
-                dm = re.search(r"dynamic-slice\((%?" + re.escape(pname) +
-                               r")\b.*dynamic_slice_sizes=\{([\d,]+)\}", rhs)
+                # First dynamic-slice operand may carry an inline type
+                # ("dynamic-slice(f32[...]{...} %p, ..." — older jax).
+                dm = re.search(
+                    r"dynamic-slice\("
+                    r"(?:[a-z]\w*\[[\d,]*\](?:\{[\d,]*\})?\s+)?%?" +
+                    re.escape(pname) +
+                    r"\b.*dynamic_slice_sizes=\{([\d,]+)\}", rhs)
                 if dm:
-                    dims = [int(d) for d in dm.group(2).split(",")]
+                    dims = [int(d) for d in dm.group(1).split(",")]
                     shapes = self.symbols.get(pname, [])
                     dt = shapes[0][0] if shapes else "f32"
                     ds_bytes += _numel(dims) * _DTYPE_BYTES.get(dt, 4)
@@ -207,6 +212,15 @@ _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
 
 
+def _operand_names(inner: str) -> List[str]:
+    """Operand symbol names from an op's argument list. Handles both dump
+    formats: symbol-only ("%a, %b") and inline-typed
+    ("f32[8,16]{1,0} %a, f32[16]{0} %b" — older jax)."""
+    if "%" in inner:
+        return re.findall(r"%([\w\.\-_]+)", inner)
+    return [o.strip().split(" ")[-1] for o in inner.split(",") if o.strip()]
+
+
 def _dot_flops(line: str, comp: _Comp) -> float:
     rhs = line.split("=", 1)[1]
     result = _parse_shapes(rhs[:rhs.find(" dot(") + 1])
@@ -216,15 +230,21 @@ def _dot_flops(line: str, comp: _Comp) -> float:
     ops_m = _OPERANDS_RE.search(rhs[rhs.find(" dot("):])
     cm = _CONTRACT_RE.search(line)
     k = 1
-    if ops_m and cm is not None:
-        operands = [o.strip() for o in ops_m.group(1).split(",")]
-        lhs_shapes = comp.shapes_of(operands[0]) if operands else []
-        if lhs_shapes and cm.group(1):
-            lhs_dims = lhs_shapes[0][1]
-            for idx in cm.group(1).split(","):
-                i = int(idx)
-                if i < len(lhs_dims):
-                    k *= lhs_dims[i]
+    if ops_m and cm is not None and cm.group(1):
+        inner = ops_m.group(1)
+        # Inline-typed dumps carry the lhs shape right in the operand list;
+        # otherwise resolve the first operand via the symbol table.
+        inline = _parse_shapes(inner)
+        if inline:
+            lhs_dims = inline[0][1]
+        else:
+            names = _operand_names(inner)
+            lhs_shapes = comp.shapes_of(names[0]) if names else []
+            lhs_dims = lhs_shapes[0][1] if lhs_shapes else []
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
     return 2.0 * result_numel * k
 
 
@@ -305,12 +325,14 @@ def analyze_hlo(hlo_text: str, total_devices: int) -> HloStats:
                 shapes = _parse_shapes(rhs[:rhs.find(opcode + "(")])
                 if shapes:
                     stats.flops += _numel(shapes[0][1]) * mult
-            if not internal and opcode in _BYTES_OPS:
+            # Unfused elementwise ops (e.g. CPU-backend parallel calls) are
+            # charged operand+result bytes too — HloCostAnalysis semantics.
+            if not internal and (opcode in _BYTES_OPS or
+                                 opcode in _ELEMENTWISE):
                 result_b = _shapes_bytes(_parse_shapes(
                     rhs[:rhs.find(opcode + "(")]))
                 ops_m = _OPERANDS_RE.search(rhs[rhs.find(opcode + "("):])
-                operands = [o.strip().split(" ")[-1]
-                            for o in ops_m.group(1).split(",")] if ops_m else []
+                operands = _operand_names(ops_m.group(1)) if ops_m else []
                 operand_b = 0
                 callee = None
                 if opcode == "fusion":

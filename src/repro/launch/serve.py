@@ -27,12 +27,22 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--decode-impl", choices=("full", "pallas"),
+                    default="full",
+                    help="pallas = registry decode kernels "
+                         "(gqa_decode_ragged / mla_decode) on the hot path")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=not args.full_config)
+    if args.decode_impl == "pallas":
+        from repro.kernels.registry import list_kernels
+        names = ", ".join(s.name for s in list_kernels(scenario="decode"))
+        print(f"decode via registry kernels (available: {names})")
     mesh = make_local_mesh()
     scfg = steps_lib.StepConfig(policy="serve_tp",
-                                opts=lm.ForwardOpts(attn_chunk=64))
+                                opts=lm.ForwardOpts(
+                                    attn_chunk=64,
+                                    decode_impl=args.decode_impl))
     params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
     B, P, G = args.requests, args.prompt_len, args.gen
     rng = np.random.default_rng(0)

@@ -322,9 +322,15 @@ def attn_prefill(p, x, cfg: ModelConfig, *, max_len: int, impl="chunked",
 
 
 def attn_decode(p, x, cfg: ModelConfig, cache: Cache, pos, *, impl="full"):
-    """One-token decode. x (B, 1, d); pos scalar int32 (current index)."""
+    """One-token decode. x (B, 1, d); pos scalar int32 (current index).
+
+    ``impl="pallas"`` dispatches through the registry's ragged decode
+    kernels (``gqa_decode_ragged`` / ``mla_decode``) with per-request valid
+    lengths; sliding-window (ring-buffer) caches fall back to the einsum
+    path because their slot order is not a contiguous KV prefix.
+    """
     if cfg.mla is not None:
-        return _mla_decode(p, x, cfg, cache, pos)
+        return _mla_decode(p, x, cfg, cache, pos, impl=impl)
     B = x.shape[0]
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     positions = jnp.full((1,), pos, jnp.int32)
@@ -333,6 +339,13 @@ def attn_decode(p, x, cfg: ModelConfig, cache: Cache, pos, *, impl="full"):
     slot = pos % slots
     ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
     cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+
+    if impl == "pallas" and cfg.window is None:
+        from repro.kernels import ops as kops
+        kv_len = jnp.full((B,), pos + 1, jnp.int32)
+        o = kops.ragged_decode(q[:, 0], jnp.moveaxis(ck, 1, 2),
+                            jnp.moveaxis(cv, 1, 2), kv_len=kv_len)
+        return _proj_out(p, o[:, None], cfg), {"k": ck, "v": cv}
 
     qg = _group(q, hkv).astype(jnp.float32)
     s = jnp.einsum("bskgd,btkd->bkgst", qg, ck.astype(jnp.float32)) * dh ** -0.5
@@ -438,9 +451,10 @@ def _mla_prefill(p, x, cfg, *, max_len, impl="chunked", chunk=512):
                  "krope": shard(cr, "batch", None, None)}
 
 
-def _mla_decode(p, x, cfg, cache: Cache, pos):
+def _mla_decode(p, x, cfg, cache: Cache, pos, *, impl="full"):
     """Absorbed-MLA decode over the compressed cache (the 93%-smaller-KV
-    trick that makes deepseek-v2 serving cheap)."""
+    trick that makes deepseek-v2 serving cheap). ``impl="pallas"`` runs the
+    score/softmax/context loop in the autotuned ``mla_decode`` kernel."""
     B = x.shape[0]
     m = cfg.mla
     hq = cfg.n_heads
@@ -452,6 +466,15 @@ def _mla_decode(p, x, cfg, cache: Cache, pos):
                                                 axis=1)
     # Absorb W_uk into the query: q̃ (B,1,H,C)
     q_abs = jnp.einsum("bshn,hcn->bshc", q_nope, p["wuk"].astype(x.dtype))
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        kv_len = jnp.full((B,), pos + 1, jnp.int32)
+        ctx_lat = kops.latent_decode(q_abs[:, 0], q_rope[:, 0], ckv, krope,
+                                  kv_len=kv_len,
+                                  scale=_mla_qkv_rope_scale(cfg))
+        o = jnp.einsum("bhc,hcv->bhv", ctx_lat,
+                       p["wuv"].astype(jnp.float32))[:, None].astype(x.dtype)
+        return _proj_out(p, o, cfg), {"ckv": ckv, "krope": krope}
     s = jnp.einsum("bshc,btc->bhst", q_abs.astype(jnp.float32),
                    ckv.astype(jnp.float32))
     s = s + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),

@@ -39,6 +39,7 @@ from repro.models.param import ParamSpec, init_params, stack_tree
 @dataclasses.dataclass(frozen=True)
 class ForwardOpts:
     attn_impl: str = "chunked"       # full | chunked | triangular | pallas
+    decode_impl: str = "full"        # full | pallas (registry decode kernels)
     attn_chunk: int = 512
     moe_impl: str = "index"          # index | einsum
     remat: str = "none"              # none | full | dots
@@ -308,7 +309,8 @@ def _block_decode(p, h, kind, cfg, opts, cache, pos):
     new: Dict[str, Any] = dict(cache)
     hn = apply_norm(p["ln1"], h, cfg, impl=opts.norm_impl)
     if mixer in ("attn", "dec"):
-        mix, c = ATT.attn_decode(p["mix"], hn, cfg, cache["self"], pos)
+        mix, c = ATT.attn_decode(p["mix"], hn, cfg, cache["self"], pos,
+                                 impl=opts.decode_impl)
         new["self"] = c
     else:
         mix, c = MAM.mamba_decode(p["mix"], hn, cfg, cache["ssm"])

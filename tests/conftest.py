@@ -15,6 +15,41 @@ if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
 
+def hypothesis_fallback():
+    """Stand-ins for (given, settings, st) when hypothesis is not installed:
+    property tests become skipped placeholders instead of collection errors,
+    so the rest of each module still runs."""
+
+    class _Anything:
+        """Absorbs any strategy-building call chain (st.composite, st.lists
+        of st.tuples, draw(...), ...) — never executed, only decorated."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return _Anything()
+
+    def given(*a, **k):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def placeholder():
+                pass
+            placeholder.__name__ = getattr(fn, "__name__", "property_test")
+            placeholder.__doc__ = fn.__doc__
+            return placeholder
+        return deco
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    return given, settings, _Strategies()
+
+
 @pytest.fixture()
 def tmp_cache(tmp_path):
     from repro.core.cache import TuningCache

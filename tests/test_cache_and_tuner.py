@@ -5,7 +5,11 @@ import math
 import os
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # container may lack hypothesis — skip properties
+    from conftest import hypothesis_fallback
+    given, settings, st = hypothesis_fallback()
 
 from repro.core import (
     AnalyticalMeasure, Autotuner, ConfigSpace, ExhaustiveSearch,

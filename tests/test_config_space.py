@@ -2,7 +2,11 @@
 properties."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # container may lack hypothesis — skip properties
+    from conftest import hypothesis_fallback
+    given, settings, st = hypothesis_fallback()
 
 from repro.core import ConfigSpace, Param, TuningContext, get_chip
 from repro.core.config_space import (

@@ -1,0 +1,215 @@
+"""The new decode kernel family vs its ref.py oracles: ragged GQA decode
+(GQA ratios × ragged KV lengths × layout configs) and absorbed-MLA decode,
+plus the model-level pallas dispatch paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.gqa_decode import gqa_decode
+from repro.kernels.mla_decode import mla_decode
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             jnp.float32).astype(dtype)
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+def ragged_lens(seed, B, T):
+    return jax.random.randint(jax.random.PRNGKey(seed), (B,), 1, T + 1)
+
+
+# ---------------------------------------------------------------------------
+# ragged GQA decode
+# ---------------------------------------------------------------------------
+
+GQA_CASES = [
+    # B, Hq, Hkv, T, D, block_kv, k_splits, pack_gqa
+    (2, 4, 4, 512, 64, 128, 2, True),        # MHA (group 1)
+    (2, 8, 4, 512, 64, 128, 1, True),        # GQA 2:1
+    (1, 8, 2, 300, 128, 128, 4, True),       # GQA 4:1, ragged T
+    (3, 12, 2, 1024, 128, 256, 1, True),     # GQA 6:1
+    (1, 16, 2, 2048, 64, 512, 8, True),      # deep GQA, many splits
+    (2, 8, 2, 512, 64, 128, 2, False),       # unpacked: row per q head
+    (1, 16, 4, 640, 128, 256, 1, False),     # unpacked GQA 4:1
+]
+
+
+@pytest.mark.parametrize("case", GQA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gqa_decode_vs_ref(case, dtype):
+    B, Hq, Hkv, T, D, bk, ks, pack = case
+    q = rand(0, (B, Hq, D), dtype)
+    k = rand(1, (B, Hkv, T, D), dtype)
+    v = rand(2, (B, Hkv, T, D), dtype)
+    lens = ragged_lens(3, B, T)
+    o = gqa_decode(q, k, v, kv_len=lens, block_kv=bk, k_splits=ks,
+                   pack_gqa=pack)
+    oref = ref.gqa_decode(q, k, v, kv_len=lens)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(oref, np.float32), atol=tol(dtype))
+
+
+def test_gqa_decode_config_semantics_free():
+    """Layout tunables (block, splits, packing) never change the result."""
+    q = rand(0, (2, 8, 64))
+    k = rand(1, (2, 2, 512, 64))
+    v = rand(2, (2, 2, 512, 64))
+    lens = jnp.array([313, 512], jnp.int32)
+    base = gqa_decode(q, k, v, kv_len=lens, block_kv=128, k_splits=1,
+                      pack_gqa=True)
+    for bk, ks, pack in [(128, 4, True), (256, 2, True), (512, 1, True),
+                         (128, 1, False), (256, 2, False)]:
+        o = gqa_decode(q, k, v, kv_len=lens, block_kv=bk, k_splits=ks,
+                       pack_gqa=pack)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(base),
+                                   atol=1e-5)
+
+
+def test_gqa_decode_ragged_tail_masked():
+    """Garbage keys/values beyond each request's kv_len must not leak."""
+    B, Hq, Hkv, T, D = 2, 8, 2, 256, 64
+    q = rand(0, (B, Hq, D))
+    k = rand(1, (B, Hkv, T, D))
+    v = rand(2, (B, Hkv, T, D))
+    lens = jnp.array([100, 17], jnp.int32)
+    o1 = gqa_decode(q, k, v, kv_len=lens, block_kv=128, k_splits=2)
+    k2 = k.at[:, :, 120:].set(99.0)
+    v2 = v.at[:, :, 120:].set(-99.0)
+    o2 = gqa_decode(q, k2, v2, kv_len=lens, block_kv=128, k_splits=2)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+def test_decode_kernels_clamp_kv_len_past_cache():
+    """kv_len > T means 'attend the whole cache' — zero-padded rows past T
+    must never score (the einsum ring-wrap semantics)."""
+    B, Hq, Hkv, T, D = 2, 8, 2, 300, 64
+    q = rand(0, (B, Hq, D))
+    k = rand(1, (B, Hkv, T, D))
+    v = rand(2, (B, Hkv, T, D))
+    over = jnp.array([310, 350], jnp.int32)
+    want = ref.gqa_decode(q, k, v, kv_len=jnp.minimum(over, T))
+    got = gqa_decode(q, k, v, kv_len=over, block_kv=512, k_splits=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    qa, qr = rand(3, (B, 4, 128)), rand(4, (B, 4, 64))
+    ckv, kr = rand(5, (B, T, 128)), rand(6, (B, T, 64))
+    want = ref.mla_decode(qa, qr, ckv, kr, kv_len=jnp.minimum(over, T),
+                          scale=0.08)
+    got = mla_decode(qa, qr, ckv, kr, kv_len=over, scale=0.08, block_kv=512)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_gqa_decode_entry_point_with_config():
+    from repro.kernels import ops
+    q = rand(0, (2, 8, 64))
+    k = rand(1, (2, 2, 256, 64))
+    v = rand(2, (2, 2, 256, 64))
+    lens = jnp.array([200, 64], jnp.int32)
+    o = ops.ragged_decode(q, k, v, kv_len=lens,
+                       config={"block_kv": 128, "k_splits": 2,
+                               "pack_gqa": False})
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(ref.gqa_decode(q, k, v, kv_len=lens)),
+        atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MLA decode
+# ---------------------------------------------------------------------------
+
+MLA_CASES = [
+    # B, H, C, R, T, block_kv, k_splits
+    (2, 4, 128, 64, 512, 128, 2),
+    (1, 8, 256, 64, 300, 128, 1),            # ragged T
+    (2, 16, 512, 64, 1024, 256, 4),          # deepseek-like widths
+    (1, 2, 64, 32, 256, 128, 1),             # tiny ranks
+]
+
+
+@pytest.mark.parametrize("case", MLA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mla_decode_vs_ref(case, dtype):
+    B, H, C, R, T, bk, ks = case
+    qa = rand(0, (B, H, C), dtype)
+    qr = rand(1, (B, H, R), dtype)
+    ckv = rand(2, (B, T, C), dtype)
+    kr = rand(3, (B, T, R), dtype)
+    lens = ragged_lens(4, B, T)
+    scale = (C + R) ** -0.5
+    o = mla_decode(qa, qr, ckv, kr, kv_len=lens, scale=scale, block_kv=bk,
+                   k_splits=ks)
+    oref = ref.mla_decode(qa, qr, ckv, kr, kv_len=lens, scale=scale)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref, np.float32),
+                               atol=tol(dtype) * 10)
+
+
+def test_mla_decode_config_semantics_free():
+    qa, qr = rand(0, (2, 4, 128)), rand(1, (2, 4, 64))
+    ckv, kr = rand(2, (2, 512, 128)), rand(3, (2, 512, 64))
+    lens = jnp.array([401, 37], jnp.int32)
+    base = mla_decode(qa, qr, ckv, kr, kv_len=lens, scale=0.08,
+                      block_kv=128, k_splits=1)
+    for bk, ks in [(128, 4), (256, 2), (512, 1)]:
+        o = mla_decode(qa, qr, ckv, kr, kv_len=lens, scale=0.08,
+                       block_kv=bk, k_splits=ks)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(base),
+                                   atol=1e-5)
+
+
+def test_mla_decode_ragged_tail_masked():
+    qa, qr = rand(0, (2, 4, 64)), rand(1, (2, 4, 32))
+    ckv, kr = rand(2, (2, 256, 64)), rand(3, (2, 256, 32))
+    lens = jnp.array([90, 10], jnp.int32)
+    o1 = mla_decode(qa, qr, ckv, kr, kv_len=lens, scale=0.1, block_kv=128)
+    ckv2 = ckv.at[:, 100:].set(55.0)
+    kr2 = kr.at[:, 100:].set(-55.0)
+    o2 = mla_decode(qa, qr, ckv2, kr2, kv_len=lens, scale=0.1, block_kv=128)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# model-level pallas dispatch (registry kernels on the decode hot path)
+# ---------------------------------------------------------------------------
+
+def _gqa_model_cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                       n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=128, dtype="float32")
+
+
+def _mla_model_cfg():
+    from repro.models.config import ModelConfig, MLAConfig
+    return ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                       n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+                       vocab_size=128, dtype="float32",
+                       mla=MLAConfig(kv_lora_rank=32, qk_nope_dim=16,
+                                     qk_rope_dim=8, v_head_dim=16))
+
+
+@pytest.mark.parametrize("make_cfg", [_gqa_model_cfg, _mla_model_cfg])
+def test_attn_decode_pallas_matches_full(make_cfg):
+    from repro.models import attention as ATT
+    from repro.models.param import init_params
+    cfg = make_cfg()
+    p = init_params(jax.random.PRNGKey(0), ATT.attn_specs(cfg))
+    B, S = 2, 8
+    xp = rand(1, (B, S, cfg.d_model))
+    x = rand(2, (B, 1, cfg.d_model))
+    _, cache = ATT.attn_prefill(p, xp, cfg, max_len=S + 4)
+    o_full, c_full = ATT.attn_decode(p, x, cfg, cache, jnp.int32(S),
+                                     impl="full")
+    o_pal, c_pal = ATT.attn_decode(p, x, cfg, cache, jnp.int32(S),
+                                   impl="pallas")
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_full),
+                               atol=2e-5)
+    for key in c_full:
+        np.testing.assert_allclose(np.asarray(c_pal[key]),
+                                   np.asarray(c_full[key]), atol=1e-6)

@@ -51,7 +51,9 @@ def test_spec_divisibility_fallback():
 
 def test_spec_pod_prefix_fallback():
     # batch 8 divisible by pod(2)·data(16)? No (32∤8) → try prefix (pod,)=2 ✓
-    assert spec_for((8, 128), ("batch", None), TP, MESH3) == P(("pod",))
+    # singleton tuples are unwrapped so the spec compares equal on every
+    # jax version (newer jax normalizes P(("pod",)) to P("pod") anyway)
+    assert spec_for((8, 128), ("batch", None), TP, MESH3) == P("pod")
 
 
 def test_spec_no_axis_reuse():
@@ -71,6 +73,11 @@ def test_shard_heads_or_seq_decision():
 # HLO analyzer
 # ---------------------------------------------------------------------------
 
+def _cost_analysis(c):
+    ca = c.cost_analysis()
+    return ca[0] if isinstance(ca, list) else ca   # older jax returns a list
+
+
 def test_hlo_scan_trip_count_flops():
     def f(x, w):
         def body(c, wi):
@@ -84,7 +91,7 @@ def test_hlo_scan_trip_count_flops():
     assert 0.95 < st.flops / expect < 1.15
     assert 12 in st.while_loops.values()
     # XLA's own analysis undercounts (documents why analyze_hlo exists)
-    assert c.cost_analysis().get("flops", 0) < 0.2 * expect
+    assert _cost_analysis(c).get("flops", 0) < 0.2 * expect
 
 
 def test_hlo_control_matches_cost_analysis():
@@ -93,7 +100,7 @@ def test_hlo_control_matches_cost_analysis():
     sds = jax.ShapeDtypeStruct((512, 512), jnp.float32)
     c = jax.jit(g).lower(sds, sds).compile()
     st = analyze_hlo(c.as_text(), 1)
-    ca = c.cost_analysis()
+    ca = _cost_analysis(c)
     assert abs(st.flops - ca["flops"]) / ca["flops"] < 0.02
     assert abs(st.bytes - ca["bytes accessed"]) / ca["bytes accessed"] < 0.1
 
@@ -118,8 +125,8 @@ def test_hlo_collectives_parsed_multidevice():
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.launch.hlo_analysis import analyze_hlo
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import _make_mesh
+mesh = _make_mesh((8,), ("model",))
 w_sh = NamedSharding(mesh, P("model", None))
 x_sh = NamedSharding(mesh, P())
 def f(x, w):
@@ -148,8 +155,8 @@ from repro.launch import steps as S
 from repro.models import lm
 from repro.models.param import init_params
 cfg = get_config("olmoe-1b-7b", smoke=True)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import _make_mesh
+mesh = _make_mesh((2, 4), ("data", "model"))
 scfg = S.StepConfig(micro_batches=2)
 psh = S.param_tree_shardings(cfg, mesh, scfg.policy)
 params = jax.device_put(init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg)), psh)

@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # container may lack hypothesis — skip properties
+    from conftest import hypothesis_fallback
+    given, settings, st = hypothesis_fallback()
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention

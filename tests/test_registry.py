@@ -1,0 +1,121 @@
+"""Kernel-registry behavior: registration, scenario lookup, duplicate
+rejection, and the declarative completeness of every built-in KernelSpec."""
+
+import pytest
+
+from repro.core import Param, ConfigSpace, TunableKernel, get_chip
+from repro.kernels import registry as reg
+
+
+def _dummy_spec(name="_test_dummy", scenarios=("decode",)):
+    space = ConfigSpace(name, [Param("block", (8, 16))])
+    return reg.KernelSpec(
+        tunable=TunableKernel(name=name, space=space,
+                              heuristic=lambda ctx: {"block": 8}),
+        scenarios=tuple(scenarios))
+
+
+# ---------------------------------------------------------------------------
+# registration / lookup
+# ---------------------------------------------------------------------------
+
+def test_builtin_kernels_registered():
+    names = reg.kernel_names()
+    for expected in ("flash_attention", "flash_attention_bwd",
+                     "decode_attention", "gqa_decode_ragged", "mla_decode",
+                     "rms_norm", "matmul"):
+        assert expected in names
+
+
+def test_scenario_lookup_decode_family():
+    decode = reg.kernel_names(scenario="decode")
+    assert len(decode) >= 3
+    assert {"decode_attention", "gqa_decode_ragged", "mla_decode"} <= \
+        set(decode)
+    assert reg.kernel_names(scenario="mla") == ["mla_decode"]
+    assert "flash_attention" in reg.kernel_names(scenario="prefill")
+    assert "flash_attention" not in decode
+
+
+def test_get_kernel_roundtrip_and_unknown():
+    spec = reg.get_kernel("mla_decode")
+    assert spec.name == "mla_decode"
+    assert spec.tunable.name == "mla_decode"
+    with pytest.raises(KeyError, match="no kernel 'nope'"):
+        reg.get_kernel("nope")
+
+
+def test_register_and_unregister():
+    spec = _dummy_spec()
+    try:
+        reg.register(spec)
+        assert reg.get_kernel(spec.name) is spec
+        assert spec.name in reg.kernel_names(scenario="decode")
+    finally:
+        reg.unregister(spec.name)
+    assert spec.name not in reg.kernel_names()
+
+
+def test_duplicate_name_rejected():
+    spec = _dummy_spec()
+    reg.register(spec)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register(_dummy_spec())
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register(spec)      # even the same object
+    finally:
+        reg.unregister(spec.name)
+
+
+def test_register_requires_scenarios_and_spec_type():
+    with pytest.raises(ValueError, match="no scenarios"):
+        reg.register(_dummy_spec(scenarios=()))
+    with pytest.raises(TypeError):
+        reg.register("flash_attention")
+
+
+# ---------------------------------------------------------------------------
+# declarative completeness of the built-ins
+# ---------------------------------------------------------------------------
+
+def test_every_spec_heuristic_is_valid_for_its_bench_cases():
+    chip = get_chip("tpu_v5e")
+    for spec in reg.list_kernels():
+        assert spec.bench_cases, f"{spec.name} declares no bench cases"
+        for case in spec.bench_cases:
+            ctx = case.context(chip)
+            cfg = spec.tunable.default_config(ctx)
+            assert spec.space.is_valid(cfg, ctx), \
+                f"{spec.name}/{case.label}: default {cfg} invalid"
+
+
+def test_every_decode_spec_has_oracle_and_entry_point():
+    for spec in reg.list_kernels(scenario="decode"):
+        assert spec.reference is not None, spec.name
+        assert spec.entry_point is not None, spec.name
+
+
+def test_bench_case_scale_filter():
+    spec = reg.get_kernel("flash_attention")
+    host = spec.cases(scale="host")
+    paper = spec.cases(scale="paper")
+    assert host and paper
+    assert len(host) + len(paper) == len(spec.bench_cases)
+
+
+# ---------------------------------------------------------------------------
+# registry-driven tuner construction
+# ---------------------------------------------------------------------------
+
+def test_tuner_accepts_registry_names(tuner):
+    chip = get_chip("tpu_v5e")
+    ctx = reg.get_kernel("mla_decode").cases(scale="paper")[0].context(chip)
+    by_name = tuner.best_config("mla_decode", ctx)
+    by_obj = tuner.best_config(reg.get_kernel("mla_decode").tunable, ctx)
+    assert by_name == by_obj
+
+    gspec = reg.get_kernel("gqa_decode_ragged")
+    gctx = gspec.cases(scale="paper")[0].context(chip)
+    entry = tuner.tune("gqa_decode_ragged", gctx)
+    assert gspec.space.is_valid(entry.config, gctx)

@@ -239,8 +239,8 @@ def test_compressed_psum_mean_multidevice(tmp_path):
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.runtime.compression import make_compressed_allreduce
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import _make_mesh
+mesh = _make_mesh((8,), ("data",))
 x = jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16) / 7.0
 xs = jax.device_put(x, jax.NamedSharding(mesh, P("data")))
 fn = jax.jit(make_compressed_allreduce(mesh, "data"))
