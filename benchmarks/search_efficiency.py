@@ -2,20 +2,33 @@
 within 5% of the space optimum (the Triton autotuner is exhaustive-only; the
 paper calls for better).
 
-Scenarios come from the registry: every kernel's paper-scale bench cases
-(production shapes, analytical backend). Deterministic ⇒ reproducible
-counts."""
+Two dimensions per (scenario, strategy):
+
+  * **evaluations** — how many configs each strategy measures before landing
+    within 5% of the exhaustive optimum (deterministic, analytical backend
+    over the registry's paper-scale cases);
+  * **wall seconds** — how long the search itself takes end to end
+    (`search_wall_s`), with the per-trial compile vs measure attribution
+    summed from the trial log (`trial_compile_s` / `trial_measure_s`;
+    zero for the analytical backend, populated when the scenario runs on
+    the wall-clock pipelined engine).
+
+The host-scale wall-clock section drives each strategy through the
+pipelined ``TuningEngine`` on a real kernel, so the compile-time split is
+measured, not modeled."""
 
 from __future__ import annotations
 
 import math
+import time
 
 from benchmarks.common import write_csv
 from repro.core import (
     AnalyticalMeasure, EvolutionarySearch, ExhaustiveSearch, RandomSearch,
-    SuccessiveHalving, get_chip,
+    SuccessiveHalving, WallClockTimer, get_chip,
 )
-from repro.kernels.registry import list_kernels
+from repro.core.engine import TuningEngine
+from repro.kernels.registry import get_kernel, list_kernels
 
 
 def scenarios():
@@ -36,6 +49,29 @@ def evals_to_within(trials, target, tol=1.05):
     return None
 
 
+def strategy_set(budget: int):
+    return (RandomSearch(budget=budget, seed=0),
+            EvolutionarySearch(population=6, generations=8,
+                               children=6, seed=0),
+            SuccessiveHalving(initial=24, rungs=3))
+
+
+def row_from(name, backend_name, strat, res, target, space_valid, wall_s):
+    n = evals_to_within(res.trials, target)
+    return {
+        "scenario": name, "backend": backend_name, "strategy": strat.name,
+        "space_valid": space_valid,
+        "evals_to_5pct": n if n is not None else "miss",
+        "final_gap": round(res.best_metric / target, 3)
+        if math.isfinite(res.best_metric) and target else "miss",
+        "speedup_vs_exhaustive": (
+            round(space_valid / n, 1) if n else 0.0),
+        "search_wall_s": round(wall_s, 3),
+        "trial_compile_s": round(res.compile_s, 3),
+        "trial_measure_s": round(res.measure_s, 3),
+    }
+
+
 def main(fast: bool = True) -> list:
     chip = get_chip("tpu_v5e")
     rows = []
@@ -46,22 +82,48 @@ def main(fast: bool = True) -> list:
     for name, kernel, case in cases:
         ctx = case.context(chip)
         ev = AnalyticalMeasure(chip).evaluator(kernel, ctx)
+        t0 = time.perf_counter()
         ex = ExhaustiveSearch().run(kernel.space, ctx, ev)
+        ex_wall = time.perf_counter() - t0
         target = ex.best_metric
-        for strat in (RandomSearch(budget=ex.evaluations, seed=0),
-                      EvolutionarySearch(population=6, generations=8,
-                                         children=6, seed=0),
-                      SuccessiveHalving(initial=24, rungs=3)):
+        rows.append(row_from(name, "analytical", ExhaustiveSearch(), ex,
+                             target, ex.evaluations, ex_wall))
+        for strat in strategy_set(budget=ex.evaluations):
+            t0 = time.perf_counter()
             res = strat.run(kernel.space, ctx, ev)
-            n = evals_to_within(res.trials, target)
-            rows.append({
-                "scenario": name, "strategy": strat.name,
-                "space_valid": ex.evaluations,
-                "evals_to_5pct": n if n is not None else "miss",
-                "final_gap": round(res.best_metric / target, 3),
-                "speedup_vs_exhaustive": (
-                    round(ex.evaluations / n, 1) if n else 0.0),
-            })
+            rows.append(row_from(name, "analytical", strat, res, target,
+                                 ex.evaluations, time.perf_counter() - t0))
+
+    # Wall-clock dimension: real seconds on this host, compile time split
+    # out, strategies driven through the pipelined engine.
+    wc_kernels = ("rms_norm",) if fast else ("rms_norm", "matmul")
+    for kname in wc_kernels:
+        spec = get_kernel(kname)
+        host = spec.cases(scale="host")
+        if not host:
+            continue
+        ctx = host[0].context(chip)
+
+        def timed_engine_run(strat):
+            # Fresh engine per strategy: a shared pool would hand later
+            # strategies pre-compiled programs and skew the wall-second
+            # comparison toward whatever runs last.
+            engine = TuningEngine(WallClockTimer(reps=2, warmup=1))
+            t0 = time.perf_counter()
+            res = engine.search(spec.tunable, ctx, strat)
+            wall = time.perf_counter() - t0
+            engine.close()
+            return res, wall
+
+        ex, ex_wall = timed_engine_run(ExhaustiveSearch())
+        target = ex.best_metric
+        name = f"{kname}/{host[0].label}"
+        rows.append(row_from(name, "wall_clock", ExhaustiveSearch(), ex,
+                             target, ex.evaluations, ex_wall))
+        for strat in strategy_set(budget=max(4, ex.evaluations // 2)):
+            res, wall = timed_engine_run(strat)
+            rows.append(row_from(name, "wall_clock", strat, res, target,
+                                 ex.evaluations, wall))
     path = write_csv("search_efficiency", rows, rows[0].keys())
     print(f"[search_efficiency] -> {path}")
     for r in rows:

@@ -1,0 +1,201 @@
+"""Tuning-throughput benchmark — the pipelined engine's headline number.
+
+The paper budgets up to 24 h of exhaustive search per platform; its Q4.2/
+Q4.4 ask for search that is *fast* and *off the critical path*. This
+benchmark measures end-to-end ``tune()`` wall-time on the wall-clock
+backend for every registry kernel's host-scale bench case, two ways:
+
+  * **serial**    — the classic loop: ``strategy.run`` + blocking
+                    ``backend.evaluator``; every candidate re-jits from
+                    scratch inside its warmup call.
+  * **pipelined** — ``TuningEngine.search``: lowering, AOT compilation
+                    (worker threads), and device timing overlap, and
+                    candidates lowering to already-seen programs reuse the
+                    compiled executable *and* its measurement
+                    (lowered-HLO-hash dedupe — "A Few Fit Most").
+
+Both paths drive the same ask/tell strategy with the same timer settings,
+so they explore identical configs. Per-trial compile vs measure seconds
+are recorded for the pipelined path (the serial path interleaves them
+inside jit dispatch, so only its total is attributable).
+
+Writes ``results/BENCH_tuning_throughput.json``. Exit status is 0 unless
+``--check MIN`` is given and the overall speedup falls below MIN (CI runs
+``--fast --check 1.0``: the engine must never be slower than serial).
+
+Run:  PYTHONPATH=src python benchmarks/tuning_throughput.py [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+from repro.core import ExhaustiveSearch, WallClockTimer, get_chip
+from repro.core.engine import TuningEngine
+from repro.kernels.registry import list_kernels
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), os.pardir, "results",
+                            "BENCH_tuning_throughput.json")
+
+# Kernels with cheap-but-representative compiles for the CI smoke run:
+# matmul exercises heavy HLO dedupe, flash_attention moderate dedupe,
+# rms_norm none (worst case for the engine — pure overlap).
+FAST_KERNELS = ("matmul", "flash_attention", "rms_norm")
+
+
+def cases(fast: bool):
+    for spec in list_kernels():
+        if spec.tunable.make_runner is None:
+            continue
+        if fast and spec.name not in FAST_KERNELS:
+            continue
+        host = spec.cases(scale="host")
+        if not host:
+            continue
+        yield spec, host[0]
+
+
+def run_case(spec, case, chip, fast: bool):
+    ctx = case.context(chip)
+    timer = WallClockTimer()   # default reps/warmup: the production setting
+    max_configs = 8 if fast else None
+    kernel = spec.tunable
+    n_valid = len(kernel.space.valid_configs(ctx))
+    n = min(n_valid, max_configs) if max_configs else n_valid
+
+    # Warm process-global state (operand memo, jax dispatch paths) outside
+    # the timed regions so neither mode pays one-time costs.
+    kernel.make_runner(kernel.space.valid_configs(ctx)[0], ctx)
+
+    t0 = time.perf_counter()
+    serial = ExhaustiveSearch(max_configs=max_configs).run(
+        kernel.space, ctx, timer.evaluator(kernel, ctx))
+    serial_s = time.perf_counter() - t0
+
+    engine = TuningEngine(timer)   # fresh pool: cold program cache
+    t0 = time.perf_counter()
+    piped = engine.search(kernel, ctx, ExhaustiveSearch(max_configs=max_configs))
+    piped_s = time.perf_counter() - t0
+    engine.close()
+
+    deduped = sum(t.deduped for t in piped.trials)
+    row = {
+        "kernel": spec.name,
+        "case": case.label,
+        "configs": n,
+        "serial_s": round(serial_s, 3),
+        "pipelined_s": round(piped_s, 3),
+        "speedup": round(serial_s / piped_s, 3) if piped_s else 0.0,
+        "deduped_configs": int(deduped),
+        "distinct_programs": int(n - deduped),
+        "serial_best": serial.best,
+        "pipelined_best": piped.best,
+        "pipelined_compile_s": round(piped.compile_s, 3),
+        "pipelined_measure_s": round(piped.measure_s, 3),
+        "trials": [
+            {"config": t.config,
+             "metric_s": None if math.isinf(t.metric) else round(t.metric, 6),
+             "fidelity": t.fidelity,
+             "compile_s": round(t.compile_s, 4),
+             "measure_s": round(t.measure_s, 4),
+             "deduped": t.deduped}
+            for t in piped.trials
+        ],
+    }
+    return row
+
+
+def run_suite(case_list, chip, fast: bool) -> dict:
+    """End-to-end: tune the whole registry work-list. ``tune_many`` packs
+    independent searches onto the machine — one search's compile barrier is
+    another's lowering or timing window — on top of each search's own
+    overlap and dedupe. This is the deployment mode (registry warm_start,
+    gen_shipped_db); the serial baseline is the pre-engine reality, a
+    strictly sequential loop of blocking evaluations."""
+    import tempfile
+
+    from repro.core import Autotuner, TuningCache
+
+    max_configs = 8 if fast else None
+    strategy = ExhaustiveSearch(max_configs=max_configs)
+    timer = WallClockTimer()
+    pairs = [(spec.tunable, case.context(chip)) for spec, case in case_list]
+
+    # Serial and batch runs back to back, so container speed drift between
+    # the per-case section and this one cannot skew the headline ratio.
+    t0 = time.perf_counter()
+    for kernel, ctx in pairs:
+        ExhaustiveSearch(max_configs=max_configs).run(
+            kernel.space, ctx, timer.evaluator(kernel, ctx))
+    serial_s = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as tmp:
+        tuner = Autotuner(cache=TuningCache(cache_dir=tmp),
+                          backend=WallClockTimer(),
+                          strategy=strategy)
+        t0 = time.perf_counter()
+        entries = tuner.tune_many(pairs, return_exceptions=True)
+        batch_s = time.perf_counter() - t0
+    ok = sum(1 for e in entries if not isinstance(e, BaseException))
+    return {"serial_sequential_s": round(serial_s, 3),
+            "pipelined_tune_many_s": round(batch_s, 3), "tuned_ok": ok,
+            "pairs": len(pairs)}
+
+
+def main(fast: bool = True, check: float = 0.0) -> list:
+    chip = get_chip("tpu_v5e")
+    case_list = list(cases(fast))
+    rows = []
+    for spec, case in case_list:
+        row = run_case(spec, case, chip, fast)
+        rows.append(row)
+        print(f"[tuning_throughput] {row['kernel']}/{row['case']}: "
+              f"serial {row['serial_s']:.1f}s -> pipelined "
+              f"{row['pipelined_s']:.1f}s ({row['speedup']:.2f}x, "
+              f"{row['deduped_configs']}/{row['configs']} deduped)")
+    total_serial = sum(r["serial_s"] for r in rows)
+    total_piped = sum(r["pipelined_s"] for r in rows)
+    suite = run_suite(case_list, chip, fast)
+    suite["speedup"] = round(
+        suite["serial_sequential_s"] / suite["pipelined_tune_many_s"], 3
+    ) if suite["pipelined_tune_many_s"] else 0.0
+    # Headline: aggregate over the back-to-back per-case pairs — each pair
+    # runs within seconds of itself, so container speed drift (which swings
+    # 2x between minutes here) cancels out. The suite section is the
+    # deployment-shaped auxiliary view.
+    overall = total_serial / total_piped if total_piped else 0.0
+    report = {
+        "mode": "fast" if fast else "full",
+        "backend": "wall_clock",
+        "reps": 5, "warmup": 2,
+        "total_serial_s": round(total_serial, 3),
+        "total_pipelined_s": round(total_piped, 3),
+        "overall_speedup": round(overall, 3),
+        "suite": suite,
+        "cases": rows,
+    }
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"[tuning_throughput] overall {overall:.2f}x "
+          f"({total_serial:.1f}s -> {total_piped:.1f}s); suite tune_many "
+          f"{suite['speedup']:.2f}x -> {RESULTS_PATH}")
+    if check and overall < check:
+        print(f"[tuning_throughput] FAIL: speedup {overall:.2f} < {check}")
+        sys.exit(1)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="capped config count + kernel subset (CI smoke)")
+    ap.add_argument("--check", type=float, default=0.0,
+                    help="exit 1 if overall speedup falls below this")
+    args = ap.parse_args()
+    main(fast=args.fast, check=args.check)

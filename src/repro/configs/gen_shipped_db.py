@@ -70,14 +70,18 @@ def main():
         tuner = Autotuner(cache=TuningCache(cache_dir="/tmp/_shipped_tmp"),
                           backend=AnalyticalMeasure(chip))
         tuner.cache.clear()
+        # Batch-tune the whole chip's work-list concurrently; results come
+        # back aligned with the input pairs, failures as exceptions.
+        pairs = []
         for name, shapes, extra in scenarios():
             kernel = get_kernel(name).tunable
             ctx = TuningContext(chip=chip, shapes=shapes, dtype="bfloat16",
                                 extra=extra)
-            try:
-                entry = tuner.tune(kernel, ctx)
-            except Exception as e:
-                print(f"  skip {kernel.name} {shapes}: {e}")
+            pairs.append((kernel, ctx))
+        entries = tuner.tune_many(pairs, return_exceptions=True)
+        for (kernel, ctx), entry in zip(pairs, entries):
+            if isinstance(entry, BaseException):
+                print(f"  skip {kernel.name} {ctx.shapes}: {entry}")
                 continue
             key = cache_key(kernel.name, kernel.version, kernel.space, ctx)
             db[key] = entry.to_json()

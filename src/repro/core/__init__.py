@@ -9,7 +9,7 @@ Public surface:
 """
 
 from repro.core.config_space import (  # noqa: F401
-    Config, ConfigSpace, Param, TuningContext,
+    Config, ConfigSpace, Param, TuningContext, clear_valid_config_cache,
 )
 from repro.core.hardware import CHIPS, ChipSpec, get_chip, PRODUCTION_CHIP  # noqa: F401
 from repro.core.costmodel import (  # noqa: F401
@@ -17,13 +17,14 @@ from repro.core.costmodel import (  # noqa: F401
 )
 from repro.core.cache import TuningCache, CacheEntry  # noqa: F401
 from repro.core.measure import (  # noqa: F401
-    AnalyticalMeasure, HybridMeasure, KernelRunner, MeasureBackend,
-    WallClockTimer,
+    AnalyticalMeasure, CompilePool, HybridMeasure, KernelRunner,
+    MeasureBackend, PreparedRunner, WallClockTimer,
 )
 from repro.core.search import (  # noqa: F401
     EvolutionarySearch, ExhaustiveSearch, RandomSearch, SearchResult,
-    SearchStrategy, SuccessiveHalving, make_strategy,
+    SearchStrategy, SuccessiveHalving, Trial, make_strategy,
 )
+from repro.core.engine import TuningEngine  # noqa: F401
 from repro.core.tuner import (  # noqa: F401
-    Autotuner, TunableKernel, default_tuner, set_default_tuner,
+    Autotuner, TunableKernel, TuningQueue, default_tuner, set_default_tuner,
 )

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 import tempfile
 import threading
@@ -54,6 +55,13 @@ class CacheEntry:
     strategy: str
     fingerprint: Dict[str, str]
     timestamp: float
+    compile_s: float = 0.0   # total lower+compile seconds spent tuning
+    measure_s: float = 0.0   # total device-timing seconds spent tuning
+
+    def failed(self) -> bool:
+        """True for entries recording an unsuccessful search (metric=inf).
+        Kept for visibility, never to be served as a tuned config."""
+        return not math.isfinite(self.metric)
 
     def to_json(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -67,6 +75,8 @@ class CacheEntry:
             strategy=str(d.get("strategy", "?")),
             fingerprint=dict(d.get("fingerprint", {})),
             timestamp=float(d.get("timestamp", 0.0)),
+            compile_s=float(d.get("compile_s", 0.0)),
+            measure_s=float(d.get("measure_s", 0.0)),
         )
 
 
@@ -132,7 +142,7 @@ class TuningCache:
     # -- API ------------------------------------------------------------------
     def get(self, kernel_name: str, kernel_version: int, space: ConfigSpace,
             ctx: TuningContext, *, require_fingerprint: Optional[Dict[str, str]]
-            = None) -> Optional[CacheEntry]:
+            = None, skip_failed: bool = False) -> Optional[CacheEntry]:
         key = cache_key(kernel_name, kernel_version, space, ctx)
         with self._lock:
             self._load()
@@ -144,6 +154,11 @@ class TuningCache:
             for k, v in require_fingerprint.items():
                 if entry.fingerprint.get(k) != v:
                     return None   # stale / foreign environment: do not reuse
+        if skip_failed and entry.failed():
+            # Failed-search marker: a miss, never a hit. Autotuner.best_config
+            # applies the same rule inline (it needs the entry to count
+            # failed_retunes) — keep the two in sync.
+            return None
         # Guard: the stored config must still be valid for this context
         # (space constraints may be chip-conditional).
         if not space.is_valid(entry.config, ctx):
@@ -179,7 +194,8 @@ class TuningCache:
 
 
 def make_entry(config: Config, metric: float, n_evaluated: int, strategy: str,
-               backend_name: str, chip_name: str) -> CacheEntry:
+               backend_name: str, chip_name: str, compile_s: float = 0.0,
+               measure_s: float = 0.0) -> CacheEntry:
     return CacheEntry(
         config=dict(config),
         metric=float(metric),
@@ -187,4 +203,6 @@ def make_entry(config: Config, metric: float, n_evaluated: int, strategy: str,
         strategy=strategy,
         fingerprint=env_fingerprint(backend_name, chip_name),
         timestamp=time.time(),
+        compile_s=round(float(compile_s), 6),
+        measure_s=round(float(measure_s), 6),
     )

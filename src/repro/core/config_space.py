@@ -19,10 +19,12 @@ detect when a kernel's space definition changed and invalidate stale entries.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
 import itertools
 import json
+import threading
 from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.hardware import ChipSpec, get_chip
@@ -68,6 +70,21 @@ class TuningContext:
 
 
 Constraint = Callable[[Config, TuningContext], bool]
+
+# Process-wide memo for ConfigSpace.valid_configs: (space_hash, ctx signature)
+# -> enumerated valid configs. Bounded LRU so long-running servers tuning
+# many shapes don't grow without limit.
+_VALID_CACHE: "collections.OrderedDict[Tuple[str, str], List[Config]]" = (
+    collections.OrderedDict())
+_VALID_CACHE_LOCK = threading.Lock()
+_VALID_CACHE_MAX = 128
+
+
+def clear_valid_config_cache() -> None:
+    """Drop the process-wide valid-config memo (tests; spaces whose
+    constraint bodies changed under an unchanged name)."""
+    with _VALID_CACHE_LOCK:
+        _VALID_CACHE.clear()
 
 
 class ConfigSpace:
@@ -143,7 +160,28 @@ class ConfigSpace:
                 yield cfg
 
     def valid_configs(self, ctx: TuningContext) -> List[Config]:
-        return list(self.iter_valid(ctx))
+        """Memoized enumeration of the valid cross-product.
+
+        Every strategy (and every successive-halving rung, and every
+        concurrent ``tune_many`` worker) starts from this list; re-running
+        the full constraint sweep each time is pure waste. Results are
+        cached process-wide keyed by (space hash, context signature) — the
+        same identity the persistent tuning cache uses, so constraint
+        *names* are part of the key and editing a space invalidates its
+        entries. Returns fresh config copies: callers shuffle and mutate.
+        """
+        key = (self.space_hash(), ctx.signature())
+        with _VALID_CACHE_LOCK:
+            cached = _VALID_CACHE.get(key)
+            if cached is not None:
+                _VALID_CACHE.move_to_end(key)
+                return [dict(c) for c in cached]
+        vals = list(self.iter_valid(ctx))
+        with _VALID_CACHE_LOCK:
+            _VALID_CACHE[key] = vals
+            while len(_VALID_CACHE) > _VALID_CACHE_MAX:
+                _VALID_CACHE.popitem(last=False)
+        return [dict(c) for c in vals]
 
     def pruning_report(self, ctx: TuningContext) -> Dict[str, int]:
         """Histogram of rejection reasons — quantifies platform-conditional

@@ -1,0 +1,167 @@
+"""Pipelined concurrent tuning engine — compile/measure overlap.
+
+The serial tuning loop (``SearchStrategy.run`` + ``backend.evaluator``)
+costs, per candidate: trace + lower (Python), XLA compile (C++), then the
+timed reps on the device. This engine drives any ask/tell strategy with
+those phases restructured, per suggestion batch:
+
+  1. **prepare** — the caller thread traces/lowers candidates while
+     ``CompilePool`` workers AOT-compile the ones already lowered;
+  2. **barrier** — wait for the batch's compiles to land. Device timing
+     never runs concurrently with compilation: on a shared host a compile
+     steals the cores the kernel is being timed on and inflates every
+     measurement (observed 3–5× on this container);
+  3. **time** — warm up + median-time each distinct program, serialized on
+     the process-wide device lock.
+
+plus two dedupe levels exploiting "A Few Fit Most" (config spaces lower to
+a handful of distinct programs):
+
+  * a kernel's optional ``canonicalize`` hook maps a config to its
+    *effective* form (blocks clamped to dims, no-op flags normalized);
+    canonical duplicates skip tracing, compiling, and measuring — they
+    inherit the representative's metric before any work happens;
+  * the lowered-HLO hash catches duplicates canonicalization doesn't
+    declare: the ``CompilePool`` compiles each distinct lowering once
+    process-wide, and the engine reuses the metric of an already-timed
+    identical program (per search, per fidelity).
+
+Every trial records its compile vs measure seconds so benchmarks
+(``benchmarks/tuning_throughput.py``) can attribute wall time. Concurrent
+searches — ``Autotuner.tune_many`` — share the pool's program cache and
+interleave fairly on the device lock.
+
+Backends that cannot split phases (analytical, hybrid) fall back to the
+serial evaluator transparently; the ask/tell contract guarantees the same
+configs get explored either way.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import measure as measure_lib
+from repro.core import search as search_lib
+from repro.core.config_space import TuningContext
+from repro.core.search import SearchResult, Trial
+
+
+class TuningEngine:
+    """Drives one ask/tell strategy per ``search()`` call; shares its
+    ``CompilePool`` (and thus the compiled-program cache) across calls and
+    across threads."""
+
+    def __init__(self, backend: measure_lib.MeasureBackend,
+                 pool: Optional[measure_lib.CompilePool] = None,
+                 batch_size: Optional[int] = None):
+        self.backend = backend
+        self._pool = pool
+        self._pool_lock = threading.Lock()
+        self.batch_size = batch_size
+
+    @property
+    def pool(self) -> measure_lib.CompilePool:
+        # tune_many workers race to the first search; exactly one pool may
+        # win or the program cache silently splits (and the loser's
+        # executor leaks).
+        with self._pool_lock:
+            if self._pool is None:
+                self._pool = measure_lib.CompilePool()
+            return self._pool
+
+    def can_pipeline(self, kernel) -> bool:
+        return (getattr(self.backend, "supports_pipeline", False)
+                and kernel.make_runner is not None)
+
+    def search(self, kernel, ctx: TuningContext,
+               strategy: search_lib.SearchStrategy) -> SearchResult:
+        """Run ``strategy`` to completion for (kernel, ctx). Pipelined when
+        the backend supports the prepare/time split, serial otherwise."""
+        if not self.can_pipeline(kernel):
+            return strategy.run(kernel.space, ctx,
+                                self.backend.evaluator(kernel, ctx))
+        return self._search_pipelined(kernel, ctx, strategy)
+
+    def _search_pipelined(self, kernel, ctx, strategy) -> SearchResult:
+        pool = self.pool
+        batch_n = self.batch_size or max(16, 4 * pool.workers + 4)
+        canon = kernel.canonicalize
+        # Metric memos, both keyed with the fidelity so successive-halving
+        # rungs genuinely re-measure their survivors.
+        by_canon: Dict[Tuple, float] = {}
+        by_hash: Dict[Tuple[str, int], float] = {}
+        strategy.reset(kernel.space, ctx)
+        while not strategy.finished():
+            batch = strategy.suggest(batch_n)
+            if not batch:
+                break   # defensive: strategy idle without outstanding work
+            fid = strategy.fidelity
+            trials: List[Trial] = []
+            # -- prepare: lower representatives, schedule their compiles --
+            pending: List[measure_lib.PendingCompile] = []
+            followers: List[Tuple[dict, Tuple]] = []   # resolve after timing
+            batch_canon: Dict[Tuple, None] = {}
+            for cfg in batch:
+                ckey = None
+                if canon is not None:
+                    ckey = (search_lib._cfg_key(canon(cfg, ctx)), fid)
+                    if ckey in by_canon:
+                        trials.append(Trial(dict(cfg), by_canon[ckey],
+                                            fidelity=fid, deduped=True))
+                        continue
+                    if ckey in batch_canon:
+                        # Representative still in flight this batch.
+                        followers.append((dict(cfg), ckey))
+                        continue
+                    batch_canon[ckey] = None
+                try:
+                    runner = kernel.make_runner(cfg, ctx)
+                except Exception:
+                    t = Trial(dict(cfg), math.inf, fidelity=fid)
+                    trials.append(t)
+                    if ckey is not None:
+                        by_canon[ckey] = math.inf
+                    continue
+                p = pool.begin(runner, cfg)
+                p.canon_key = ckey   # threaded through to the time phase
+                if p.error is not None:
+                    trials.append(Trial(p.config, math.inf, fidelity=fid,
+                                        compile_s=p.lower_s))
+                    if ckey is not None:
+                        by_canon[ckey] = math.inf
+                    continue
+                pending.append(p)
+            # -- barrier: all of the batch's compiles land before timing --
+            prepared = [pool.finish(p) for p in pending]
+            # -- time: distinct programs only, on a quiet machine ---------
+            for p, prep in zip(pending, prepared):
+                hkey = (p.hlo_hash, fid)
+                if hkey in by_hash:
+                    metric, measure_s = by_hash[hkey], 0.0
+                    trials.append(Trial(p.config, metric, fidelity=fid,
+                                        compile_s=p.lower_s, deduped=True))
+                else:
+                    if prep.call is None:
+                        metric, measure_s = math.inf, 0.0
+                    else:
+                        metric, measure_s = self.backend.time_prepared(
+                            prep, fidelity=fid)
+                    by_hash[hkey] = metric
+                    trials.append(Trial(p.config, metric, fidelity=fid,
+                                        compile_s=p.lower_s + prep.compile_s,
+                                        measure_s=measure_s,
+                                        deduped=prep.deduped))
+                if p.canon_key is not None:
+                    by_canon[p.canon_key] = metric
+            for cfg, ckey in followers:
+                trials.append(Trial(cfg, by_canon[ckey], fidelity=fid,
+                                    deduped=True))
+            strategy.observe(trials)
+        return strategy.result()
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.close()
+            self._pool = None

@@ -18,13 +18,27 @@ graphs, 24 h budget). The Autotuner here takes a pluggable backend:
 Backends expose ``evaluator(kernel, ctx) -> Callable[[Config], float]``
 returning seconds-per-call (lower better; ``inf`` on failure), plus a
 ``name`` recorded in the tuning cache fingerprint.
+
+For the pipelined tuning engine (``repro.core.engine``) measurement is
+split into a **prepare phase** (trace + lower + AOT-compile, CPU-bound,
+overlappable) and a **time phase** (device-bound, serialized by a process
+-wide device lock). ``CompilePool`` runs the compile halves on worker
+threads and dedupes by lowered-HLO hash: config spaces lower to far fewer
+distinct programs than they have points ("A Few Fit Most"), so identical
+code is compiled — and, by the engine, measured — exactly once.
 """
 
 from __future__ import annotations
 
+import collections
+import dataclasses
+import hashlib
 import math
+import os
+import threading
 import time
-from typing import Any, Callable, Optional
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 
@@ -35,6 +49,37 @@ from repro.core.hardware import ChipSpec
 RunnerFactory = Callable[[Config, TuningContext], Callable[[], Any]]
 WorkloadFn = Callable[[Config, TuningContext], "KernelWorkload"]  # noqa: F821
 
+# One device, many tuning threads: timing must never interleave with other
+# timing or the medians are garbage. Compilation is NOT serialized — that is
+# the whole point of the compile/measure overlap.
+_DEVICE_LOCK = threading.RLock()
+
+# Compiles also must not *start* while a timer is active: XLA compilation is
+# internally multi-threaded and steals the cores the kernel is being timed
+# on (observed 3-5× metric inflation on a 2-core host). Workers wait on
+# this gate between compiles; in-flight compiles finish, bounding the
+# contamination window to one compile. Timing never waits on compiles, so
+# there is no cycle with the engine's compile barrier.
+_TIMING_IDLE = threading.Event()
+_TIMING_IDLE.set()
+_TIMING_COUNT = 0
+_TIMING_COUNT_LOCK = threading.Lock()
+
+
+def _timing_begin() -> None:
+    global _TIMING_COUNT
+    with _TIMING_COUNT_LOCK:
+        _TIMING_COUNT += 1
+        _TIMING_IDLE.clear()
+
+
+def _timing_end() -> None:
+    global _TIMING_COUNT
+    with _TIMING_COUNT_LOCK:
+        _TIMING_COUNT -= 1
+        if _TIMING_COUNT == 0:
+            _TIMING_IDLE.set()
+
 
 class KernelRunner:
     """Zero-arg runner that keeps (fn, args) inspectable.
@@ -43,22 +88,170 @@ class KernelRunner:
     diversity) additionally use ``.fn``/``.args``/``.kwargs`` to lower the
     jitted fn against the real operands without baking them into the trace
     as constants. Runner factories in kernels/ops.py return these.
+
+    Lowering is cached: the compile pool hashes the lowered text for dedupe
+    and then compiles the same lowering, so tracing happens once per config.
     """
 
     def __init__(self, fn: Callable[..., Any], *args: Any, **kwargs: Any):
         self.fn = fn
         self.args = args
         self.kwargs = kwargs
+        self._lowered = None
 
     def __call__(self) -> Any:
         return self.fn(*self.args, **self.kwargs)
 
-    def lowered_text(self) -> str:
-        return self.fn.lower(*self.args, **self.kwargs).as_text()
+    def lowered(self):
+        if self._lowered is None:
+            self._lowered = self.fn.lower(*self.args, **self.kwargs)
+        return self._lowered
 
+    def lowered_text(self) -> str:
+        return self.lowered().as_text()
+
+    def aot_call(self, compiled) -> Callable[[], Any]:
+        """Bind an AOT-compiled executable to this runner's operands."""
+        return lambda: compiled(*self.args, **self.kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Prepare phase: CompilePool
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PendingCompile:
+    """Handle returned by ``CompilePool.begin``: lowering already happened
+    (caller thread), compilation may still be in flight (worker thread)."""
+
+    config: Config
+    runner: Optional[KernelRunner]
+    hlo_hash: Optional[str]
+    lower_s: float
+    future: Optional["Future[Tuple[Any, float]]"]
+    owns_compile: bool          # this config triggered the compile
+    error: Optional[str] = None
+    canon_key: Optional[Any] = None   # engine-side canonical-dedupe key
+
+
+@dataclasses.dataclass
+class PreparedRunner:
+    """A candidate ready for the time phase."""
+
+    config: Config
+    call: Optional[Callable[[], Any]]   # zero-arg AOT-compiled invocation
+    hlo_hash: str = ""
+    lower_s: float = 0.0
+    compile_s: float = 0.0              # 0 when the executable was shared
+    deduped: bool = False               # compile skipped via the HLO cache
+    error: Optional[str] = None
+
+
+def default_compile_workers() -> int:
+    env = os.environ.get("REPRO_COMPILE_WORKERS")
+    if env:
+        return max(1, int(env))
+    return max(1, min(4, (os.cpu_count() or 2) - 1))
+
+
+class CompilePool:
+    """Lower in the caller's thread, AOT-compile on worker threads, dedupe
+    identical lowerings.
+
+    Tracing/lowering is Python (GIL-bound) — offloading it buys nothing, and
+    doing it inline gives the dedupe check its HLO hash *before* any compile
+    is scheduled. XLA compilation releases the GIL, so worker-thread
+    compiles genuinely overlap with the caller lowering the next candidate
+    (and with device timing of the previous one).
+    """
+
+    # Executables are the heaviest objects the tuner pins; a long-running
+    # server tuning an open-ended stream of shapes must not grow without
+    # bound. LRU eviction: a re-encountered lowering just recompiles.
+    MAX_CACHED_PROGRAMS = 256
+
+    def __init__(self, workers: Optional[int] = None,
+                 max_programs: Optional[int] = None):
+        self.workers = workers or default_compile_workers()
+        self.max_programs = max_programs or self.MAX_CACHED_PROGRAMS
+        self._ex = ThreadPoolExecutor(max_workers=self.workers,
+                                      thread_name_prefix="repro-compile")
+        self._lock = threading.Lock()
+        # HLO hash -> Future[(compiled_executable, compile_seconds)], LRU
+        self._by_hash: "collections.OrderedDict[str, Future]" = (
+            collections.OrderedDict())
+
+    # -- stats -------------------------------------------------------------
+    @property
+    def distinct_programs(self) -> int:
+        with self._lock:
+            return len(self._by_hash)
+
+    def begin(self, runner: KernelRunner, config: Config) -> PendingCompile:
+        """Lower ``runner`` now; schedule its compile unless an identical
+        lowering is cached or already in flight."""
+        t0 = time.perf_counter()
+        try:
+            text = runner.lowered_text()
+        except Exception as e:   # invalid config: lowering itself rejects it
+            return PendingCompile(dict(config), runner, None,
+                                  time.perf_counter() - t0, None, False,
+                                  error=f"lower: {type(e).__name__}: {e}")
+        lower_s = time.perf_counter() - t0
+        h = hashlib.sha256(text.encode()).hexdigest()[:32]
+        with self._lock:
+            fut = self._by_hash.get(h)
+            owns = fut is None
+            if owns:
+                fut = self._ex.submit(self._compile, runner)
+                self._by_hash[h] = fut
+                while len(self._by_hash) > self.max_programs:
+                    self._by_hash.popitem(last=False)
+            else:
+                self._by_hash.move_to_end(h)
+        return PendingCompile(dict(config), runner, h, lower_s, fut, owns)
+
+    @staticmethod
+    def _compile(runner: KernelRunner) -> Tuple[Any, float]:
+        _TIMING_IDLE.wait()   # don't start while a timer holds the device
+        t0 = time.perf_counter()
+        compiled = runner.lowered().compile()
+        return compiled, time.perf_counter() - t0
+
+    def finish(self, pending: PendingCompile) -> PreparedRunner:
+        """Block until ``pending``'s executable is ready and bind it to the
+        pending config's own operands."""
+        if pending.error or pending.future is None:
+            return PreparedRunner(pending.config, None,
+                                  lower_s=pending.lower_s,
+                                  error=pending.error or "not submitted")
+        try:
+            compiled, compile_s = pending.future.result()
+        except Exception as e:
+            return PreparedRunner(pending.config, None, pending.hlo_hash,
+                                  pending.lower_s, 0.0,
+                                  deduped=not pending.owns_compile,
+                                  error=f"compile: {type(e).__name__}: {e}")
+        return PreparedRunner(
+            pending.config,
+            pending.runner.aot_call(compiled),
+            pending.hlo_hash,
+            pending.lower_s,
+            compile_s if pending.owns_compile else 0.0,
+            deduped=not pending.owns_compile,
+        )
+
+    def close(self) -> None:
+        self._ex.shutdown(wait=False)
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
 
 class MeasureBackend:
     name = "base"
+    supports_pipeline = False   # True: prepare (compile) / time phases split
 
     def evaluator(self, kernel, ctx: TuningContext):
         raise NotImplementedError
@@ -66,6 +259,7 @@ class MeasureBackend:
 
 class WallClockTimer(MeasureBackend):
     name = "wall_clock"
+    supports_pipeline = True
 
     def __init__(self, reps: int = 5, warmup: int = 2,
                  timeout_s: Optional[float] = None):
@@ -73,11 +267,10 @@ class WallClockTimer(MeasureBackend):
         self.warmup = warmup
         self.timeout_s = timeout_s
 
-    def time_runner(self, runner: Callable[[], Any],
-                    fidelity: int = 1) -> float:
-        reps = self.reps * max(1, fidelity)
+    def _median(self, runner: Callable[[], Any], reps: int,
+                warmup: int) -> float:
         try:
-            for _ in range(self.warmup):
+            for _ in range(warmup):
                 out = runner()
                 jax.block_until_ready(out)
         except Exception:
@@ -93,6 +286,37 @@ class WallClockTimer(MeasureBackend):
                 break
         samples.sort()
         return samples[len(samples) // 2]
+
+    def time_runner(self, runner: Callable[[], Any],
+                    fidelity: int = 1) -> float:
+        with _DEVICE_LOCK:
+            _timing_begin()
+            try:
+                return self._median(runner, self.reps * max(1, fidelity),
+                                    self.warmup)
+            finally:
+                _timing_end()
+
+    def time_prepared(self, prepared: PreparedRunner,
+                      fidelity: int = 1) -> Tuple[float, float]:
+        """Time an AOT-compiled candidate; returns (metric, wall seconds
+        spent timing). A single warmup rep suffices — there is no hidden
+        first-call compile to absorb."""
+        if prepared.call is None:
+            return math.inf, 0.0
+        with _DEVICE_LOCK:
+            # Clock starts only once the device is ours — lock-wait behind
+            # another search's timer must not count as this trial's
+            # measure_s (the attribution feeds cache entries + benchmarks).
+            t0 = time.perf_counter()
+            _timing_begin()
+            try:
+                metric = self._median(prepared.call,
+                                      self.reps * max(1, fidelity),
+                                      min(self.warmup, 1))
+            finally:
+                _timing_end()
+        return metric, time.perf_counter() - t0
 
     def evaluator(self, kernel, ctx: TuningContext):
         if kernel.make_runner is None:

@@ -13,6 +13,25 @@ reliably identify optimal configurations". We provide:
                                 (few reps / model estimate), keep the top
                                 fraction, re-measure more precisely.
 
+Every strategy speaks the **ask/tell protocol** so the pipelined tuning
+engine (``repro.core.engine``) can keep many candidates in flight at once:
+
+    strategy.reset(space, ctx)
+    while not strategy.finished():
+        batch = strategy.suggest(n)          # up to n configs, [] when idle
+        trials = [measure(cfg, strategy.fidelity) for cfg in batch]
+        strategy.observe(trials)
+    result = strategy.result()
+
+``run()`` is a thin serial driver over the same state machine, kept for
+backward compatibility; the trial log it produces is byte-identical to
+driving suggest/observe by hand with any batch size, because suggestions
+are order-deterministic and generation/rung boundaries only advance once
+every outstanding suggestion has been observed.
+
+Strategies are **stateful between reset() and result()** — clone (e.g.
+``copy.deepcopy``) before driving the same instance from multiple threads.
+
 All searchers consume an ``Evaluator``: Callable[[Config], float] returning
 seconds-per-call (lower is better; ``math.inf`` marks failed/invalid runs).
 They are deterministic given a seed, and they return the full trial log so
@@ -22,9 +41,10 @@ benchmarks can reproduce the paper's search-efficiency analysis.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
 import random
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.config_space import Config, ConfigSpace, TuningContext
 
@@ -36,6 +56,9 @@ class Trial:
     config: Config
     metric: float            # seconds per call; inf == failed
     fidelity: int = 1        # measurement reps / precision level
+    compile_s: float = 0.0   # seconds spent lowering+compiling this config
+    measure_s: float = 0.0   # wall seconds spent timing this config
+    deduped: bool = False    # metric reused from an identical-HLO config
 
     def ok(self) -> bool:
         return math.isfinite(self.metric)
@@ -52,17 +75,34 @@ class SearchResult:
     def explored(self) -> int:
         return len({_cfg_key(t.config) for t in self.trials})
 
+    @property
+    def compile_s(self) -> float:
+        return sum(t.compile_s for t in self.trials)
+
+    @property
+    def measure_s(self) -> float:
+        return sum(t.measure_s for t in self.trials)
+
 
 def _cfg_key(cfg: Config) -> Tuple:
     return tuple(sorted((k, repr(v)) for k, v in cfg.items()))
 
 
-class SearchStrategy:
-    name = "base"
-
-    def run(self, space: ConfigSpace, ctx: TuningContext,
-            evaluate: Evaluator) -> SearchResult:
-        raise NotImplementedError
+def _fidelity_caller(evaluate: Evaluator) -> Callable[[Config, int], float]:
+    """Bind the fidelity-passing convention once per search. Signature is
+    probed up front — a per-call try/except TypeError would double-evaluate
+    (and mask the real error of) any evaluator that raises TypeError
+    internally."""
+    try:
+        params = inspect.signature(evaluate).parameters.values()
+        takes_fidelity = any(
+            p.name == "fidelity" or p.kind is inspect.Parameter.VAR_KEYWORD
+            for p in params)
+    except (TypeError, ValueError):   # builtins/C callables: assume plain
+        takes_fidelity = False
+    if takes_fidelity:
+        return lambda cfg, fid: evaluate(cfg, fidelity=fid)  # type: ignore[call-arg]
+    return lambda cfg, fid: evaluate(cfg)
 
 
 def _finish(trials: List[Trial]) -> SearchResult:
@@ -73,6 +113,92 @@ def _finish(trials: List[Trial]) -> SearchResult:
     return SearchResult(dict(best.config), best.metric, trials, len(trials))
 
 
+class SearchStrategy:
+    """Base class implementing the ask/tell bookkeeping.
+
+    Subclasses fill ``self._pending`` (the ordered list of configs to hand
+    out) in ``_start()`` and refill it in ``_advance()``, which fires only
+    when every suggested config has been observed — so batch size never
+    changes what gets explored, only how much is in flight.
+    """
+
+    name = "base"
+    fidelity: int = 1   # fidelity for the *current* suggestion batch
+
+    # -- ask/tell protocol -------------------------------------------------
+    def reset(self, space: ConfigSpace, ctx: TuningContext) -> None:
+        self.space = space
+        self.ctx = ctx
+        self.trials: List[Trial] = []
+        self._pending: List[Config] = []
+        self._outstanding = 0
+        self._done = False
+        self.fidelity = 1
+        self._start()
+        self._check_done()
+
+    def suggest(self, n: int = 1) -> List[Config]:
+        """Up to ``n`` configs to evaluate next; [] while the strategy waits
+        on outstanding observations (or when finished)."""
+        if self._done or n <= 0:
+            return []
+        take, self._pending = self._pending[:n], self._pending[n:]
+        self._outstanding += len(take)
+        return [dict(c) for c in take]
+
+    def observe(self, trials: List[Trial]) -> None:
+        for t in trials:
+            self.trials.append(t)
+            self._ingest(t)
+        self._outstanding -= len(trials)
+        if self._outstanding < 0:
+            raise RuntimeError(
+                f"{self.name}: observed more trials than suggested")
+        self._check_done()
+
+    def finished(self) -> bool:
+        return self._done
+
+    def result(self) -> SearchResult:
+        return _finish(self.trials)
+
+    # -- subclass hooks ----------------------------------------------------
+    def _start(self) -> None:
+        raise NotImplementedError
+
+    def _ingest(self, trial: Trial) -> None:
+        pass
+
+    def _advance(self) -> bool:
+        """Refill ``self._pending`` for the next generation/rung. Return
+        False when the search is exhausted; True if it progressed (even if
+        no *new* configs resulted — e.g. a generation of already-seen
+        children). Called only at batch boundaries."""
+        return False
+
+    def _check_done(self) -> None:
+        # Loop: a generation whose members were all already seen produces no
+        # pending work and must advance again immediately.
+        while (not self._done and not self._pending
+               and self._outstanding == 0):
+            if not self._advance():
+                self._done = True
+
+    # -- serial driver (backward-compatible API) ---------------------------
+    def run(self, space: ConfigSpace, ctx: TuningContext,
+            evaluate: Evaluator) -> SearchResult:
+        call = _fidelity_caller(evaluate)
+        self.reset(space, ctx)
+        while not self.finished():
+            batch = self.suggest(1)
+            if not batch:
+                break   # defensive: a waiting strategy can't progress here
+            fid = self.fidelity
+            self.observe([Trial(dict(cfg), call(cfg, fid), fidelity=fid)
+                          for cfg in batch])
+        return self.result()
+
+
 class ExhaustiveSearch(SearchStrategy):
     """Evaluate every valid config (paper-faithful; Triton autotuner mode)."""
 
@@ -81,13 +207,11 @@ class ExhaustiveSearch(SearchStrategy):
     def __init__(self, max_configs: Optional[int] = None):
         self.max_configs = max_configs
 
-    def run(self, space, ctx, evaluate):
-        trials: List[Trial] = []
-        for i, cfg in enumerate(space.iter_valid(ctx)):
-            if self.max_configs is not None and i >= self.max_configs:
-                break
-            trials.append(Trial(cfg, evaluate(cfg)))
-        return _finish(trials)
+    def _start(self) -> None:
+        valid = self.space.valid_configs(self.ctx)
+        if self.max_configs is not None:
+            valid = valid[: self.max_configs]
+        self._pending = valid
 
 
 class RandomSearch(SearchStrategy):
@@ -97,14 +221,11 @@ class RandomSearch(SearchStrategy):
         self.budget = budget
         self.seed = seed
 
-    def run(self, space, ctx, evaluate):
+    def _start(self) -> None:
         rng = random.Random(self.seed)
-        valid = space.valid_configs(ctx)
-        if not valid:
-            return SearchResult(None, math.inf, [], 0)
+        valid = self.space.valid_configs(self.ctx)
         rng.shuffle(valid)
-        trials = [Trial(cfg, evaluate(cfg)) for cfg in valid[: self.budget]]
-        return _finish(trials)
+        self._pending = valid[: self.budget]
 
 
 class EvolutionarySearch(SearchStrategy):
@@ -136,34 +257,39 @@ class EvolutionarySearch(SearchStrategy):
                 return new
         return dict(cfg)
 
-    def run(self, space, ctx, evaluate):
-        rng = random.Random(self.seed)
-        valid = space.valid_configs(ctx)
-        if not valid:
-            return SearchResult(None, math.inf, [], 0)
-        rng.shuffle(valid)
-        seen: Dict[Tuple, float] = {}
-        trials: List[Trial] = []
+    def _start(self) -> None:
+        self._rng = random.Random(self.seed)
+        self._seen: Dict[Tuple, float] = {}
+        self._gen = 0
+        valid = self.space.valid_configs(self.ctx)
+        self._rng.shuffle(valid)
+        self._cohort = valid[: self.population]
+        self._pending = list(self._cohort)
 
-        def eval_once(cfg: Config) -> float:
-            key = _cfg_key(cfg)
-            if key not in seen:
-                seen[key] = evaluate(cfg)
-                trials.append(Trial(dict(cfg), seen[key]))
-            return seen[key]
+    def _ingest(self, trial: Trial) -> None:
+        self._seen.setdefault(_cfg_key(trial.config), trial.metric)
 
-        pop = valid[: self.population]
-        scored = sorted(((eval_once(c), c) for c in pop), key=lambda x: x[0])
-        for _ in range(self.generations):
-            parents = [c for _, c in scored[: max(2, self.population // 2)]]
-            kids = [self._mutate(space, ctx, rng.choice(parents), rng)
-                    for _ in range(self.children)]
-            scored = sorted(
-                {(eval_once(c), _cfg_key(c)): c for c in parents + kids}.items(),
-                key=lambda kv: kv[0][0],
-            )
-            scored = [(m, c) for (m, _), c in scored][: self.population]
-        return _finish(trials)
+    def _advance(self) -> bool:
+        if not self._cohort or self._gen >= self.generations:
+            return False
+        self._gen += 1
+        scored = sorted(
+            {_cfg_key(c): c for c in self._cohort}.values(),
+            key=lambda c: (self._seen.get(_cfg_key(c), math.inf),
+                           _cfg_key(c)))
+        parents = scored[: max(2, self.population // 2)]
+        kids = [self._mutate(self.space, self.ctx,
+                             self._rng.choice(parents), self._rng)
+                for _ in range(self.children)]
+        cohort, seen_keys = [], set()
+        for c in parents + kids:
+            k = _cfg_key(c)
+            if k not in seen_keys:
+                seen_keys.add(k)
+                cohort.append(c)
+        self._cohort = cohort
+        self._pending = [c for c in cohort if _cfg_key(c) not in self._seen]
+        return True
 
 
 class SuccessiveHalving(SearchStrategy):
@@ -173,6 +299,10 @@ class SuccessiveHalving(SearchStrategy):
     repetitions); the tuner's measurement backends provide it. Configs are
     measured at low fidelity, the best ``keep_fraction`` survive to the next
     rung at ``fidelity_mult``× precision.
+
+    If every highest-fidelity measurement fails, the winner falls back to
+    the best *finite* trial across all rungs instead of reporting failure —
+    a low-fidelity estimate beats no config at all.
     """
 
     name = "successive_halving"
@@ -187,38 +317,42 @@ class SuccessiveHalving(SearchStrategy):
         self.fidelity_mult = fidelity_mult
         self.seed = seed
 
-    def run(self, space, ctx, evaluate):
+    def _start(self) -> None:
         rng = random.Random(self.seed)
-        valid = space.valid_configs(ctx)
-        if not valid:
-            return SearchResult(None, math.inf, [], 0)
+        valid = self.space.valid_configs(self.ctx)
         rng.shuffle(valid)
-        survivors = valid[: self.initial]
-        trials: List[Trial] = []
-        fidelity = self.base_fidelity
-        evals = 0
-        last_scored: List[Tuple[float, Config]] = []
-        for rung in range(self.rungs):
-            scored = []
-            for cfg in survivors:
-                try:
-                    m = evaluate(cfg, fidelity=fidelity)  # type: ignore[call-arg]
-                except TypeError:
-                    m = evaluate(cfg)
-                evals += 1
-                trials.append(Trial(dict(cfg), m, fidelity=fidelity))
-                scored.append((m, cfg))
-            scored.sort(key=lambda x: x[0])
-            last_scored = scored
-            keep = max(1, int(len(scored) * self.keep_fraction))
-            survivors = [c for m, c in scored[:keep] if math.isfinite(m)]
-            if len(survivors) <= 1:
-                break
-            fidelity *= self.fidelity_mult
-        if not last_scored or not math.isfinite(last_scored[0][0]):
-            return SearchResult(None, math.inf, trials, evals)
-        best_m, best_c = last_scored[0]
-        return SearchResult(dict(best_c), best_m, trials, evals)
+        self._rung = 0
+        self._rung_scores: List[Tuple[float, Config]] = []
+        self._last_scored: List[Tuple[float, Config]] = []
+        self.fidelity = self.base_fidelity
+        self._pending = valid[: self.initial]
+
+    def _ingest(self, trial: Trial) -> None:
+        self._rung_scores.append((trial.metric, dict(trial.config)))
+
+    def _advance(self) -> bool:
+        if not self._rung_scores:
+            return False   # empty space, or rung produced nothing
+        scored = sorted(self._rung_scores, key=lambda x: x[0])
+        self._last_scored = scored
+        self._rung += 1
+        keep = max(1, int(len(scored) * self.keep_fraction))
+        survivors = [c for m, c in scored[:keep] if math.isfinite(m)]
+        self._rung_scores = []
+        if len(survivors) <= 1 or self._rung >= self.rungs:
+            return False
+        self.fidelity *= self.fidelity_mult
+        self._pending = survivors
+        return True
+
+    def result(self) -> SearchResult:
+        evals = len(self.trials)
+        if self._last_scored and math.isfinite(self._last_scored[0][0]):
+            best_m, best_c = self._last_scored[0]
+            return SearchResult(dict(best_c), best_m, self.trials, evals)
+        # Final rung all failed: salvage the best finite trial from any
+        # earlier rung rather than discarding a usable config.
+        return _finish(self.trials)
 
 
 def make_strategy(name: str, **kwargs) -> SearchStrategy:

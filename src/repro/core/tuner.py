@@ -25,6 +25,17 @@ call time:
                                                            tuning      (Q4.4)
   miss, policy "error"                                   → raise (CI mode)
 
+A persisted *failed* search (metric=inf) is never served as a hit — it is
+kept only for visibility, and lookups treat it as a miss so the scenario is
+retuned (policy "tune") or re-enqueued (policy "heuristic").
+
+Searches run through the pipelined ``TuningEngine`` (compile/measure
+overlap + lowered-HLO dedupe) whenever the backend supports the split;
+``tune_many`` tunes independent (kernel, ctx) pairs concurrently on a
+thread pool sharing one compile pool, and ``start_background_tuning``
+spawns the daemon worker that drains the ``TuningQueue`` during idle time
+so ``on_miss="heuristic"`` converges in serving (wired by launch/serve.py).
+
 The module-level ``default_tuner()`` targets ``$REPRO_TARGET_CHIP`` (default
 tpu_v5e) with the analytical backend so model code autotunes deterministically
 on this container; tests and benchmarks construct explicit tuners with
@@ -33,13 +44,16 @@ wall-clock backends.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 import logging
 import os
 import threading
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, Iterable, List, Optional, Tuple, Union
 
 from repro.core import cache as cache_lib
+from repro.core import engine as engine_lib
 from repro.core import measure as measure_lib
 from repro.core import search as search_lib
 from repro.core.config_space import Config, ConfigSpace, TuningContext
@@ -57,6 +71,11 @@ class TunableKernel:
     workload_fn: Optional[Callable[[Config, TuningContext], KernelWorkload]] = None
     make_runner: Optional[measure_lib.RunnerFactory] = None
     heuristic: Optional[Callable[[TuningContext], Config]] = None
+    # Optional map config -> *effective* config (blocks clamped to dims,
+    # no-op flags normalized away). Configs with equal canonical forms lower
+    # to identical programs ("A Few Fit Most"), so the pipelined engine
+    # skips tracing, compiling, and measuring them entirely.
+    canonicalize: Optional[Callable[[Config, TuningContext], Config]] = None
 
     def default_config(self, ctx: TuningContext) -> Config:
         if self.heuristic is not None:
@@ -72,21 +91,44 @@ class TuningQueue:
     def __init__(self):
         self._lock = threading.Lock()
         self._items: Dict[str, Tuple[TunableKernel, TuningContext]] = {}
+        self._nonempty = threading.Event()
 
     def add(self, kernel: TunableKernel, ctx: TuningContext) -> None:
         key = cache_lib.cache_key(kernel.name, kernel.version, kernel.space, ctx)
         with self._lock:
             self._items.setdefault(key, (kernel, ctx))
+            self._nonempty.set()
+
+    def pop(self) -> Optional[Tuple[TunableKernel, TuningContext]]:
+        """Remove and return one deferred request, or None when empty."""
+        with self._lock:
+            if not self._items:
+                self._nonempty.clear()
+                return None
+            key = next(iter(self._items))
+            item = self._items.pop(key)
+            if not self._items:
+                self._nonempty.clear()
+            return item
 
     def drain(self) -> List[Tuple[TunableKernel, TuningContext]]:
         with self._lock:
             items = list(self._items.values())
             self._items.clear()
+            self._nonempty.clear()
         return items
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the queue is non-empty (or timeout). True if items
+        may be available."""
+        return self._nonempty.wait(timeout)
 
     def __len__(self) -> int:
         with self._lock:
             return len(self._items)
+
+
+KernelRef = Union[TunableKernel, str]
 
 
 class Autotuner:
@@ -94,7 +136,8 @@ class Autotuner:
                  cache: Optional[cache_lib.TuningCache] = None,
                  backend: Optional[measure_lib.MeasureBackend] = None,
                  strategy: Optional[search_lib.SearchStrategy] = None,
-                 on_miss: str = "tune"):
+                 on_miss: str = "tune",
+                 compile_workers: Optional[int] = None):
         assert on_miss in ("tune", "heuristic", "error")
         self.cache = cache if cache is not None else cache_lib.TuningCache()
         self.backend = backend or measure_lib.AnalyticalMeasure(
@@ -102,11 +145,23 @@ class Autotuner:
         self.strategy = strategy or search_lib.ExhaustiveSearch()
         self.on_miss = on_miss
         self.queue = TuningQueue()
-        self.stats = {"hits": 0, "misses": 0, "tunes": 0, "heuristic_uses": 0}
+        self.engine = engine_lib.TuningEngine(
+            self.backend,
+            pool=(measure_lib.CompilePool(compile_workers)
+                  if compile_workers else None))
+        self.stats = {"hits": 0, "misses": 0, "tunes": 0, "heuristic_uses": 0,
+                      "background_tunes": 0, "failed_retunes": 0}
+        self._stats_lock = threading.Lock()
+        self._bg_thread: Optional[threading.Thread] = None
+        self._bg_stop = threading.Event()
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        with self._stats_lock:
+            self.stats[key] += n
 
     # -- core API ----------------------------------------------------------
     @staticmethod
-    def resolve(kernel) -> TunableKernel:
+    def resolve(kernel: KernelRef) -> TunableKernel:
         """Accept a TunableKernel or a registry name (registry-driven
         construction: the registry is the only kernel enumeration point)."""
         if isinstance(kernel, str):
@@ -114,16 +169,28 @@ class Autotuner:
             return get_kernel(kernel).tunable
         return kernel
 
-    def tune(self, kernel, ctx: TuningContext,
-             strategy: Optional[search_lib.SearchStrategy] = None
-             ) -> cache_lib.CacheEntry:
+    def tune(self, kernel: KernelRef, ctx: TuningContext,
+             strategy: Optional[search_lib.SearchStrategy] = None,
+             *, pipelined: Optional[bool] = None) -> cache_lib.CacheEntry:
         """Run the search now and persist the winner. ``kernel`` may be a
-        TunableKernel or a registered kernel name."""
+        TunableKernel or a registered kernel name.
+
+        ``pipelined=None`` (default) uses the compile/measure-overlap engine
+        whenever the backend supports it; ``False`` forces the serial
+        evaluate-one-at-a-time path (the benchmark baseline). Strategies are
+        stateful, so the tuner always searches on a private clone — one
+        strategy instance can serve concurrent ``tune_many`` workers.
+        """
         kernel = self.resolve(kernel)
-        strat = strategy or self.strategy
-        evaluate = self.backend.evaluator(kernel, ctx)
-        result = strat.run(kernel.space, ctx, evaluate)
-        self.stats["tunes"] += 1
+        strat = copy.deepcopy(strategy or self.strategy)
+        if pipelined is None:
+            pipelined = self.engine.can_pipeline(kernel)
+        if pipelined:
+            result = self.engine.search(kernel, ctx, strat)
+        else:
+            result = strat.run(kernel.space, ctx,
+                               self.backend.evaluator(kernel, ctx))
+        self._bump("tunes")
         if result.best is None:
             # Nothing measurable — fall back to the structural default but
             # record the failure so it is visible, not silent.
@@ -131,42 +198,139 @@ class Autotuner:
             entry = cache_lib.make_entry(
                 cfg, float("inf"), result.evaluations,
                 f"{strat.name}(failed)", self.backend.name,
-                _chip_name(self.backend))
+                _chip_name(self.backend),
+                compile_s=result.compile_s, measure_s=result.measure_s)
         else:
             entry = cache_lib.make_entry(
                 result.best, result.best_metric, result.evaluations,
-                strat.name, self.backend.name, _chip_name(self.backend))
+                strat.name, self.backend.name, _chip_name(self.backend),
+                compile_s=result.compile_s, measure_s=result.measure_s)
         self.cache.put(kernel.name, kernel.version, kernel.space, ctx, entry)
-        log.info("tuned %s ctx=%s -> %s (%.3g s/call, %d evals)",
+        log.info("tuned %s ctx=%s -> %s (%.3g s/call, %d evals, "
+                 "compile %.2fs / measure %.2fs)",
                  kernel.name, ctx.signature(), entry.config, entry.metric,
-                 entry.n_evaluated)
+                 entry.n_evaluated, entry.compile_s, entry.measure_s)
         return entry
 
-    def best_config(self, kernel, ctx: TuningContext) -> Config:
+    def tune_many(self, items: Iterable[Tuple[KernelRef, TuningContext]],
+                  strategy: Optional[search_lib.SearchStrategy] = None,
+                  max_workers: Optional[int] = None,
+                  return_exceptions: bool = False
+                  ) -> List[Union[cache_lib.CacheEntry, BaseException]]:
+        """Tune independent (kernel, ctx) pairs concurrently.
+
+        Results align with the input order. Compiles from all searches share
+        the engine's pool (and its program cache); device timing interleaves
+        fairly under the process-wide device lock; cache writes are
+        serialized by the TuningCache lock. With ``return_exceptions`` a
+        failing pair yields its exception instead of aborting the batch.
+        """
+        pairs = [(self.resolve(k), ctx) for k, ctx in items]
+        if not pairs:
+            return []
+        # Each search already keeps ~2 cores busy (lowering + a compile
+        # worker), so the default packs one search per core pair.
+        workers = max_workers or min(len(pairs),
+                                     max(1, (os.cpu_count() or 2) // 2))
+
+        def one(pair):
+            return self.tune(pair[0], pair[1], strategy)
+
+        out: List[Union[cache_lib.CacheEntry, BaseException]] = []
+        with ThreadPoolExecutor(max_workers=workers,
+                                thread_name_prefix="repro-tune") as ex:
+            futures = [ex.submit(one, p) for p in pairs]
+            for f in futures:
+                try:
+                    out.append(f.result())
+                except Exception as e:
+                    if not return_exceptions:
+                        raise
+                    out.append(e)
+        return out
+
+    def best_config(self, kernel: KernelRef, ctx: TuningContext) -> Config:
         kernel = self.resolve(kernel)
         entry = self.cache.get(
             kernel.name, kernel.version, kernel.space, ctx,
             require_fingerprint={"backend": self.backend.name})
+        if entry is not None and entry.failed():
+            # Stored failed-search marker: count the forced retune, then
+            # fall through to the miss path (never serve it).
+            self._bump("failed_retunes")
+            entry = None
         if entry is not None:
-            self.stats["hits"] += 1
+            self._bump("hits")
             return dict(entry.config)
-        self.stats["misses"] += 1
+        self._bump("misses")
         if self.on_miss == "tune":
             return dict(self.tune(kernel, ctx).config)
         if self.on_miss == "heuristic":
             self.queue.add(kernel, ctx)
-            self.stats["heuristic_uses"] += 1
+            self._bump("heuristic_uses")
             return kernel.default_config(ctx)
         raise LookupError(
             f"no tuned config for kernel {kernel.name!r} ctx {ctx.signature()} "
             f"and on_miss='error'")
 
+    # -- off-critical-path tuning (Q4.4) -----------------------------------
     def flush_tuning_queue(self) -> int:
         """Tune everything deferred by the heuristic policy (idle-time hook)."""
         items = self.queue.drain()
         for kernel, ctx in items:
             self.tune(kernel, ctx)
         return len(items)
+
+    def start_background_tuning(self, poll_interval_s: float = 0.25
+                                ) -> threading.Thread:
+        """Start (idempotently) the daemon worker that drains the
+        TuningQueue whenever items appear, so serving under
+        ``on_miss="heuristic"`` converges to tuned configs without ever
+        blocking the request path."""
+        if self._bg_thread is not None and self._bg_thread.is_alive():
+            return self._bg_thread
+        # Each worker owns its stop event: if a previous worker outlived its
+        # join timeout (stuck in a slow tune), its event stays set and it
+        # exits on its own — a fresh event can't accidentally revive it.
+        stop = threading.Event()
+        self._bg_stop = stop
+
+        def worker():
+            while not stop.is_set():
+                if not self.queue.wait(timeout=poll_interval_s):
+                    continue
+                item = self.queue.pop()
+                if item is None:
+                    continue
+                kernel, ctx = item
+                try:
+                    self.tune(kernel, ctx)
+                    self._bump("background_tunes")
+                except Exception:
+                    log.exception("background tuning failed for %s",
+                                  kernel.name)
+
+        self._bg_thread = threading.Thread(
+            target=worker, name="repro-bg-tuner", daemon=True)
+        self._bg_thread.start()
+        return self._bg_thread
+
+    def stop_background_tuning(self, timeout: float = 10.0) -> None:
+        if self._bg_thread is None:
+            return
+        self._bg_stop.set()
+        self._bg_thread.join(timeout)
+        if self._bg_thread.is_alive():
+            log.warning("background tuner still finishing a tune after "
+                        "%.1fs; it will exit when the tune completes", timeout)
+        self._bg_thread = None
+
+    def close(self) -> None:
+        """Release the engine's compile pool and stop the background
+        worker. Process-lifetime tuners (default_tuner) never need this;
+        short-lived tuners in tests/benchmarks do."""
+        self.stop_background_tuning()
+        self.engine.close()
 
 
 def _chip_name(backend: measure_lib.MeasureBackend) -> str:
@@ -196,6 +360,10 @@ def default_tuner() -> Autotuner:
                 cache=cache_lib.TuningCache(overlay_path=os.path.abspath(shipped)),
                 on_miss=os.environ.get("REPRO_ON_MISS", "tune"),
             )
+            if (_DEFAULT.on_miss == "heuristic"
+                    and os.environ.get("REPRO_BG_TUNING", "0") == "1"):
+                _DEFAULT.start_background_tuning(
+                    float(os.environ.get("REPRO_BG_INTERVAL", "0.25")))
         return _DEFAULT
 
 

@@ -28,8 +28,10 @@ explicitly, reproducing the paper's Fig. 4/5 analyses).
 
 from __future__ import annotations
 
+import collections
 import functools
 import math
+import threading
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -55,8 +57,34 @@ def _ctx(tuner: Autotuner, shapes: Dict[str, Tuple[int, ...]], dtype: str,
     return TuningContext(chip=chip, shapes=shapes, dtype=dtype, extra=extra)
 
 
+# Runner factories are called once per candidate config, but the operands
+# they build depend only on (key, shape, dtype) — memoize them so tuning a
+# 70-config space doesn't regenerate the same arrays 70 times. Bounded LRU:
+# operands for host-scale bench cases are small, but don't pin arbitrarily
+# many of them alive.
+_OPERAND_MEMO: "collections.OrderedDict[Tuple, Any]" = collections.OrderedDict()
+_OPERAND_MEMO_LOCK = threading.Lock()
+_OPERAND_MEMO_MAX = 64
+
+
+def _memo_operand(cache_key, build):
+    with _OPERAND_MEMO_LOCK:
+        if cache_key in _OPERAND_MEMO:
+            _OPERAND_MEMO.move_to_end(cache_key)
+            return _OPERAND_MEMO[cache_key]
+    out = build()
+    with _OPERAND_MEMO_LOCK:
+        _OPERAND_MEMO[cache_key] = out
+        while len(_OPERAND_MEMO) > _OPERAND_MEMO_MAX:
+            _OPERAND_MEMO.popitem(last=False)
+    return out
+
+
 def _rand(key, shape, dtype):
-    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+    k = ("normal", tuple(jax.device_get(key).tolist()), tuple(shape),
+         str(dtype))
+    return _memo_operand(
+        k, lambda: jax.random.normal(key, shape, jnp.float32).astype(dtype))
 
 
 # ===========================================================================
@@ -133,6 +161,15 @@ def _flash_heuristic(ctx: TuningContext) -> Config:
     return {"block_q": 128, "block_kv": 128, "pad_head_dim": False}
 
 
+def _flash_canonical(cfg: Config, ctx: TuningContext) -> Config:
+    # pad_head_dim is a no-op when the head dim is already lane-aligned —
+    # both variants lower to the identical program.
+    c = dict(cfg)
+    if ctx.shape("q")[3] % LANES == 0:
+        c["pad_head_dim"] = False
+    return c
+
+
 def _flash_runner(cfg: Config, ctx: TuningContext):
     q_s, k_s = ctx.shape("q"), ctx.shape("k")
     dtype = jnp.dtype(ctx.dtype)
@@ -175,6 +212,7 @@ FLASH_ATTENTION = TunableKernel(
     workload_fn=_flash_workload,
     make_runner=_flash_runner,
     heuristic=_flash_heuristic,
+    canonicalize=_flash_canonical,
 )
 
 
@@ -329,6 +367,14 @@ def _decode_heuristic(ctx: TuningContext) -> Config:
     return {"block_kv": 512, "k_splits": 1}
 
 
+def _decode_canonical(cfg: Config, ctx: TuningContext) -> Config:
+    # The kernel clamps its KV block to the (padded) sequence; block_kv
+    # values past that lower to the same program.
+    c = dict(cfg)
+    c["block_kv"] = min(c["block_kv"], _rup(ctx.shape("k")[2], 128))
+    return c
+
+
 def _decode_runner(cfg: Config, ctx: TuningContext):
     q_s, k_s = ctx.shape("q"), ctx.shape("k")
     dtype = jnp.dtype(ctx.dtype)
@@ -348,6 +394,7 @@ DECODE_ATTENTION = TunableKernel(
     workload_fn=_decode_workload,
     make_runner=_decode_runner,
     heuristic=_decode_heuristic,
+    canonicalize=_decode_canonical,
 )
 
 
@@ -433,6 +480,12 @@ def _gqa_decode_heuristic(ctx: TuningContext) -> Config:
     return {"block_kv": 512, "k_splits": 1, "pack_gqa": True}
 
 
+def _gqa_decode_canonical(cfg: Config, ctx: TuningContext) -> Config:
+    c = dict(cfg)
+    c["block_kv"] = min(c["block_kv"], _rup(ctx.shape("k")[2], 128))
+    return c
+
+
 def _gqa_decode_runner(cfg: Config, ctx: TuningContext):
     from repro.kernels.gqa_decode import gqa_decode as gqa_kernel
     q_s, k_s = ctx.shape("q"), ctx.shape("k")
@@ -443,8 +496,10 @@ def _gqa_decode_runner(cfg: Config, ctx: TuningContext):
     v = _rand(keys[2], k_s, dtype)
     T = k_s[2]
     fill = float(ctx.extra.get("fill", 1.0))
-    lens = jax.random.randint(jax.random.PRNGKey(7), (q_s[0],), 1,
-                              max(2, int(T * fill)) + 1)
+    hi = max(2, int(T * fill)) + 1
+    lens = _memo_operand(
+        ("randint", 7, q_s[0], hi),
+        lambda: jax.random.randint(jax.random.PRNGKey(7), (q_s[0],), 1, hi))
     fn = jax.jit(functools.partial(gqa_kernel, **cfg))
     return KernelRunner(fn, q, k, v, kv_len=lens)
 
@@ -456,6 +511,7 @@ GQA_DECODE_RAGGED = TunableKernel(
     workload_fn=_gqa_decode_workload,
     make_runner=_gqa_decode_runner,
     heuristic=_gqa_decode_heuristic,
+    canonicalize=_gqa_decode_canonical,
 )
 
 
@@ -534,6 +590,12 @@ def _mla_decode_heuristic(ctx: TuningContext) -> Config:
     return {"block_kv": 512, "k_splits": 1}
 
 
+def _mla_decode_canonical(cfg: Config, ctx: TuningContext) -> Config:
+    c = dict(cfg)
+    c["block_kv"] = min(c["block_kv"], _rup(ctx.shape("ckv")[1], 128))
+    return c
+
+
 def _mla_decode_runner(cfg: Config, ctx: TuningContext):
     from repro.kernels.mla_decode import mla_decode as mla_kernel
     dtype = jnp.dtype(ctx.dtype)
@@ -554,6 +616,7 @@ MLA_DECODE = TunableKernel(
     workload_fn=_mla_decode_workload,
     make_runner=_mla_decode_runner,
     heuristic=_mla_decode_heuristic,
+    canonicalize=_mla_decode_canonical,
 )
 
 
@@ -690,6 +753,14 @@ def _mm_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
     )
 
 
+def _mm_canonical(cfg: Config, ctx: TuningContext) -> Config:
+    M, K = ctx.shape("x")
+    N = ctx.shape("y")[1]
+    return {"block_m": min(cfg["block_m"], _rup(M, 8)),
+            "block_n": min(cfg["block_n"], _rup(N, 128)),
+            "block_k": min(cfg["block_k"], _rup(K, 128))}
+
+
 def _mm_runner(cfg: Config, ctx: TuningContext):
     from repro.kernels.matmul import matmul as mm
     dtype = jnp.dtype(ctx.dtype)
@@ -707,6 +778,7 @@ MATMUL = TunableKernel(
     workload_fn=_mm_workload,
     make_runner=_mm_runner,
     heuristic=lambda ctx: {"block_m": 256, "block_n": 256, "block_k": 256},
+    canonicalize=_mm_canonical,
 )
 
 

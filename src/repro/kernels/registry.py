@@ -151,3 +151,36 @@ def _ensure_builtins() -> None:
     registry self-initializing for callers that import this module first."""
     if not _REGISTRY:
         from repro.kernels import ops  # noqa: F401  (import side effect)
+
+
+# ---------------------------------------------------------------------------
+# Registry-driven batch tuning (warm start)
+# ---------------------------------------------------------------------------
+
+def tuning_pairs(chip: ChipSpec, scale: Optional[str] = None,
+                 scenario: Optional[str] = None
+                 ) -> List[Tuple[str, TunableKernel, TuningContext]]:
+    """Every labeled (kernel, ctx) pair the registry's bench cases define
+    for a chip — the canonical work-list for ``Autotuner.tune_many``."""
+    pairs: List[Tuple[str, TunableKernel, TuningContext]] = []
+    for spec in list_kernels(scenario):
+        for case in spec.cases(scale):
+            pairs.append((f"{spec.name}/{case.label}", spec.tunable,
+                          case.context(chip)))
+    return pairs
+
+
+def warm_start(tuner, chip: ChipSpec, scale: Optional[str] = "host",
+               scenario: Optional[str] = None, **tune_many_kwargs
+               ) -> Dict[str, Any]:
+    """Batch-tune the registry's bench cases so a deployment starts with a
+    populated cache instead of tuning on the serving critical path.
+
+    Runs through ``tuner.tune_many`` — compiles overlap and share the
+    engine's program cache across kernels. Returns
+    ``{"<kernel>/<case label>": CacheEntry | Exception}``.
+    """
+    triples = tuning_pairs(chip, scale=scale, scenario=scenario)
+    entries = tuner.tune_many([(k, ctx) for _, k, ctx in triples],
+                              return_exceptions=True, **tune_many_kwargs)
+    return {label: e for (label, _, _), e in zip(triples, entries)}

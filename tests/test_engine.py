@@ -1,0 +1,360 @@
+"""Pipelined tuning engine: ask/tell protocol, compile/measure split,
+dedupe, background tuning, and the concurrency surface."""
+
+import math
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    AnalyticalMeasure, Autotuner, ConfigSpace, ExhaustiveSearch,
+    HybridMeasure, KernelRunner, KernelWorkload, Param, RandomSearch,
+    SuccessiveHalving, EvolutionarySearch, TunableKernel, Trial,
+    TuningContext, WallClockTimer, get_chip, make_strategy,
+)
+from repro.core.costmodel import estimate_seconds
+from repro.core.engine import TuningEngine
+from repro.core.measure import CompilePool
+
+
+def space():
+    return ConfigSpace("e", [Param("a", (1, 2, 4, 8, 16)),
+                             Param("b", (1, 2, 4, 8))])
+
+
+def ctx():
+    return TuningContext(chip=get_chip("tpu_v5e"), shapes={"x": (64, 128)})
+
+
+def bowl(cfg, fidelity=1):
+    return (cfg["a"] - 4) ** 2 + (cfg["b"] - 2) ** 2 + 0.1
+
+
+def drive_ask_tell(strat, sp, c, evaluate, batch: int):
+    """Hand-rolled ask/tell loop at an arbitrary batch size."""
+    strat.reset(sp, c)
+    while not strat.finished():
+        cfgs = strat.suggest(batch)
+        if not cfgs:
+            break
+        fid = strat.fidelity
+        strat.observe([Trial(dict(cfg), evaluate(cfg, fidelity=fid),
+                             fidelity=fid) for cfg in cfgs])
+    return strat.result()
+
+
+ALL_STRATEGIES = ["exhaustive", "random", "evolutionary",
+                  "successive_halving"]
+
+
+@pytest.mark.parametrize("name", ALL_STRATEGIES)
+@pytest.mark.parametrize("batch", [1, 3, 7])
+def test_ask_tell_matches_serial_run(name, batch):
+    """Same seed => byte-identical trial logs and best config, for every
+    strategy and any in-flight batch size."""
+    kwargs = {"budget": 10} if name == "random" else {}
+    a = make_strategy(name, **kwargs).run(space(), ctx(), bowl)
+    b = drive_ask_tell(make_strategy(name, **kwargs), space(), ctx(), bowl,
+                       batch)
+    assert a.best == b.best
+    assert a.best_metric == b.best_metric
+    assert a.trials == b.trials          # byte-identical log
+
+
+def test_ask_tell_idle_suggest_is_empty():
+    s = make_strategy("exhaustive")
+    s.reset(space(), ctx())
+    got = s.suggest(1000)
+    assert len(got) == 20
+    assert s.suggest(1) == []            # everything outstanding
+    s.observe([Trial(c, bowl(c)) for c in got])
+    assert s.finished()
+
+
+def test_successive_halving_falls_back_to_earlier_rung():
+    """If every highest-fidelity measurement fails, the best finite trial
+    from an earlier rung wins instead of reporting total failure."""
+
+    def flaky_high_fidelity(cfg, fidelity=1):
+        if fidelity > 1:
+            return math.inf
+        return bowl(cfg)
+
+    res = SuccessiveHalving(initial=12, rungs=3, base_fidelity=1,
+                            fidelity_mult=4).run(space(), ctx(),
+                                                 flaky_high_fidelity)
+    assert res.best is not None
+    assert math.isfinite(res.best_metric)
+    assert res.best_metric == min(t.metric for t in res.trials if t.ok())
+
+
+def test_valid_configs_enumeration_is_cached():
+    sp = space()
+    calls = {"n": 0}
+
+    def counting(cfg, c):
+        calls["n"] += 1
+        return True
+
+    sp.constrain("count", counting)
+    c = ctx()
+    first = sp.valid_configs(c)
+    n_after_first = calls["n"]
+    again = sp.valid_configs(c)
+    assert calls["n"] == n_after_first   # second enumeration: pure cache hit
+    assert first == again
+    # Returned lists are private copies — caller mutation can't poison it.
+    again[0]["a"] = 999
+    assert sp.valid_configs(c)[0]["a"] != 999
+
+
+# ---------------------------------------------------------------------------
+# Autotuner: failed entries, background worker, tune_many
+# ---------------------------------------------------------------------------
+
+def _kernel(name="e", workload=None):
+    def wl(cfg, c):
+        return KernelWorkload(flops=1e9, hbm_bytes=1e8 / cfg["a"],
+                              grid_steps=64 // cfg["a"], vmem_bytes=1024)
+    return TunableKernel(name, space(), workload_fn=workload or wl,
+                         heuristic=lambda c: {"a": 1, "b": 1})
+
+
+def test_inf_cache_entry_is_never_a_hit(tmp_cache):
+    """A persisted failed search must not be served; the tuner retunes."""
+    t = Autotuner(cache=tmp_cache,
+                  backend=AnalyticalMeasure(get_chip("tpu_v5e")))
+
+    def bad(cfg, c):
+        raise RuntimeError("boom")
+
+    entry = t.tune(_kernel(workload=bad), ctx())
+    assert math.isinf(entry.metric)      # failure recorded for visibility
+    # A healthy kernel under the same cache key now tunes instead of
+    # reusing the poisoned entry.
+    cfg = t.best_config(_kernel(), ctx())
+    assert t.stats["misses"] == 1 and t.stats["tunes"] == 2
+    assert t.stats["failed_retunes"] == 1
+    assert cfg["a"] == 16                # true optimum, not the inf config
+    # The cache-level filter agrees with the tuner-level policy.
+    assert t.cache.get("e", 1, space(), ctx(), skip_failed=True) is not None
+    assert t.best_config(_kernel(), ctx()) == cfg
+    assert t.stats["hits"] == 1          # finite entry is a normal hit
+
+
+def test_inf_entry_reenqueues_under_heuristic(tmp_cache):
+    t = Autotuner(cache=tmp_cache,
+                  backend=AnalyticalMeasure(get_chip("tpu_v5e")),
+                  on_miss="heuristic")
+
+    def bad(cfg, c):
+        raise RuntimeError("boom")
+
+    t.tune(_kernel(workload=bad), ctx())
+    cfg = t.best_config(_kernel(), ctx())
+    assert cfg == {"a": 1, "b": 1}       # heuristic, not the inf entry
+    assert len(t.queue) == 1             # re-enqueued for background tuning
+
+
+def test_background_worker_drains_queue(tmp_cache):
+    t = Autotuner(cache=tmp_cache,
+                  backend=AnalyticalMeasure(get_chip("tpu_v5e")),
+                  on_miss="heuristic")
+    t.start_background_tuning(poll_interval_s=0.01)
+    try:
+        cfg = t.best_config(_kernel(), ctx())
+        assert cfg == {"a": 1, "b": 1}   # instant heuristic on the hot path
+        deadline = time.monotonic() + 30
+        while t.stats["background_tunes"] < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert t.stats["background_tunes"] >= 1
+        assert len(t.queue) == 0
+        assert t.best_config(_kernel(), ctx()) == {"a": 16, "b": 1}
+    finally:
+        t.stop_background_tuning()
+
+
+def test_start_background_tuning_is_idempotent(tmp_cache):
+    t = Autotuner(cache=tmp_cache,
+                  backend=AnalyticalMeasure(get_chip("tpu_v5e")))
+    th1 = t.start_background_tuning(poll_interval_s=0.01)
+    th2 = t.start_background_tuning(poll_interval_s=0.01)
+    assert th1 is th2
+    t.stop_background_tuning()
+
+
+def test_tune_many_parallel_cache_writes(tmp_cache):
+    """Concurrent tune_many workers persist every entry race-free."""
+    t = Autotuner(cache=tmp_cache,
+                  backend=AnalyticalMeasure(get_chip("tpu_v5e")))
+    ctxs = [TuningContext(chip=get_chip("tpu_v5e"), shapes={"x": (64 * i, 128)})
+            for i in range(1, 9)]
+    entries = t.tune_many([(_kernel(), c) for c in ctxs], max_workers=4)
+    assert len(entries) == 8
+    assert all(math.isfinite(e.metric) for e in entries)
+    assert len(t.cache) == 8             # one persisted entry per context
+    for c in ctxs:
+        assert t.best_config(_kernel(), c) == {"a": 16, "b": 1}
+    assert t.stats["hits"] == 8
+
+
+def test_tune_many_return_exceptions(tmp_cache):
+    t = Autotuner(cache=tmp_cache,
+                  backend=AnalyticalMeasure(get_chip("tpu_v5e")))
+    no_workload = TunableKernel("nw", space())    # analytical can't measure
+    out = t.tune_many([(_kernel(), ctx()), (no_workload, ctx())],
+                      return_exceptions=True)
+    assert math.isfinite(out[0].metric)
+    assert isinstance(out[1], Exception)
+    with pytest.raises(ValueError):
+        t.tune_many([(no_workload, ctx())])
+
+
+# ---------------------------------------------------------------------------
+# HybridMeasure fidelity switchover
+# ---------------------------------------------------------------------------
+
+def test_hybrid_measure_fidelity_switchover():
+    chip = get_chip("tpu_v5e")
+    timed = {"n": 0}
+
+    def runner_factory(cfg, c):
+        def run():
+            timed["n"] += 1
+            return 0
+        return run
+
+    k = _kernel()
+    k = TunableKernel("h", space(), workload_fn=k.workload_fn,
+                      make_runner=runner_factory)
+    hybrid = HybridMeasure(chip, timer=WallClockTimer(reps=1, warmup=0),
+                           wall_clock_fidelity=4)
+    ev = hybrid.evaluator(k, ctx())
+    cfg = {"a": 4, "b": 2}
+    low = ev(cfg, fidelity=1)
+    assert timed["n"] == 0               # below threshold: model only
+    assert low == pytest.approx(
+        estimate_seconds(k.workload_fn(cfg, ctx()), chip))
+    high = ev(cfg, fidelity=4)
+    assert timed["n"] >= 1               # threshold reached: real timing
+    assert high != low
+
+
+def test_hybrid_without_runner_stays_analytical():
+    chip = get_chip("tpu_v5e")
+    hybrid = HybridMeasure(chip, wall_clock_fidelity=4)
+    ev = hybrid.evaluator(_kernel(), ctx())
+    assert ev({"a": 4, "b": 2}, fidelity=8) == ev({"a": 4, "b": 2},
+                                                  fidelity=1)
+
+
+# ---------------------------------------------------------------------------
+# CompilePool + engine on real (tiny) kernels
+# ---------------------------------------------------------------------------
+
+import jax
+import jax.numpy as jnp
+
+
+def _jit_kernel(shared_program: bool):
+    """A wall-clock-tunable toy kernel. With ``shared_program`` every config
+    lowers to the identical HLO (the 'A Few Fit Most' extreme)."""
+    sp = ConfigSpace("jit", [Param("k", (1, 2, 3))])
+
+    def make_runner(cfg, c):
+        k = 1 if shared_program else cfg["k"]
+        fn = jax.jit(lambda x: x * float(k) + 1.0)
+        return KernelRunner(fn, jnp.ones((8, 128), jnp.float32))
+
+    return TunableKernel("jit", sp, make_runner=make_runner)
+
+
+def test_compile_pool_dedupes_identical_lowerings():
+    pool = CompilePool(workers=1)
+    k = _jit_kernel(shared_program=True)
+    p1 = pool.begin(k.make_runner({"k": 1}, ctx()), {"k": 1})
+    p2 = pool.begin(k.make_runner({"k": 2}, ctx()), {"k": 2})
+    assert p1.hlo_hash == p2.hlo_hash
+    assert p1.owns_compile and not p2.owns_compile
+    r1, r2 = pool.finish(p1), pool.finish(p2)
+    assert not r1.deduped and r2.deduped
+    assert r2.compile_s == 0.0           # charged once, to the owner
+    assert pool.distinct_programs == 1
+    m1, _ = WallClockTimer(reps=1, warmup=1).time_prepared(r1)
+    assert math.isfinite(m1)
+    pool.close()
+
+
+def test_engine_dedupes_metrics_and_accounts_time():
+    engine = TuningEngine(WallClockTimer(reps=1, warmup=1))
+    k = _jit_kernel(shared_program=True)
+    res = engine.search(k, ctx(), ExhaustiveSearch())
+    assert len(res.trials) == 3
+    measured = [t for t in res.trials if not t.deduped]
+    assert len(measured) == 1            # one program timed once
+    assert all(t.metric == measured[0].metric for t in res.trials)
+    assert measured[0].compile_s > 0
+    assert measured[0].measure_s > 0
+    engine.close()
+
+
+def test_engine_matches_serial_exploration_wall_clock():
+    k = _jit_kernel(shared_program=False)
+    timer = WallClockTimer(reps=1, warmup=1)
+    serial = ExhaustiveSearch().run(k.space, ctx(),
+                                    timer.evaluator(k, ctx()))
+    engine = TuningEngine(timer)
+    piped = engine.search(k, ctx(), ExhaustiveSearch())
+    engine.close()
+    assert [t.config for t in serial.trials] == [t.config
+                                                 for t in piped.trials]
+    assert all(t.ok() for t in piped.trials)
+
+
+def test_engine_canonicalize_skips_lowering():
+    lowered = {"n": 0}
+    sp = ConfigSpace("canon", [Param("k", (1, 2, 3, 4))])
+
+    def make_runner(cfg, c):
+        lowered["n"] += 1
+        fn = jax.jit(lambda x: x * float(min(cfg["k"], 2)))
+        return KernelRunner(fn, jnp.ones((8, 128), jnp.float32))
+
+    k = TunableKernel("canon", sp, make_runner=make_runner,
+                      canonicalize=lambda cfg, c: {"k": min(cfg["k"], 2)})
+    engine = TuningEngine(WallClockTimer(reps=1, warmup=1))
+    res = engine.search(k, ctx(), ExhaustiveSearch())
+    engine.close()
+    assert len(res.trials) == 4
+    assert lowered["n"] == 2             # k=3, k=4 never even traced
+    assert sum(t.deduped for t in res.trials) == 2
+
+
+def test_engine_falls_back_to_serial_for_analytical():
+    t = TuningEngine(AnalyticalMeasure(get_chip("tpu_v5e")))
+    res = t.search(_kernel(), ctx(), ExhaustiveSearch())
+    assert res.best == {"a": 16, "b": 1}
+    assert res.evaluations == 20
+
+
+def test_registry_canonical_rules_match_lowered_programs():
+    """Canonical-equal configs must lower to identical programs — validates
+    the clamp rules in kernels/ops.py against the real kernels."""
+    import hashlib
+
+    from repro.kernels.registry import get_kernel
+    from repro.core.search import _cfg_key
+
+    spec = get_kernel("matmul")
+    case = spec.cases(scale="host")[0]
+    c = case.context(get_chip("tpu_v5e"))
+    groups = {}
+    for cfg in spec.space.valid_configs(c)[:24]:
+        ck = _cfg_key(spec.tunable.canonicalize(cfg, c))
+        r = spec.tunable.make_runner(cfg, c)
+        h = hashlib.sha256(r.lowered_text().encode()).hexdigest()
+        groups.setdefault(ck, set()).add(h)
+    assert groups
+    for ck, hashes in groups.items():
+        assert len(hashes) == 1, f"canonical group {ck} spans {len(hashes)} programs"
