@@ -24,7 +24,7 @@ def main() -> None:
     from benchmarks import (
         decode_latency, fig1_attention_portability, fig2_attention_latency,
         fig3_rms_cdf, fig4_config_transfer, fig5_config_diversity,
-        roofline_report, search_efficiency, tab1_loc,
+        roofline_report, search_efficiency, serving_throughput, tab1_loc,
     )
     benches = [
         ("fig1_attention_portability", fig1_attention_portability.main),
@@ -33,6 +33,9 @@ def main() -> None:
         ("fig4_config_transfer", fig4_config_transfer.main),
         ("fig5_config_diversity", fig5_config_diversity.main),
         ("decode_latency", decode_latency.main),
+        ("serving_throughput",
+         lambda fast=True: serving_throughput.main(["--fast"] if fast
+                                                   else [])),
         ("tab1_loc", tab1_loc.main),
         ("search_efficiency", search_efficiency.main),
         ("roofline_report", roofline_report.main),

@@ -56,7 +56,7 @@ def main():
           f"queued={len(tuner.queue)}")
     tuner.flush_tuning_queue()     # e.g. on the idle path between batches
     print(f"  after idle-time flush: {tuner.best_config(kernel, ctx)} "
-          f"(stats {tuner.stats})")
+          f"(stats {tuner.stats()})")
 
     print("=== wall-clock tuning on this host (small problem) ===")
     small = TuningContext(chip=get_chip("cpu_host"),

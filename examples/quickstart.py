@@ -33,11 +33,11 @@ def main():
     out = ops.attention(q, k, v, causal=True, tuner=tuner)
     err = float(jnp.max(jnp.abs(out - ref.attention(q, k, v, causal=True))))
     print(f"autotuned attention: max|err| vs oracle = {err:.2e}")
-    print(f"tuner stats after first call: {tuner.stats}")
+    print(f"tuner stats after first call: {tuner.stats()}")
 
     # 2) second call: persistent-cache hit, zero tuning work
     ops.attention(q, k, v, causal=True, tuner=tuner)
-    print(f"tuner stats after second call: {tuner.stats} (hit!)")
+    print(f"tuner stats after second call: {tuner.stats()} (hit!)")
 
     # 3) same kernel, different TPU generation → different best config
     for chip in ("tpu_v5e", "tpu_v6e"):

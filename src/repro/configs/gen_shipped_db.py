@@ -23,6 +23,18 @@ from repro.kernels.registry import get_kernel
 CHIPS = ("tpu_v4", "tpu_v5e", "tpu_v5p", "tpu_v6e")
 OUT = os.path.join(os.path.dirname(__file__), "shipped_tuning_db.json")
 
+# Every shipped scenario is tuned at serving numerics.
+SHIP_DTYPE = "bfloat16"
+
+
+def paged_deployment_shapes(cfg):
+    """Canonical deployment-level paged_decode scenario for an arch —
+    page_size left free so the winner sizes the pool. serve.py must look
+    up EXACTLY this context (shapes + SHIP_DTYPE, full-config geometry) or
+    the shipped entry can never hit: context signatures match exactly."""
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {"q": (16, hq, dh), "k": (16, hkv, 32768, dh)}
+
 
 def scenarios():
     """Representative (kernel, shapes, extra) per arch × serving context.
@@ -51,6 +63,10 @@ def scenarios():
         # cache key — a fill-tagged entry would never be hit at serve time.
         yield ("gqa_decode_ragged",
                {"q": (16, hq, dh), "k": (16, hkv, 32768, dh)}, {})
+        # Deployment-level paged_decode: page_size left FREE so the winner
+        # tells the serving launcher how to lay out the pool (serve.py
+        # reads this entry before building the PagePool).
+        yield ("paged_decode", paged_deployment_shapes(cfg), {})
         if cfg.mla is not None:
             m = cfg.mla
             yield ("mla_decode",
@@ -75,7 +91,7 @@ def main():
         pairs = []
         for name, shapes, extra in scenarios():
             kernel = get_kernel(name).tunable
-            ctx = TuningContext(chip=chip, shapes=shapes, dtype="bfloat16",
+            ctx = TuningContext(chip=chip, shapes=shapes, dtype=SHIP_DTYPE,
                                 extra=extra)
             pairs.append((kernel, ctx))
         entries = tuner.tune_many(pairs, return_exceptions=True)

@@ -149,15 +149,33 @@ class Autotuner:
             self.backend,
             pool=(measure_lib.CompilePool(compile_workers)
                   if compile_workers else None))
-        self.stats = {"hits": 0, "misses": 0, "tunes": 0, "heuristic_uses": 0,
-                      "background_tunes": 0, "failed_retunes": 0}
+        self._stats = {"hits": 0, "misses": 0, "tunes": 0, "heuristic_uses": 0,
+                       "background_tunes": 0, "failed_retunes": 0}
+        self._per_kernel: Dict[str, Dict[str, int]] = {}
         self._stats_lock = threading.Lock()
         self._bg_thread: Optional[threading.Thread] = None
         self._bg_stop = threading.Event()
 
-    def _bump(self, key: str, n: int = 1) -> None:
+    def _bump(self, key: str, n: int = 1,
+              kernel: Optional[str] = None) -> None:
         with self._stats_lock:
-            self.stats[key] += n
+            self._stats[key] += n
+            if kernel is not None:
+                per = self._per_kernel.setdefault(
+                    kernel, {"hits": 0, "misses": 0, "tunes": 0,
+                             "background_tunes": 0})
+                per[key] = per.get(key, 0) + n
+
+    def stats(self) -> Dict[str, object]:
+        """Snapshot of the tuning counters, including per-kernel cache
+        hit/miss/tune counts under ``"per_kernel"`` — the serving benchmark
+        reads these to report how quickly tuning cost amortizes (one miss,
+        then hits for the rest of the trace)."""
+        with self._stats_lock:
+            out: Dict[str, object] = dict(self._stats)
+            out["per_kernel"] = {k: dict(v)
+                                 for k, v in self._per_kernel.items()}
+            return out
 
     # -- core API ----------------------------------------------------------
     @staticmethod
@@ -190,7 +208,7 @@ class Autotuner:
         else:
             result = strat.run(kernel.space, ctx,
                                self.backend.evaluator(kernel, ctx))
-        self._bump("tunes")
+        self._bump("tunes", kernel=kernel.name)
         if result.best is None:
             # Nothing measurable — fall back to the structural default but
             # record the failure so it is visible, not silent.
@@ -257,17 +275,17 @@ class Autotuner:
         if entry is not None and entry.failed():
             # Stored failed-search marker: count the forced retune, then
             # fall through to the miss path (never serve it).
-            self._bump("failed_retunes")
+            self._bump("failed_retunes", kernel=kernel.name)
             entry = None
         if entry is not None:
-            self._bump("hits")
+            self._bump("hits", kernel=kernel.name)
             return dict(entry.config)
-        self._bump("misses")
+        self._bump("misses", kernel=kernel.name)
         if self.on_miss == "tune":
             return dict(self.tune(kernel, ctx).config)
         if self.on_miss == "heuristic":
             self.queue.add(kernel, ctx)
-            self._bump("heuristic_uses")
+            self._bump("heuristic_uses", kernel=kernel.name)
             return kernel.default_config(ctx)
         raise LookupError(
             f"no tuned config for kernel {kernel.name!r} ctx {ctx.signature()} "
@@ -305,7 +323,7 @@ class Autotuner:
                 kernel, ctx = item
                 try:
                     self.tune(kernel, ctx)
-                    self._bump("background_tunes")
+                    self._bump("background_tunes", kernel=kernel.name)
                 except Exception:
                     log.exception("background tuning failed for %s",
                                   kernel.name)

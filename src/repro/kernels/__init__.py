@@ -2,7 +2,8 @@
 
 Layout per the repo convention:
     flash_attention.py / flash_attention_bwd.py / decode_attention.py /
-    gqa_decode.py / mla_decode.py / rms_norm.py / matmul.py
+    gqa_decode.py / mla_decode.py / paged_decode.py / rms_norm.py /
+    matmul.py
         — pl.pallas_call + BlockSpec kernel bodies
     ops.py      — autotuned jit'd public wrappers: per-kernel ConfigSpaces,
                   analytical workloads, runner factories, heuristics, and
@@ -24,8 +25,9 @@ against ref.py in tests/); on a TPU host the same calls lower via Mosaic.
 from repro.kernels import ops, ref, registry  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
     DECODE_ATTENTION, FLASH_ATTENTION, FLASH_ATTENTION_BWD,
-    GQA_DECODE_RAGGED, MATMUL, MLA_DECODE, RMS_NORM,
-    attention, decode, latent_decode, matmul, ragged_decode, rmsnorm,
+    GQA_DECODE_RAGGED, MATMUL, MLA_DECODE, PAGED_DECODE, RMS_NORM,
+    attention, decode, latent_decode, matmul, paged_decode, ragged_decode,
+    rmsnorm,
 )
 from repro.kernels.registry import (  # noqa: F401
     BenchCase, KernelSpec, get_kernel, kernel_names, list_kernels, register,

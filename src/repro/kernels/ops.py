@@ -528,6 +528,175 @@ def ragged_decode(q, k, v, *, kv_len=None, config: Optional[Config] = None,
 
 
 # ===========================================================================
+# Paged decode (block-table-indexed attention over a shared page pool —
+# the continuous-batching serving hot path, see repro/serving/)
+# ===========================================================================
+
+def _paged_vmem(cfg: Config, ctx: TuningContext) -> int:
+    B, Hq, D = ctx.shape("q")
+    Hkv = ctx.shape("k")[1]
+    g = max(1, Hq // Hkv) if cfg.get("pack_gqa", True) else 1
+    ib = dtype_bytes(ctx.dtype)
+    ps = cfg["page_size"]
+    buf = 2 * (2 * ps * D * ib + g * D * ib)
+    scratch = g * D * 4 + 2 * g * LANES * 4
+    out = 2 * g * D * 4
+    return buf + scratch + out
+
+
+def paged_decode_space() -> ConfigSpace:
+    sp = ConfigSpace(
+        "paged_decode",
+        [
+            Param("page_size", (8, 16, 32, 64, 128, 256)),
+            Param("block_kv", (8, 16, 32, 64, 128, 256, 512)),
+            Param("pack_gqa", (True, False)),
+        ],
+        version=1,
+    )
+    sp.constrain("vmem", vmem_fits(_paged_vmem))
+    sp.constrain("block_kv%page_size",
+                 lambda c, x: c["block_kv"] % c["page_size"] == 0)
+    sp.constrain(
+        "block_kv<=capacity",
+        lambda c, x: c["block_kv"] <= _rup(x.shape("k")[2], c["page_size"]))
+    # A deployed pool fixes the page size (extra["page_size"]); tuning for
+    # that pool only explores matching layouts. Offline/deployment tuning
+    # (no extra) sweeps page_size freely and the winner sizes the pool.
+    sp.constrain(
+        "page_size==pool",
+        lambda c, x: ("page_size" not in x.extra
+                      or c["page_size"] == x.extra["page_size"]))
+    return sp
+
+
+def _paged_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
+    B, Hq, D = ctx.shape("q")
+    _, Hkv, T, _ = ctx.shape("k")
+    group = max(1, Hq // Hkv)
+    pack = cfg.get("pack_gqa", True)
+    g = group if pack else 1
+    rows = B * Hkv if pack else B * Hq
+    fill = float(ctx.extra.get("fill", 1.0))
+    ib = dtype_bytes(ctx.dtype)
+    ps = cfg["page_size"]
+    bk = min(cfg["block_kv"], _rup(T, ps))
+    pages = _cdiv(_rup(T, ps), ps)
+    # Super-blocks skip at block_kv granularity, so the streamed fraction is
+    # quantized up to block_kv — small pages in big blocks re-read tails.
+    run_rows = max(1.0, _rup(max(1, int(T * fill)), bk))
+    flops = 4.0 * B * Hq * T * D * fill
+    bytes_kv = 2.0 * rows * run_rows * D * ib
+    bytes_q = rows * g * D * ib
+    bytes_tbl = rows * pages * 4 + B * 4        # block table + lens (SMEM)
+    bytes_o = rows * g * D * 4
+    return KernelWorkload(
+        flops=flops,
+        hbm_bytes=bytes_kv + bytes_q + bytes_tbl + bytes_o,
+        grid_steps=int(rows * max(1, round(pages * fill))),
+        vmem_bytes=_paged_vmem(cfg, ctx),
+        matmuls=[MatmulShape(g, D, ps), MatmulShape(g, ps, D)],
+        vector_flops=6.0 * B * Hq * T * fill,
+        dtype=ctx.dtype,
+        parallel_grid=rows,
+    )
+
+
+def _paged_heuristic(ctx: TuningContext) -> Config:
+    # The vLLM-style hard-coded default: 16-token pages, one page per step.
+    ps = int(ctx.extra.get("page_size", 16))
+    return {"page_size": ps, "block_kv": ps, "pack_gqa": True}
+
+
+def _paged_canonical(cfg: Config, ctx: TuningContext) -> Config:
+    c = dict(cfg)
+    c["block_kv"] = min(c["block_kv"],
+                        _rup(ctx.shape("k")[2], c["page_size"]))
+    return c
+
+
+def _paged_operands(ctx: TuningContext, cfg: Optional[Config] = None):
+    """Build a filled pool + block tables from the logical (q, k) shapes.
+
+    Page 0 is the reserved scratch page (never mapped); each sequence owns
+    a contiguous run of page ids, lengths are ragged via extra["fill"].
+    """
+    B, Hq, D = ctx.shape("q")
+    _, Hkv, T, _ = ctx.shape("k")
+    dtype = jnp.dtype(ctx.dtype)
+    ps = int((cfg or {}).get("page_size",
+                             ctx.extra.get("page_size", 16)))
+    pages_per_seq = _cdiv(T, ps)
+    n_pages = 1 + B * pages_per_seq
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(keys[0], (B, Hq, D), dtype)
+    kp = _rand(keys[1], (Hkv, n_pages, ps, D), dtype)
+    vp = _rand(keys[2], (Hkv, n_pages, ps, D), dtype)
+    tbl = _memo_operand(
+        ("pagetbl", B, pages_per_seq),
+        lambda: jnp.arange(1, 1 + B * pages_per_seq, dtype=jnp.int32)
+        .reshape(B, pages_per_seq))
+    fill = float(ctx.extra.get("fill", 1.0))
+    hi = max(2, int(T * fill)) + 1
+    lens = _memo_operand(
+        ("randint", 7, B, hi),
+        lambda: jax.random.randint(jax.random.PRNGKey(7), (B,), 1, hi))
+    return (q, kp, vp, tbl, lens), {}
+
+
+def _paged_runner(cfg: Config, ctx: TuningContext):
+    from repro.kernels.paged_decode import paged_decode as paged_kernel
+    args, _ = _paged_operands(ctx, cfg)
+    fn = jax.jit(functools.partial(paged_kernel, block_kv=cfg["block_kv"],
+                                   pack_gqa=cfg["pack_gqa"]))
+    return KernelRunner(fn, *args)
+
+
+PAGED_DECODE = TunableKernel(
+    name="paged_decode",
+    space=paged_decode_space(),
+    version=1,
+    workload_fn=_paged_workload,
+    make_runner=_paged_runner,
+    heuristic=_paged_heuristic,
+    canonicalize=_paged_canonical,
+)
+
+
+def paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
+                 scale: Optional[float] = None,
+                 config: Optional[Config] = None,
+                 tuner: Optional[Autotuner] = None, interpret: bool = True):
+    """Autotuned paged decode. q (B,Hq,D); k/v_pages (Hkv,P,page_size,D);
+    block_tables (B,max_pages) int32; kv_len (B,) int32.
+
+    The pool layout pins ``page_size``, so the runtime lookup context
+    carries it in ``extra`` and only matching configs are explored; the
+    remaining tunables (block_kv, pack_gqa) dispatch to the kernel.
+    """
+    from repro.kernels.paged_decode import paged_decode as paged_kernel
+    ps = k_pages.shape[2]
+    _ps_values = next(p.values for p in PAGED_DECODE.space.params
+                      if p.name == "page_size")
+    if config is None and ps not in _ps_values:
+        # Pool laid out with an off-space page size (tiny test pools):
+        # nothing to tune — one page per step, packed heads.
+        config = {"block_kv": ps, "pack_gqa": True}
+    if config is None:
+        tuner = tuner or default_tuner()
+        B, Hq, D = q.shape
+        Hkv = k_pages.shape[0]
+        T = block_tables.shape[1] * ps
+        ctx = _ctx(tuner, {"q": (B, Hq, D), "k": (B, Hkv, T, D)},
+                   str(k_pages.dtype), page_size=ps)
+        config = tuner.best_config(PAGED_DECODE, ctx)
+    cfg = dict(config)
+    cfg.pop("page_size", None)
+    return paged_kernel(q, k_pages, v_pages, block_tables, kv_len,
+                        scale=scale, interpret=interpret, **cfg)
+
+
+# ===========================================================================
 # MLA decode (absorbed latent attention over the compressed KV cache)
 # ===========================================================================
 
@@ -801,6 +970,68 @@ def _rup(a: int, b: int) -> int:
 
 
 # ===========================================================================
+# Operand builders — (ctx, config) -> (args, kwargs) accepted by BOTH the
+# entry point and the ref.py oracle. Declared on each KernelSpec so the
+# registry-driven conformance sweep (tests/test_kernel_oracles.py) can
+# exercise any kernel without per-kernel glue.
+# ===========================================================================
+
+def _qkv_operands(ctx: TuningContext):
+    dtype = jnp.dtype(ctx.dtype)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    return (_rand(keys[0], ctx.shape("q"), dtype),
+            _rand(keys[1], ctx.shape("k"), dtype),
+            _rand(keys[2], ctx.shape("k"), dtype))
+
+
+def _attention_operands(ctx: TuningContext, cfg: Optional[Config] = None):
+    return _qkv_operands(ctx), {
+        "causal": bool(ctx.extra.get("causal", True)),
+        "window": ctx.extra.get("window") or None,
+    }
+
+
+def _decode_operands(ctx: TuningContext, cfg: Optional[Config] = None):
+    return _qkv_operands(ctx), {}
+
+
+def _ragged_operands(ctx: TuningContext, cfg: Optional[Config] = None):
+    B = ctx.shape("q")[0]
+    T = ctx.shape("k")[2]
+    fill = float(ctx.extra.get("fill", 1.0))
+    hi = max(2, int(T * fill)) + 1
+    lens = _memo_operand(
+        ("randint", 7, B, hi),
+        lambda: jax.random.randint(jax.random.PRNGKey(7), (B,), 1, hi))
+    return _qkv_operands(ctx), {"kv_len": lens}
+
+
+def _mla_operands(ctx: TuningContext, cfg: Optional[Config] = None):
+    dtype = jnp.dtype(ctx.dtype)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    args = (_rand(keys[0], ctx.shape("q_abs"), dtype),
+            _rand(keys[1], ctx.shape("q_rope"), dtype),
+            _rand(keys[2], ctx.shape("ckv"), dtype),
+            _rand(keys[3], ctx.shape("krope"), dtype))
+    return args, {"scale": float(ctx.extra.get("scale", 1.0))}
+
+
+def _rms_operands(ctx: TuningContext, cfg: Optional[Config] = None):
+    dtype = jnp.dtype(ctx.dtype)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    x_s = ctx.shape("x")
+    return (_rand(keys[0], x_s, dtype),
+            _rand(keys[1], (x_s[-1],), dtype)), {}
+
+
+def _mm_operands(ctx: TuningContext, cfg: Optional[Config] = None):
+    dtype = jnp.dtype(ctx.dtype)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    return (_rand(keys[0], ctx.shape("x"), dtype),
+            _rand(keys[1], ctx.shape("y"), dtype)), {}
+
+
+# ===========================================================================
 # Registry — the single enumeration point for every consumer
 # ===========================================================================
 
@@ -813,6 +1044,7 @@ def _register_builtin_kernels() -> None:
         scenarios=("prefill", "training", "gqa"),
         reference=ref.attention,
         entry_point=attention,
+        operands=_attention_operands,
         description="Flash attention forward (prefill / training)",
         bench_cases=(
             BenchCase("s512", {"q": (1, 4, 512, 128), "k": (1, 1, 512, 128)},
@@ -844,6 +1076,7 @@ def _register_builtin_kernels() -> None:
         scenarios=("decode", "gqa"),
         reference=ref.decode_attention,
         entry_point=decode,
+        operands=_decode_operands,
         description="Flash-decode attention (one token vs KV cache)",
         bench_cases=(
             BenchCase("d1024", {"q": (2, 4, 128), "k": (2, 1, 1024, 128)}),
@@ -857,6 +1090,7 @@ def _register_builtin_kernels() -> None:
         scenarios=("decode", "gqa", "ragged", "serving"),
         reference=ref.gqa_decode,
         entry_point=ragged_decode,
+        operands=_ragged_operands,
         description="Ragged batched GQA decode (per-request KV lengths)",
         bench_cases=(
             BenchCase("r1024", {"q": (2, 8, 128), "k": (2, 2, 1024, 128)},
@@ -867,10 +1101,27 @@ def _register_builtin_kernels() -> None:
         ),
     ))
     register(KernelSpec(
+        tunable=PAGED_DECODE,
+        scenarios=("decode", "gqa", "ragged", "serving", "paged"),
+        reference=ref.paged_decode,
+        entry_point=paged_decode,
+        operands=_paged_operands,
+        description="Paged-KV decode over block tables (continuous "
+                    "batching page pool)",
+        bench_cases=(
+            BenchCase("p1024", {"q": (2, 8, 128), "k": (2, 2, 1024, 128)},
+                      extra={"fill": 0.5}),
+            BenchCase("pool32k",
+                      {"q": (16, 32, 128), "k": (16, 8, 32768, 128)},
+                      dtype="bfloat16", extra={"fill": 0.5}, scale="paper"),
+        ),
+    ))
+    register(KernelSpec(
         tunable=MLA_DECODE,
         scenarios=("decode", "mla", "serving"),
         reference=ref.mla_decode,
         entry_point=latent_decode,
+        operands=_mla_operands,
         description="Absorbed-MLA decode over the compressed latent cache",
         bench_cases=(
             BenchCase("m1024", {"q_abs": (2, 4, 256), "q_rope": (2, 4, 64),
@@ -887,6 +1138,7 @@ def _register_builtin_kernels() -> None:
         scenarios=("prefill", "decode", "training"),
         reference=ref.rms_norm,
         entry_point=rmsnorm,
+        operands=_rms_operands,
         description="RMS layer norm",
         bench_cases=(
             BenchCase("r1024x2048", {"x": (1024, 2048)}),
@@ -899,6 +1151,7 @@ def _register_builtin_kernels() -> None:
         scenarios=("prefill", "training"),
         reference=ref.matmul,
         entry_point=matmul,
+        operands=_mm_operands,
         description="Blocked matmul",
         bench_cases=(
             BenchCase("m256", {"x": (256, 256), "y": (256, 256)}),

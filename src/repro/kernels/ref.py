@@ -81,6 +81,30 @@ def gqa_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return decode_attention(q, k, v, kv_len=kv_len, scale=scale)
 
 
+def gather_pages(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Densify a paged KV pool: pages (Hkv, P, page_size, D) + block tables
+    (B, max_pages) -> contiguous (B, Hkv, max_pages * page_size, D)."""
+    Hkv, _, page_size, D = pages.shape
+    B, n_blocks = block_tables.shape
+    dense = pages[:, block_tables]            # (Hkv, B, n_blocks, ps, D)
+    dense = jnp.moveaxis(dense, 1, 0)         # (B, Hkv, n_blocks, ps, D)
+    return dense.reshape(B, Hkv, n_blocks * page_size, D)
+
+
+def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                 block_tables: jnp.ndarray, kv_len: jnp.ndarray, *,
+                 scale: Optional[float] = None) -> jnp.ndarray:
+    """Paged decode oracle: gather each sequence's pages into a dense cache
+    and run the dense ragged-decode reference. Rows with kv_len == 0
+    (inactive batch slots) return zeros, matching the kernel."""
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    capacity = k.shape[2]
+    lens = jnp.minimum(kv_len, capacity)
+    o = decode_attention(q, k, v, kv_len=jnp.maximum(lens, 1), scale=scale)
+    return jnp.where((lens > 0)[:, None, None], o, 0.0).astype(q.dtype)
+
+
 def mla_decode(q_abs: jnp.ndarray, q_rope: jnp.ndarray, ckv: jnp.ndarray,
                krope: jnp.ndarray, *, kv_len: Optional[jnp.ndarray] = None,
                scale: float = 1.0) -> jnp.ndarray:

@@ -71,6 +71,14 @@ class KernelSpec:
     entry_point: Optional[Callable[..., Any]] = None
     bench_cases: Tuple[BenchCase, ...] = ()
     description: str = ""
+    # Optional (ctx, config) -> (args, kwargs) builder producing concrete
+    # operands that BOTH ``entry_point`` and ``reference`` accept. This is
+    # what makes registry-driven conformance possible: a new kernel that
+    # declares operands gets the oracle-equivalence sweep in
+    # tests/test_kernel_oracles.py for free. ``config`` matters only for
+    # kernels whose operand *layout* is config-dependent (paged_decode's
+    # pool is laid out by the tuned ``page_size``); everyone else ignores it.
+    operands: Optional[Callable[..., Tuple[tuple, dict]]] = None
 
     @property
     def name(self) -> str:

@@ -3,6 +3,17 @@
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v2-lite-16b \
       --requests 4 --prompt-len 48 --gen 16
 
+``--decode-impl`` selects the serving architecture:
+
+  full    — static batch, dense per-request KV caches, einsum decode
+  pallas  — static batch, dense caches, registry decode kernels
+            (gqa_decode_ragged / mla_decode) on the hot path
+  paged   — paged KV pool + continuous batching (repro/serving/): requests
+            are admitted as pages free up, chunked prefill interleaves with
+            decode, and the autotuned ``paged_decode`` kernel runs over
+            block tables. The pool's page size comes from the tuner's
+            deployment-level ``paged_decode`` config (docs/serving.md).
+
 With ``--on-miss heuristic`` the decode hot path never tunes inline:
 kernels launch with their heuristic defaults while the daemon background
 worker drains the tuning queue off the critical path (paper Q4.4), so
@@ -26,39 +37,67 @@ from repro.models import lm
 from repro.models.param import init_params
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCHS, default="h2o-danube-3-4b")
-    ap.add_argument("--full-config", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--decode-impl", choices=("full", "pallas"),
-                    default="full",
-                    help="pallas = registry decode kernels "
-                         "(gqa_decode_ragged / mla_decode) on the hot path")
-    ap.add_argument("--on-miss", choices=("tune", "heuristic", "error"),
-                    default=os.environ.get("REPRO_ON_MISS", "tune"),
-                    help="tuner policy on cache miss; 'heuristic' keeps "
-                         "tuning off the serving critical path and lets the "
-                         "background worker converge the cache")
-    args = ap.parse_args(argv)
+def serve_paged(args, cfg, tuner):
+    """Continuous batching over a paged KV pool."""
+    from repro.core.config_space import TuningContext
+    from repro.serving import Request, ServingEngine
 
-    os.environ["REPRO_ON_MISS"] = args.on_miss
-    cfg = get_config(args.arch, smoke=not args.full_config)
-    if args.decode_impl == "pallas":
-        from repro.kernels.registry import list_kernels
-        names = ", ".join(s.name for s in list_kernels(scenario="decode"))
-        print(f"decode via registry kernels (available: {names})")
-    # Any path can hit the process tuner (pallas decode, rmsnorm, ...);
-    # under the heuristic policy the queue must drain regardless of which
-    # decode impl is serving.
-    from repro.core.tuner import default_tuner
-    tuner = default_tuner()
-    if tuner.on_miss == "heuristic":
-        tuner.start_background_tuning()
-        print("background tuning worker started (queue drains off the "
-              "critical path)")
+    B, P, G = args.requests, args.prompt_len, args.gen
+    max_seq_len = P + G
+    # Deployment-level tuning sizes the pool: look up the CANONICAL
+    # deployment scenario (page_size free, full-config head geometry,
+    # shipped dtype) — exactly what gen_shipped_db ships, so a warm
+    # process reads the overlay instead of tuning at startup. A cold
+    # cache tunes it once here (pipelined engine / analytical default).
+    from repro.configs.gen_shipped_db import (
+        SHIP_DTYPE, paged_deployment_shapes,
+    )
+    chip = getattr(tuner.backend, "chip", None) or \
+        getattr(getattr(tuner.backend, "analytical", None), "chip", None)
+    full_cfg = get_config(args.arch)
+    ctx = TuningContext(chip=chip, shapes=paged_deployment_shapes(full_cfg),
+                        dtype=SHIP_DTYPE)
+    deploy_cfg = tuner.best_config("paged_decode", ctx)
+    # Clamp to the largest tunable page size that a single sequence can
+    # still fill (tiny smoke traces would otherwise waste a whole page).
+    from repro.kernels.ops import PAGED_DECODE
+    ps_values = next(p.values for p in PAGED_DECODE.space.params
+                     if p.name == "page_size")
+    page_size = max(v for v in ps_values
+                    if v <= max(min(ps_values), max_seq_len))
+    page_size = min(page_size, deploy_cfg["page_size"])
+    print(f"paged serving: deployment config {deploy_cfg} "
+          f"-> page_size {page_size}")
+
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    rng = np.random.default_rng(0)
+    pages_per_seq = -(-(max_seq_len + args.prefill_chunk) // page_size)
+    engine = ServingEngine(
+        cfg, params, num_pages=1 + args.max_batch * pages_per_seq,
+        page_size=page_size, max_batch=args.max_batch,
+        max_seq_len=max_seq_len + args.prefill_chunk,
+        prefill_chunk=args.prefill_chunk)
+    reqs = []
+    for i in range(B):
+        plen = int(rng.integers(max(1, P // 2), P + 1))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(1, cfg.vocab_size, plen,
+                                       dtype=np.int64).astype(np.int32),
+            max_new_tokens=G))
+    t0 = time.perf_counter()
+    res = engine.run(reqs)
+    print(f"served {res['requests']} requests / "
+          f"{res['generated_tokens']} tokens in {res['wall_s']*1e3:.0f} ms "
+          f"({res['tokens_per_s']:.1f} tok/s, {res['steps']} steps)")
+    engine.scheduler.check_invariants()
+    assert engine.pool.num_allocated == 0, "page leak after drain"
+    r0 = engine.scheduler.finished[0]
+    print("sample:", r0.tokens[:12])
+    print(f"total wall (incl jit): {(time.perf_counter()-t0)*1e3:.0f} ms")
+
+
+def serve_dense(args, cfg):
+    """Static batch with dense per-request KV caches (the baseline)."""
     mesh = make_local_mesh()
     scfg = steps_lib.StepConfig(policy="serve_tp",
                                 opts=lm.ForwardOpts(
@@ -98,6 +137,50 @@ def main(argv=None):
     dt = time.perf_counter() - t0
     print(f"decode {B}×{G-1}: {dt*1e3:.0f} ms ({B*(G-1)/dt:.0f} tok/s)")
     print("sample:", np.concatenate(outs, 1)[0, :12].tolist())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="h2o-danube-3-4b")
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--decode-impl", choices=("full", "pallas", "paged"),
+                    default="full",
+                    help="pallas = registry decode kernels on dense caches; "
+                         "paged = continuous batching over the page pool "
+                         "(paged_decode kernel)")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="concurrent sequences (paged only)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunked-prefill width (paged only)")
+    ap.add_argument("--on-miss", choices=("tune", "heuristic", "error"),
+                    default=os.environ.get("REPRO_ON_MISS", "tune"),
+                    help="tuner policy on cache miss; 'heuristic' keeps "
+                         "tuning off the serving critical path and lets the "
+                         "background worker converge the cache")
+    args = ap.parse_args(argv)
+
+    os.environ["REPRO_ON_MISS"] = args.on_miss
+    cfg = get_config(args.arch, smoke=not args.full_config)
+    if args.decode_impl != "full":
+        from repro.kernels.registry import list_kernels
+        names = ", ".join(s.name for s in list_kernels(scenario="decode"))
+        print(f"decode via registry kernels (available: {names})")
+    # Any path can hit the process tuner (paged/pallas decode, rmsnorm,
+    # ...); under the heuristic policy the queue must drain regardless of
+    # which decode impl is serving.
+    from repro.core.tuner import default_tuner
+    tuner = default_tuner()
+    if tuner.on_miss == "heuristic":
+        tuner.start_background_tuning()
+        print("background tuning worker started (queue drains off the "
+              "critical path)")
+    if args.decode_impl == "paged":
+        serve_paged(args, cfg, tuner)
+    else:
+        serve_dense(args, cfg)
     if tuner.on_miss == "heuristic":
         # Idle now: give the worker a moment to finish the deferred tuning
         # this run enqueued, then report convergence. The queue empties when
@@ -107,7 +190,7 @@ def main(argv=None):
         while len(tuner.queue) and time.monotonic() < deadline:
             time.sleep(0.1)
         tuner.stop_background_tuning(timeout=30.0)
-        print(f"tuner stats: {tuner.stats} (queue left: {len(tuner.queue)})")
+        print(f"tuner stats: {tuner.stats()} (queue left: {len(tuner.queue)})")
 
 
 if __name__ == "__main__":

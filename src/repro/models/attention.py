@@ -359,6 +359,92 @@ def attn_decode(p, x, cfg: ModelConfig, cache: Cache, pos, *, impl="full"):
     return _proj_out(p, o, cfg), {"k": ck, "v": cv}
 
 
+# --- paged KV cache (continuous-batching serving, repro/serving/) ------------
+
+def paged_cache_spec(cfg: ModelConfig, num_pages: int, page_size: int):
+    """ShapeDtypeStructs of this layer's shared page pool. Layout
+    (Hkv, P, page_size, D): the paged_decode kernel's block-table index map
+    picks (head, page) per grid step."""
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_kv_heads, num_pages, page_size, cfg.head_dim)
+    return {"k_pages": jax.ShapeDtypeStruct(shape, dt),
+            "v_pages": jax.ShapeDtypeStruct(shape, dt)}
+
+
+def _scatter_pages(pages, vals, block_tables, start):
+    """Write vals (B, S, Hkv, D) at token positions start[b] + s into the
+    pool (Hkv, P, page_size, D) through each sequence's block table
+    (B, max_pages). Inactive writes must be routed to the reserved scratch
+    page by the caller (table entry 0)."""
+    B, S = vals.shape[:2]
+    page_size = pages.shape[2]
+    pos = start[:, None] + jnp.arange(S)[None, :]              # (B, S)
+    blocks = jnp.clip(pos // page_size, 0, block_tables.shape[1] - 1)
+    page_ids = jnp.take_along_axis(block_tables, blocks, axis=1)
+    slots = pos % page_size
+    # (Hkv, B, S, D) values scattered at [:, page_ids, slots]
+    return pages.at[:, page_ids, slots].set(jnp.moveaxis(vals, 2, 0))
+
+
+def _gather_pages_bthd(pages, block_tables):
+    """Densify the pool for the prefill path: (B, capacity, Hkv, D)."""
+    from repro.kernels.ref import gather_pages
+    return jnp.moveaxis(gather_pages(pages, block_tables), 1, 2)
+
+
+def attn_prefill_paged(p, x, cfg: ModelConfig, cache, block_tables, start):
+    """One chunked-prefill step: write the chunk's KV into the pool, then
+    attend the chunk's queries over the sequence's dense prefix (gathered
+    through the block table) — q_offset=start, causal.
+
+    x (B, S, d); block_tables (B, max_pages) int32; start (B,) int32 —
+    tokens already resident per sequence (the chunk occupies
+    [start, start+S)). Unused trailing slots must map to the scratch page.
+    """
+    assert cfg.mla is None and cfg.window is None, \
+        "paged serving supports dense RoPE attention (no MLA/SWA yet)"
+    B, S, _ = x.shape
+    positions = start[:, None] + jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions)
+    kp = _scatter_pages(cache["k_pages"], k, block_tables, start)
+    vp = _scatter_pages(cache["v_pages"], v, block_tables, start)
+    kd = _gather_pages_bthd(kp, block_tables)
+    vd = _gather_pages_bthd(vp, block_tables)
+    # Per-sequence q_offset differs: mask via kv_valid/causal per batch row.
+    T = kd.shape[1]
+    k_pos = jnp.arange(T)[None, None, :]                       # (1,1,T)
+    valid = k_pos <= positions[:, :, None]                     # causal+resident
+    qg = _group(q, cfg.n_kv_heads)
+    scale = cfg.head_dim ** -0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, kd,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkv->bskgv", prob.astype(vd.dtype), vd,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, S, cfg.n_heads, cfg.head_dim).astype(x.dtype)
+    return _proj_out(p, o, cfg), {"k_pages": kp, "v_pages": vp}
+
+
+def attn_decode_paged(p, x, cfg: ModelConfig, cache, block_tables, lens):
+    """One-token paged decode. x (B, 1, d); lens (B,) int32 tokens already
+    resident (the new token lands at position lens[b]; rows with the
+    scratch-only table and lens==0 are inactive padding slots).
+
+    Dispatches the autotuned ``paged_decode`` registry kernel over the
+    block tables — the serving hot path this subsystem exists for.
+    """
+    assert cfg.mla is None and cfg.window is None, \
+        "paged serving supports dense RoPE attention (no MLA/SWA yet)"
+    from repro.kernels import ops as kops
+    positions = lens[:, None]                                  # (B, 1)
+    q, k, v = _qkv(p, x, cfg, positions)
+    kp = _scatter_pages(cache["k_pages"], k, block_tables, lens)
+    vp = _scatter_pages(cache["v_pages"], v, block_tables, lens)
+    o = kops.paged_decode(q[:, 0], kp, vp, block_tables, lens + 1)
+    return _proj_out(p, o[:, None], cfg), {"k_pages": kp, "v_pages": vp}
+
+
 # --- cross attention (whisper decoder) ----------------------------------------
 
 def cross_specs(cfg: ModelConfig):

@@ -398,6 +398,123 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos,
     return logits[:, 0], new_cache
 
 
+# ---------------------------------------------------------------------------
+# Paged serving: chunked prefill + decode over a shared page pool
+# (block tables / lengths are scheduler state, repro/serving/)
+# ---------------------------------------------------------------------------
+
+def _check_paged(cfg: ModelConfig) -> None:
+    if cfg.family != "dense" or cfg.mla is not None or cfg.window is not None \
+            or cfg.learned_pos or cfg.n_prefix:
+        raise NotImplementedError(
+            f"paged serving supports dense RoPE attention archs; "
+            f"{cfg.name!r} needs MLA/SWA/enc-dec/prefix paging")
+
+
+def _apply_ffn(p, h, ffn, cfg: ModelConfig, opts: ForwardOpts):
+    if ffn == "mlp":
+        dense_cfg = (dataclasses.replace(cfg, d_ff=cfg.d_ff_dense)
+                     if cfg.d_ff_dense else cfg)
+        return h + apply_mlp(p["ffn"], apply_norm(p["ln2"], h, cfg,
+                                                  impl=opts.norm_impl),
+                             dense_cfg)
+    if ffn == "moe":
+        mo, _ = _moe_fn(opts)(p["ffn"], apply_norm(p["ln2"], h, cfg,
+                                                   impl=opts.norm_impl), cfg)
+        return h + mo
+    return h
+
+
+def _block_paged(p, h, kind, cfg, opts, cache, tables, start, *, decode):
+    mixer, ffn = kind.split("_")
+    assert mixer == "attn", f"paged serving: unsupported mixer {mixer!r}"
+    hn = apply_norm(p["ln1"], h, cfg, impl=opts.norm_impl)
+    if decode:
+        mix, c = ATT.attn_decode_paged(p["mix"], hn, cfg, cache["self"],
+                                       tables, start)
+    else:
+        mix, c = ATT.attn_prefill_paged(p["mix"], hn, cfg, cache["self"],
+                                        tables, start)
+    h = _apply_ffn(p, h + mix, ffn, cfg, opts)
+    return h, {"self": c}
+
+
+def _run_units_paged(params, h, cfg, opts, cache, tables, start, *, decode):
+    new_cache = {}
+    for ui, (unit, reps) in enumerate(cfg.scan_plan()):
+        pu = params[f"u{ui}"]
+        cu = cache[f"u{ui}"]
+
+        def body(h_, xs, unit=unit):
+            pl, cl = xs
+            hh = h_
+            ncs = {}
+            for i, kind in enumerate(unit):
+                hh, nc = _block_paged(pl[f"l{i}"], hh, kind, cfg, opts,
+                                      cl[f"l{i}"], tables, start,
+                                      decode=decode)
+                ncs[f"l{i}"] = nc
+            return hh, ncs
+
+        if reps == 1:
+            h, ncs = body(h, (pu, cu))
+        else:
+            h, ncs = jax.lax.scan(body, h, (pu, cu))
+        new_cache[f"u{ui}"] = ncs
+    return h, new_cache
+
+
+def prefill_paged(params, cfg: ModelConfig, tokens, cache, block_tables,
+                  start, opts: ForwardOpts = ForwardOpts()):
+    """One chunked-prefill step: tokens (B, S) land at positions
+    start[b]..start[b]+S-1, KV written through the block tables. Returns
+    (all-position logits (B, S, vocab), new cache) — chunks are padded to a
+    fixed width by the scheduler, so the caller picks the logit at its last
+    *valid* position, not position -1."""
+    _check_paged(cfg)
+    h = embed_tokens(params["embed"], tokens, cfg)
+    h, new_cache = _run_units_paged(params, h, cfg, opts, cache,
+                                    block_tables, start, decode=False)
+    h = apply_norm(params["final_ln"], h, cfg, impl=opts.norm_impl)
+    logits = logits_out(params["embed"], h, cfg)
+    return logits, new_cache
+
+
+def decode_step_paged(params, cfg: ModelConfig, token, cache, block_tables,
+                      lens, opts: ForwardOpts = ForwardOpts()):
+    """One-token paged decode across the continuous batch. token (B, 1);
+    lens (B,) int32 resident lengths (0 = inactive slot). Returns
+    (logits (B, vocab), new cache)."""
+    _check_paged(cfg)
+    h = embed_tokens(params["embed"], token, cfg)
+    h, new_cache = _run_units_paged(params, h, cfg, opts, cache,
+                                    block_tables, lens, decode=True)
+    h = apply_norm(params["final_ln"], h, cfg, impl=opts.norm_impl)
+    logits = logits_out(params["embed"], h, cfg)
+    return logits[:, 0], new_cache
+
+
+def paged_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int):
+    """ShapeDtypeStruct tree matching the paged cache (pool per layer)."""
+    _check_paged(cfg)
+    caches = {}
+    for ui, (unit, reps) in enumerate(cfg.scan_plan()):
+        cs = {f"l{i}": {"self": ATT.paged_cache_spec(cfg, num_pages,
+                                                     page_size)}
+              for i, kind in enumerate(unit)}
+        if reps > 1:
+            cs = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((reps,) + s.shape, s.dtype), cs)
+        caches[f"u{ui}"] = cs
+    return caches
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Zero-filled page pools for every layer."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        paged_cache_specs(cfg, num_pages, page_size))
+
+
 def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
     """ShapeDtypeStruct tree matching prefill's cache (for the dry-run)."""
     caches = {}

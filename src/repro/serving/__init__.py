@@ -1,0 +1,25 @@
+"""Paged-KV continuous-batching serving subsystem.
+
+The ROADMAP's "heavy traffic, many scenarios" axis: instead of one static
+batch with dense per-request KV buffers, serving state lives in a shared
+pool of fixed-size KV pages (``PagePool``) and a continuous-batching
+scheduler (``Scheduler``) admits new requests every step, interleaves
+chunked prefill with decode, retires finished sequences, and recycles
+their pages. The decode hot path runs the autotuned ``paged_decode``
+registry kernel over the scheduler's block tables.
+
+    PagePool   — ref-counted fixed-size page allocator (page 0 reserved as
+                 the scratch page inactive slots write into)
+    Request    — one inference request (prompt + generation budget)
+    Scheduler  — admission / chunked prefill / decode / retirement loop
+    ServingEngine — binds a model to the scheduler and runs the jitted
+                 prefill_paged / decode_step_paged steps
+
+See docs/serving.md for the design and benchmarks/serving_throughput.py
+for the dense-vs-paged throughput comparison.
+"""
+
+from repro.serving.page_pool import PagePool  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    Request, Scheduler, ServingEngine, StepStats,
+)

@@ -99,10 +99,10 @@ def test_cache_db_is_json(tmp_path):
 def test_tune_persists_and_hits(tuner):
     k = kernel()
     cfg1 = tuner.best_config(k, ctx())
-    assert tuner.stats["tunes"] == 1
+    assert tuner.stats()["tunes"] == 1
     cfg2 = tuner.best_config(k, ctx())
     assert cfg2 == cfg1
-    assert tuner.stats["hits"] == 1
+    assert tuner.stats()["hits"] == 1
 
 
 def test_on_miss_heuristic_defers(tmp_cache):
@@ -115,7 +115,7 @@ def test_on_miss_heuristic_defers(tmp_cache):
     assert len(t.queue) == 1
     assert t.flush_tuning_queue() == 1   # idle-time tuning (Q4.4)
     cfg2 = t.best_config(k, ctx())
-    assert t.stats["hits"] == 1
+    assert t.stats()["hits"] == 1
     assert cfg2 == {"blk": 256}          # tuned optimum (fewest grid steps)
 
 

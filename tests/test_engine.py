@@ -134,13 +134,13 @@ def test_inf_cache_entry_is_never_a_hit(tmp_cache):
     # A healthy kernel under the same cache key now tunes instead of
     # reusing the poisoned entry.
     cfg = t.best_config(_kernel(), ctx())
-    assert t.stats["misses"] == 1 and t.stats["tunes"] == 2
-    assert t.stats["failed_retunes"] == 1
+    assert t.stats()["misses"] == 1 and t.stats()["tunes"] == 2
+    assert t.stats()["failed_retunes"] == 1
     assert cfg["a"] == 16                # true optimum, not the inf config
     # The cache-level filter agrees with the tuner-level policy.
     assert t.cache.get("e", 1, space(), ctx(), skip_failed=True) is not None
     assert t.best_config(_kernel(), ctx()) == cfg
-    assert t.stats["hits"] == 1          # finite entry is a normal hit
+    assert t.stats()["hits"] == 1          # finite entry is a normal hit
 
 
 def test_inf_entry_reenqueues_under_heuristic(tmp_cache):
@@ -166,9 +166,9 @@ def test_background_worker_drains_queue(tmp_cache):
         cfg = t.best_config(_kernel(), ctx())
         assert cfg == {"a": 1, "b": 1}   # instant heuristic on the hot path
         deadline = time.monotonic() + 30
-        while t.stats["background_tunes"] < 1 and time.monotonic() < deadline:
+        while t.stats()["background_tunes"] < 1 and time.monotonic() < deadline:
             time.sleep(0.01)
-        assert t.stats["background_tunes"] >= 1
+        assert t.stats()["background_tunes"] >= 1
         assert len(t.queue) == 0
         assert t.best_config(_kernel(), ctx()) == {"a": 16, "b": 1}
     finally:
@@ -196,7 +196,7 @@ def test_tune_many_parallel_cache_writes(tmp_cache):
     assert len(t.cache) == 8             # one persisted entry per context
     for c in ctxs:
         assert t.best_config(_kernel(), c) == {"a": 16, "b": 1}
-    assert t.stats["hits"] == 8
+    assert t.stats()["hits"] == 8
 
 
 def test_tune_many_return_exceptions(tmp_cache):
@@ -209,6 +209,71 @@ def test_tune_many_return_exceptions(tmp_cache):
     assert isinstance(out[1], Exception)
     with pytest.raises(ValueError):
         t.tune_many([(no_workload, ctx())])
+
+
+@pytest.mark.parametrize("name", ALL_STRATEGIES)
+def test_paged_decode_ask_tell_determinism(name):
+    """PR-2's ask/tell contract on the new serving kernel: the same seed
+    must produce byte-identical trial logs for the ``paged_decode`` space
+    at any in-flight batch size (engine.run() == hand-driven batches)."""
+    from repro.kernels.registry import get_kernel
+
+    spec = get_kernel("paged_decode")
+    chip = get_chip("tpu_v5e")
+    c = spec.cases(scale="host")[0].context(chip)
+    ev = AnalyticalMeasure(chip).evaluator(spec.tunable, c)
+    kwargs = {"budget": 12} if name == "random" else {}
+    a = make_strategy(name, **kwargs).run(spec.space, c, ev)
+    assert a.best is not None
+    for batch in (2, 5):
+        b = drive_ask_tell(make_strategy(name, **kwargs), spec.space, c,
+                           ev, batch)
+        assert a.best == b.best
+        assert a.best_metric == b.best_metric
+        assert a.trials == b.trials      # byte-identical log
+
+
+def test_stats_per_kernel_hit_miss_counts(tmp_cache):
+    """tuner.stats() exposes per-kernel cache-hit/miss/tune counters (the
+    serving benchmark reports tuning amortization from these)."""
+    t = Autotuner(cache=tmp_cache,
+                  backend=AnalyticalMeasure(get_chip("tpu_v5e")))
+    k1, k2 = _kernel("k1"), _kernel("k2")
+    t.best_config(k1, ctx())                       # miss -> tune
+    t.best_config(k1, ctx())                       # hit
+    t.best_config(k2, ctx())                       # miss -> tune
+    s = t.stats()
+    assert s["hits"] == 1 and s["misses"] == 2 and s["tunes"] == 2
+    assert s["per_kernel"]["k1"] == {"hits": 1, "misses": 1, "tunes": 1,
+                                     "background_tunes": 0}
+    assert s["per_kernel"]["k2"]["misses"] == 1
+    assert s["per_kernel"]["k2"]["hits"] == 0
+    # Snapshot semantics: mutating the returned dict can't poison counters.
+    s["per_kernel"]["k1"]["hits"] = 99
+    assert t.stats()["per_kernel"]["k1"]["hits"] == 1
+    # tune_many records per-kernel tunes too (batch warm-start path).
+    ctxs = [TuningContext(chip=get_chip("tpu_v5e"),
+                          shapes={"x": (64 * i, 128)}) for i in (2, 3)]
+    t.tune_many([(k1, c) for c in ctxs])
+    assert t.stats()["per_kernel"]["k1"]["tunes"] == 3
+
+
+def test_stats_background_tunes_per_kernel(tmp_cache):
+    t = Autotuner(cache=tmp_cache,
+                  backend=AnalyticalMeasure(get_chip("tpu_v5e")),
+                  on_miss="heuristic")
+    t.start_background_tuning(poll_interval_s=0.01)
+    try:
+        t.best_config(_kernel("bgk"), ctx())
+        deadline = time.monotonic() + 30
+        while (t.stats()["background_tunes"] < 1
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        s = t.stats()
+        assert s["per_kernel"]["bgk"]["background_tunes"] == 1
+        assert s["per_kernel"]["bgk"]["misses"] == 1
+    finally:
+        t.stop_background_tuning()
 
 
 # ---------------------------------------------------------------------------

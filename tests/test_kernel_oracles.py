@@ -1,0 +1,82 @@
+"""Registry-driven oracle conformance: every registered kernel's entry
+point must match its ref.py oracle on all host-scale bench cases across
+several sampled configs.
+
+Before this sweep, oracle coverage was per-kernel and ad-hoc (each kernel
+hand-rolled its own operand plumbing in its own test file). The registry's
+``operands`` hook makes conformance declarative: a new kernel that
+registers (reference, entry_point, operands) is swept here with zero new
+test code."""
+
+import numpy as np
+import pytest
+
+from repro.core import get_chip
+from repro.kernels.registry import list_kernels
+
+CHIP = get_chip("tpu_v5e")
+
+CONFORMANCE = [
+    (spec, case)
+    for spec in list_kernels()
+    if spec.reference is not None and spec.entry_point is not None
+    and spec.operands is not None
+    for case in spec.cases(scale="host")
+]
+
+
+def _sampled_configs(spec, ctx, n=3):
+    """A spread sample of the valid configs (first / middle / last after
+    constraint filtering) — cheap but layout-diverse."""
+    cfgs = spec.space.valid_configs(ctx)
+    assert cfgs, f"{spec.name}: no valid config for {ctx.signature()}"
+    step = max(1, len(cfgs) // n)
+    return cfgs[::step][:n]
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == "bfloat16" else 1e-4
+
+
+@pytest.mark.parametrize(
+    "spec,case", CONFORMANCE,
+    ids=[f"{s.name}/{c.label}" for s, c in CONFORMANCE])
+def test_entry_point_matches_oracle(spec, case):
+    ctx = case.context(CHIP)
+    first = None
+    for cfg in _sampled_configs(spec, ctx):
+        args, kwargs = spec.operands(ctx, cfg)
+        got = spec.entry_point(*args, config=cfg, **kwargs)
+        ref_out = spec.reference(*args, **kwargs)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(ref_out, np.float32),
+            atol=_tol(case.dtype), rtol=1e-4,
+            err_msg=f"{spec.name}/{case.label} config {cfg}")
+        if first is None:
+            first = (args, np.asarray(ref_out, np.float32))
+        elif all(a is b for a, b in zip(args, first[0])):
+            # Identical (memoized) operands across configs: the oracle is
+            # config-free, so its output must be bit-stable. Kernels whose
+            # operand *layout* is config-dependent (paged pools relayout
+            # per page_size) rebuild args and legitimately skip this.
+            np.testing.assert_array_equal(
+                np.asarray(ref_out, np.float32), first[1],
+                err_msg=f"{spec.name}: oracle output varies with config")
+
+
+def test_every_swept_kernel_has_host_case():
+    """A kernel with an oracle but no host-scale case silently escapes the
+    sweep — fail loudly instead."""
+    for spec in list_kernels():
+        if spec.reference is not None and spec.operands is not None:
+            assert spec.cases(scale="host"), \
+                f"{spec.name} has an oracle but no host bench case"
+
+
+def test_decode_family_is_fully_swept():
+    """Every serving-path kernel must be in the conformance sweep: oracle,
+    entry point, and operand builder all declared."""
+    swept = {s.name for s, _ in CONFORMANCE}
+    for spec in list_kernels(scenario="decode"):
+        assert spec.name in swept, \
+            f"decode kernel {spec.name} missing oracle/entry/operands"
