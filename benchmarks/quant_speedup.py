@@ -1,0 +1,266 @@
+"""Quantization speedup + accuracy: bf16 vs w8a8 vs kv8 serving.
+
+Three numerics policies serve the SAME seeded prompt set through the same
+jitted prefill + greedy-decode loop; we report tokens/s (median of reps)
+and, teacher-forced on the bf16 trajectory, the per-step logit MAE and
+top-1 agreement of each quantized variant against the bf16 baseline —
+the standard "does the cheap path pick the same tokens?" deployment gate.
+
+  bf16   — the full-precision baseline (model dtype bfloat16).
+  w8a8   — MLP projection weights per-channel int8 (QTensor params) +
+           dynamic per-token int8 activations. On this CPU host the int8
+           GEMM runs as the exact integer-grid f32 simulation
+           (docs/quantization.md §Host simulation): identical numerics to
+           the int8 kernel, timed on XLA:CPU's fast f32 path — the same
+           relationship the real int8 MXU path has to bf16 on TPU, where
+           the cost model prices it via ``peak_int8_ops``.
+  kv8    — int8 KV cache with per-token scales (weights stay bf16).
+           Decode-side win is HBM traffic, which a CPU host cannot show;
+           reported for accuracy and to exercise the full kv8 path.
+
+The bench model is the smoke arch widened to GEMM-dominated dims
+(d_model 512, d_ff 2048) — quantization is a large-matmul story; the
+tiny smoke dims would measure dispatch overhead, not numerics paths.
+
+Before measuring, the model is briefly fit (AdamW, a few dozen steps) to
+memorize the seeded corpus. A random-init model emits near-uniform
+logits whose top-1 margins sit at rounding-noise level — even a bf16 vs
+f32 comparison flips a few percent of argmaxes there, so agreement on
+random weights measures RNG coin flips, not quantization fidelity. After
+the fit the margins are decisive (≫ quant noise, like a trained
+checkpoint's), and top-1 agreement measures what the gate means.
+
+Run:  PYTHONPATH=src python benchmarks/quant_speedup.py [--fast]
+          [--check-speedup 1.0] [--check-agreement 0.99]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), os.pardir, "results")
+
+
+def bench_config():
+    from repro.configs import get_config
+    smoke = get_config("phi3-mini-3.8b", smoke=True)
+    return dataclasses.replace(
+        smoke, name="phi3-mini-quantbench", d_model=512, n_heads=8,
+        n_kv_heads=8, head_dim=64, d_ff=4096, vocab_size=2048,
+        dtype="bfloat16")
+
+
+def make_corpus(cfg, n, length, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, size=(n, length)).astype(np.int32)
+
+
+def fit(cfg, params, corpus, steps, lr=3e-3):
+    """Memorize the corpus (see module docstring: decisive margins)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import lm
+    from repro.optim import adamw
+
+    ocfg = adamw.AdamWConfig(lr=lr, schedule="constant", warmup_steps=1,
+                             weight_decay=0.0)
+    state = adamw.init_state(ocfg, params)
+    batch = {"tokens": jnp.asarray(corpus[:, :-1]),
+             "labels": jnp.asarray(corpus[:, 1:], jnp.int32)}
+    opts = lm.ForwardOpts(attn_impl="full")
+
+    @jax.jit
+    def step(params, state, batch):
+        (l, _), g = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, cfg, batch, opts), has_aux=True)(params)
+        p2, s2, _ = adamw.apply_updates(ocfg, params, g, state)
+        return p2, s2, l
+
+    loss = None
+    for _ in range(steps):
+        params, state, loss = step(params, state, batch)
+    return params, float(loss)
+
+
+def _steps(cfg, opts, max_len):
+    import jax
+
+    from repro.models import lm
+
+    prefill = jax.jit(lambda p, t: lm.prefill(p, cfg, t, max_len=max_len,
+                                              opts=opts))
+    decode = jax.jit(lambda p, tok, c, pos: lm.decode_step(p, cfg, tok, c,
+                                                           pos, opts=opts))
+    return prefill, decode
+
+
+class Variant:
+    """One policy's jitted serve loop: timed runs + logit collection.
+
+    This container throttles CPU shares, so absolute wall times drift by
+    multiples between reps. The benchmark therefore interleaves variants
+    round-robin (every rep times all variants back-to-back) and gates on
+    the *median of per-rep ratios* — drift hits numerator and denominator
+    of the same rep together.
+    """
+
+    def __init__(self, cfg, params, opts, prompts, gen, forced=None):
+        import jax
+        import jax.numpy as jnp
+
+        self._jax, self._jnp = jax, jnp
+        self.params = params
+        self.gen = gen
+        B, P = prompts.shape
+        self.P = P
+        self.prefill, self.decode = _steps(cfg, opts, P + gen)
+        self.toks_dev = jnp.asarray(prompts)
+        self.forced = forced
+
+    def generate(self, collect=False):
+        jax, jnp = self._jax, self._jnp
+        logits, cache = self.prefill(self.params, self.toks_dev)
+        out_logits = [logits] if collect else []
+        forced = self.forced
+        tok = (jnp.argmax(logits, -1) if forced is None
+               else jnp.asarray(forced[:, 0]))[:, None].astype(jnp.int32)
+        toks = [tok]
+        for i in range(self.gen - 1):
+            logits, cache = self.decode(self.params, tok, cache,
+                                        jnp.int32(self.P + i))
+            if collect:
+                out_logits.append(logits)
+            tok = (jnp.argmax(logits, -1) if forced is None
+                   else jnp.asarray(forced[:, i + 1]))[:, None].astype(
+                       jnp.int32)
+            toks.append(tok)
+        jax.block_until_ready(tok)
+        return out_logits, jnp.concatenate(toks, axis=1)
+
+    def timed(self):
+        t0 = time.perf_counter()
+        self.generate(collect=False)
+        return time.perf_counter() - t0
+
+    def logits_and_tokens(self):
+        out_logits, toks = self.generate(collect=True)
+        return (np.stack([np.asarray(l, np.float32) for l in out_logits]),
+                np.asarray(toks))
+
+
+def compare(base_logits, var_logits):
+    """Teacher-forced accuracy of a variant vs the baseline trajectory."""
+    mae = float(np.mean(np.abs(var_logits - base_logits)))
+    agree = float(np.mean(np.argmax(var_logits, -1)
+                          == np.argmax(base_logits, -1)))
+    return {"logit_mae": round(mae, 5), "top1_agreement": round(agree, 5)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller prompt set (CI smoke)")
+    ap.add_argument("--prompts", type=int, default=None)
+    ap.add_argument("--prompt-len", type=int, default=None)
+    ap.add_argument("--gen", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--check-speedup", type=float, default=None,
+                    help="fail unless w8a8/bf16 tokens/s >= this")
+    ap.add_argument("--check-agreement", type=float, default=None,
+                    help="fail unless every variant's top-1 agreement "
+                         ">= this")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro import quant
+    from repro.models import lm
+    from repro.models.param import init_params
+
+    cfg = bench_config()
+    n = args.prompts or (4 if args.fast else 8)
+    plen = args.prompt_len or (12 if args.fast else 24)
+    gen = args.gen or (8 if args.fast else 16)
+    fit_steps = 30 if args.fast else 50
+    corpus = make_corpus(cfg, n, plen + gen, seed=0)
+    prompts = corpus[:, :plen]
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    t0 = time.perf_counter()
+    params, fit_loss = fit(cfg, params, corpus, fit_steps)
+    print(f"[quant_speedup] fit {fit_steps} steps in "
+          f"{time.perf_counter()-t0:.1f}s (loss {fit_loss:.4f})")
+
+    specs = {
+        "bf16": (params, lm.ForwardOpts(attn_impl="full")),
+        "w8a8": (quant.quantize_params(params, "w8a8", store="grid"),
+                 lm.ForwardOpts(attn_impl="full", quant="w8a8")),
+        "kv8": (params, lm.ForwardOpts(attn_impl="full", quant="kv8")),
+    }
+
+    # Baseline first: its greedy trajectory teacher-forces the variants.
+    base = Variant(cfg, *specs["bf16"], prompts, gen)
+    base.generate()                              # warm
+    base_logits, base_toks = base.logits_and_tokens()
+    variants = {"bf16": base}
+    for name in ("w8a8", "kv8"):
+        v = Variant(cfg, *specs[name], prompts, gen, forced=base_toks)
+        v.generate()                             # warm
+        variants[name] = v
+
+    # Interleaved timing: every rep times all variants back-to-back.
+    walls = {name: [] for name in variants}
+    for _ in range(args.reps):
+        for name, v in variants.items():
+            walls[name].append(v.timed())
+
+    report = {"arch": cfg.name,
+              "bench": {"prompts": n, "prompt_len": plen, "gen": gen,
+                        "reps": args.reps, "seed": 0,
+                        "fit_steps": fit_steps,
+                        "fit_loss": round(fit_loss, 6),
+                        "d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                        "vocab": cfg.vocab_size, "dtype": cfg.dtype},
+              "variants": {}}
+    for name, v in variants.items():
+        wall = float(np.median(walls[name]))
+        entry = {"tokens_per_s": round(n * gen / wall, 2),
+                 "wall_s_median": round(wall, 4),
+                 "wall_s_reps": [round(w, 4) for w in walls[name]]}
+        if name != "bf16":
+            logits, _ = v.logits_and_tokens()
+            entry.update(compare(base_logits, logits))
+            # Median of per-rep ratios (shared-host drift robustness).
+            ratios = [b / w for b, w in zip(walls["bf16"], walls[name])]
+            entry["speedup_vs_bf16"] = round(float(np.median(ratios)), 3)
+        report["variants"][name] = entry
+        print(f"[quant_speedup] {name}: {entry}")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "BENCH_quant_speedup.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"[quant_speedup] -> {out}")
+
+    if args.check_speedup is not None:
+        s = report["variants"]["w8a8"]["speedup_vs_bf16"]
+        if s < args.check_speedup:
+            raise SystemExit(
+                f"w8a8/bf16 tokens/s {s:.3f} < required {args.check_speedup}")
+    if args.check_agreement is not None:
+        for name in ("w8a8", "kv8"):
+            a = report["variants"][name]["top1_agreement"]
+            if a < args.check_agreement:
+                raise SystemExit(
+                    f"{name} top-1 agreement {a:.4f} < required "
+                    f"{args.check_agreement}")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,11 +37,15 @@ def paged_deployment_shapes(cfg):
 
 
 def scenarios():
-    """Representative (kernel, shapes, extra) per arch × serving context.
+    """Representative (kernel, shapes, extra[, dtype]) per arch × serving
+    context. A scenario may append an explicit dtype to override
+    SHIP_DTYPE — the quantized kernel family ships at "int8" (each dtype
+    policy is its own cache scenario: dtype is part of the key).
 
     Kernels resolve through the registry; every arch contributes its
-    prefill, dense decode, ragged serving decode, and (for MLA archs) the
-    latent-cache decode scenario."""
+    prefill, dense decode, ragged serving decode (float and int8-KV), the
+    paged deployment entries (float and int8 pools), and (for MLA archs)
+    the latent-cache decode scenario."""
     seen = set()
     for arch in ARCHS:
         cfg = get_config(arch)
@@ -63,10 +67,18 @@ def scenarios():
         # cache key — a fill-tagged entry would never be hit at serve time.
         yield ("gqa_decode_ragged",
                {"q": (16, hq, dh), "k": (16, hkv, 32768, dh)}, {})
+        # The kv8 policy's dense-cache serving scenario (same shapes,
+        # int8 stream): ops.ragged_decode_kv8 looks this up at dtype
+        # "int8", so it is a distinct shipped entry.
+        yield ("gqa_decode_kv8",
+               {"q": (16, hq, dh), "k": (16, hkv, 32768, dh)}, {}, "int8")
         # Deployment-level paged_decode: page_size left FREE so the winner
         # tells the serving launcher how to lay out the pool (serve.py
-        # reads this entry before building the PagePool).
+        # reads this entry before building the PagePool). Shipped twice:
+        # float pools and int8 pools (kv8) are distinct deployments whose
+        # winning layouts differ with the halved KV traffic.
         yield ("paged_decode", paged_deployment_shapes(cfg), {})
+        yield ("paged_decode", paged_deployment_shapes(cfg), {}, "int8")
         if cfg.mla is not None:
             m = cfg.mla
             yield ("mla_decode",
@@ -76,6 +88,13 @@ def scenarios():
                     "krope": (16, 32768, m.qk_rope_dim)}, {})
         yield ("rms_norm", {"x": (8192, cfg.d_model)}, {})
     yield ("matmul", {"x": (8192, 8192), "y": (8192, 8192)}, {})
+    # w8a8 GEMM deployment entries: scale_gran left free (the winner tells
+    # the calibration pipeline what to emit) at the canonical square GEMM
+    # and an MLP-projection aspect ratio.
+    yield ("matmul_w8a8", {"x": (8192, 8192), "y": (8192, 8192)}, {},
+           "int8")
+    yield ("matmul_w8a8", {"x": (512, 4096), "y": (4096, 4096)}, {},
+           "int8")
 
 
 def main():
@@ -89,9 +108,11 @@ def main():
         # Batch-tune the whole chip's work-list concurrently; results come
         # back aligned with the input pairs, failures as exceptions.
         pairs = []
-        for name, shapes, extra in scenarios():
+        for scen in scenarios():
+            name, shapes, extra = scen[:3]
+            dtype = scen[3] if len(scen) > 3 else SHIP_DTYPE
             kernel = get_kernel(name).tunable
-            ctx = TuningContext(chip=chip, shapes=shapes, dtype=SHIP_DTYPE,
+            ctx = TuningContext(chip=chip, shapes=shapes, dtype=dtype,
                                 extra=extra)
             pairs.append((kernel, ctx))
         entries = tuner.tune_many(pairs, return_exceptions=True)

@@ -50,11 +50,40 @@ class ChipSpec:
         return self.peak_bf16_flops / 4.0
 
     def flops_for_dtype(self, dtype_name: str) -> float:
-        if "int8" in dtype_name or "uint8" in dtype_name:
+        """THE dtype → peak-throughput lookup. Every cost-model term
+        (``estimate_seconds``, ``roofline_terms``) routes through here;
+        nothing else may pick a peak, or a dtype policy silently prices
+        int8 work at the bf16 rate (the pre-quant bug: ``peak_int8_ops``
+        was defined for every chip but no matmul-family workload ever
+        declared an int8 stream, so the int8 roofline was dead code).
+
+        The name keys the MXU *operand* stream: int8 → the double-rate
+        int8 path (v5e/v6e; 1× on v4), f32 → the quarter-rate fp32 path,
+        everything half-precision (bf16/f16) → the bf16 peak.
+        """
+        name = _canonical_dtype(dtype_name)
+        if name == "int8":
             return self.peak_int8_ops
-        if dtype_name in ("float32", "f32"):
+        if name == "float32":
             return self.peak_fp32_flops
         return self.peak_bf16_flops
+
+
+_DTYPE_ALIASES = {
+    "int8": "int8", "uint8": "int8",
+    "float32": "float32", "f32": "float32", "fp32": "float32",
+    "bfloat16": "bfloat16", "bf16": "bfloat16",
+    "float16": "bfloat16", "f16": "bfloat16",
+}
+
+
+def _canonical_dtype(name: str) -> str:
+    try:
+        return _DTYPE_ALIASES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown stream dtype {name!r} for peak lookup; known: "
+            f"{sorted(set(_DTYPE_ALIASES))}") from None
 
 
 # Public-spec numbers. VMEM: usable per-core scratch for one Pallas kernel.

@@ -18,7 +18,8 @@ and model layers all discover kernels through it (see DESIGN.md §1);
 nothing else keeps a kernel list.
 
 Public entry points (``attention``, ``decode``, ``ragged_decode``,
-``latent_decode``, ``rmsnorm``, ``matmul``; entry names differ from their
+``ragged_decode_kv8``, ``paged_decode``, ``latent_decode``, ``rmsnorm``,
+``matmul``, ``matmul_w8a8``; entry names differ from their
 kernel-body module names so the package namespace never collides) look up the best known config from
 the process tuner (persistent-cache hit, JIT tune, or heuristic +
 background enqueue, per policy) and dispatch. Every entry point accepts
@@ -538,7 +539,11 @@ def _paged_vmem(cfg: Config, ctx: TuningContext) -> int:
     g = max(1, Hq // Hkv) if cfg.get("pack_gqa", True) else 1
     ib = dtype_bytes(ctx.dtype)
     ps = cfg["page_size"]
-    buf = 2 * (2 * ps * D * ib + g * D * ib)
+    # q stays float under kv8 — only the KV pages are int8.
+    qb = 4 if "int8" in ctx.dtype else ib
+    buf = 2 * (2 * ps * D * ib + g * D * qb)
+    if "int8" in ctx.dtype:
+        buf += 2 * 2 * ps * 4            # per-token dequant scale blocks
     scratch = g * D * 4 + 2 * g * LANES * 4
     out = 2 * g * D * 4
     return buf + scratch + out
@@ -586,8 +591,12 @@ def _paged_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
     # quantized up to block_kv — small pages in big blocks re-read tails.
     run_rows = max(1.0, _rup(max(1, int(T * fill)), bk))
     flops = 4.0 * B * Hq * T * D * fill
+    quantized = "int8" in ctx.dtype
     bytes_kv = 2.0 * rows * run_rows * D * ib
-    bytes_q = rows * g * D * ib
+    if quantized:
+        bytes_kv += 2.0 * rows * run_rows * 4   # per-token dequant scales
+    # q stays float under the kv8 policy — only the pools are int8.
+    bytes_q = rows * g * D * (4 if quantized else ib)
     bytes_tbl = rows * pages * 4 + B * 4        # block table + lens (SMEM)
     bytes_o = rows * g * D * 4
     return KernelWorkload(
@@ -596,8 +605,13 @@ def _paged_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
         grid_steps=int(rows * max(1, round(pages * fill))),
         vmem_bytes=_paged_vmem(cfg, ctx),
         matmuls=[MatmulShape(g, D, ps), MatmulShape(g, ps, D)],
-        vector_flops=6.0 * B * Hq * T * fill,
-        dtype=ctx.dtype,
+        vector_flops=(6.0 * B * Hq * T
+                      + (4.0 * rows * run_rows * D if quantized else 0.0))
+        * fill,
+        # int8 pools dequantize before the dot: MXU math runs at the
+        # float rate (only the HBM stream is int8) — same rule as
+        # _kv8_workload.
+        dtype="bfloat16" if quantized else ctx.dtype,
         parallel_grid=rows,
     )
 
@@ -620,10 +634,13 @@ def _paged_operands(ctx: TuningContext, cfg: Optional[Config] = None):
 
     Page 0 is the reserved scratch page (never mapped); each sequence owns
     a contiguous run of page ids, lengths are ragged via extra["fill"].
+    An "int8" context builds quantized pools (per-token absmax scales in
+    parallel scale pools — the kv8 policy layout); q stays float32.
     """
     B, Hq, D = ctx.shape("q")
     _, Hkv, T, _ = ctx.shape("k")
-    dtype = jnp.dtype(ctx.dtype)
+    quantized = "int8" in ctx.dtype
+    dtype = jnp.float32 if quantized else jnp.dtype(ctx.dtype)
     ps = int((cfg or {}).get("page_size",
                              ctx.extra.get("page_size", 16)))
     pages_per_seq = _cdiv(T, ps)
@@ -641,15 +658,27 @@ def _paged_operands(ctx: TuningContext, cfg: Optional[Config] = None):
     lens = _memo_operand(
         ("randint", 7, B, hi),
         lambda: jax.random.randint(jax.random.PRNGKey(7), (B,), 1, hi))
-    return (q, kp, vp, tbl, lens), {}
+    if not quantized:
+        return (q, kp, vp, tbl, lens), {}
+    kq, ks, vq, vs = _memo_operand(
+        ("int8pool", (Hkv, n_pages, ps, D)),
+        lambda: _quantize_kv_pair(kp, vp))
+    return (q, kq, vq, tbl, lens), {"k_scales": ks, "v_scales": vs}
+
+
+def _quantize_kv_pair(k, v):
+    # The shared kv8 wire-format contract — identical to what the model
+    # cache-append paths write (quant/calibrate.py::quantize_kv).
+    from repro.quant.calibrate import quantize_kv
+    return quantize_kv(k, v)
 
 
 def _paged_runner(cfg: Config, ctx: TuningContext):
     from repro.kernels.paged_decode import paged_decode as paged_kernel
-    args, _ = _paged_operands(ctx, cfg)
+    args, kwargs = _paged_operands(ctx, cfg)
     fn = jax.jit(functools.partial(paged_kernel, block_kv=cfg["block_kv"],
                                    pack_gqa=cfg["pack_gqa"]))
-    return KernelRunner(fn, *args)
+    return KernelRunner(fn, *args, **kwargs)
 
 
 PAGED_DECODE = TunableKernel(
@@ -664,11 +693,15 @@ PAGED_DECODE = TunableKernel(
 
 
 def paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
+                 k_scales=None, v_scales=None,
                  scale: Optional[float] = None,
                  config: Optional[Config] = None,
                  tuner: Optional[Autotuner] = None, interpret: bool = True):
     """Autotuned paged decode. q (B,Hq,D); k/v_pages (Hkv,P,page_size,D);
-    block_tables (B,max_pages) int32; kv_len (B,) int32.
+    block_tables (B,max_pages) int32; kv_len (B,) int32. Int8 pools (the
+    kv8 policy) pass per-token ``k_scales``/``v_scales``
+    (Hkv,P,page_size) f32 — the context dtype becomes "int8", so int8 and
+    float pools tune (and cache) as distinct scenarios.
 
     The pool layout pins ``page_size``, so the runtime lookup context
     carries it in ``extra`` and only matching configs are explored; the
@@ -693,6 +726,7 @@ def paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
     cfg = dict(config)
     cfg.pop("page_size", None)
     return paged_kernel(q, k_pages, v_pages, block_tables, kv_len,
+                        k_scales=k_scales, v_scales=v_scales,
                         scale=scale, interpret=interpret, **cfg)
 
 
@@ -961,6 +995,239 @@ def matmul(x, y, *, config: Optional[Config] = None,
     return mm(x, y, interpret=interpret, **config)
 
 
+# ===========================================================================
+# Quantized GEMM (w8a8): int8×int8→int32 MXU accumulate, fused dequant
+# ===========================================================================
+
+def _w8a8_vmem(cfg: Config, ctx: TuningContext) -> int:
+    bm, bn, bk = cfg["block_m"], cfg["block_n"], cfg["block_k"]
+    buf = 2 * (bm * bk + bk * bn) * 1            # int8 operand tiles
+    acc = bm * bn * 4                            # int32 / f32 accumulator
+    out = 2 * bm * bn * 4                        # f32 output tile
+    scales = (bm + bn) * 4 if cfg.get("scale_gran") == "per_channel" else 8
+    return buf + acc + out + scales
+
+
+def matmul_w8a8_space() -> ConfigSpace:
+    sp = ConfigSpace(
+        "matmul_w8a8",
+        [
+            Param("block_m", (128, 256, 512, 1024)),
+            Param("block_n", (128, 256, 512, 1024)),
+            Param("block_k", (128, 256, 512, 1024, 2048)),
+            Param("dequant", ("epilogue", "inline")),
+            Param("scale_gran", ("per_channel", "per_tensor")),
+        ],
+        version=1,
+    )
+    sp.constrain("vmem", vmem_fits(_w8a8_vmem))
+    # Runtime operands arrive calibrated at a fixed granularity (their
+    # scale shapes), pinning the tunable — exactly as a deployed pool pins
+    # paged_decode's page_size. Offline deployment sweeps (no extra) leave
+    # it free and the winner tells the calibration pipeline what to emit.
+    sp.constrain(
+        "scale_gran==operands",
+        lambda c, x: ("scale_gran" not in x.extra
+                      or c["scale_gran"] == x.extra["scale_gran"]))
+    return sp
+
+
+def _w8a8_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
+    M, K = ctx.shape("x")
+    _, N = ctx.shape("y")
+    bm = min(cfg["block_m"], _rup(M, 8))
+    bn = min(cfg["block_n"], _rup(N, 128))
+    bk = min(cfg["block_k"], _rup(K, 128))
+    nm, nn, nk = _cdiv(M, bm), _cdiv(N, bn), _cdiv(K, bk)
+    bytes_x = nm * nn * nk * bm * bk * 1         # int8 operands
+    bytes_y = nm * nn * nk * bk * bn * 1
+    bytes_o = nm * nn * bm * bn * 4              # f32 output
+    bytes_s = (M + N) * 4 if cfg["scale_gran"] == "per_channel" else 8
+    # Dequant cost: the epilogue scales each output element once; inline
+    # converts + scales every K-block partial (nk× the VPU work) in
+    # exchange for an f32 accumulator.
+    vflops = 3.0 * M * N * (nk if cfg["dequant"] == "inline" else 1)
+    return KernelWorkload(
+        flops=2.0 * M * K * N,
+        hbm_bytes=bytes_x + bytes_y + bytes_o + bytes_s,
+        grid_steps=nm * nn * nk,
+        vmem_bytes=_w8a8_vmem(cfg, ctx),
+        matmuls=[MatmulShape(bm, bk, bn)],
+        vector_flops=vflops,
+        dtype="int8",            # the int8 MXU path (ChipSpec.flops_for_dtype)
+        parallel_grid=nm * nn,
+    )
+
+
+def _w8a8_heuristic(ctx: TuningContext) -> Config:
+    # What a sensible port of the bf16 matmul default would hard-code:
+    # same tiling triple, epilogue dequant, per-channel scales.
+    gran = ctx.extra.get("scale_gran", "per_channel")
+    return {"block_m": 256, "block_n": 256, "block_k": 256,
+            "dequant": "epilogue", "scale_gran": gran}
+
+
+def _w8a8_canonical(cfg: Config, ctx: TuningContext) -> Config:
+    M, K = ctx.shape("x")
+    N = ctx.shape("y")[1]
+    c = dict(cfg)
+    c["block_m"] = min(cfg["block_m"], _rup(M, 8))
+    c["block_n"] = min(cfg["block_n"], _rup(N, 128))
+    c["block_k"] = min(cfg["block_k"], _rup(K, 128))
+    # dequant stays: even with one K step, inline vs epilogue lower to
+    # distinct programs (f32 vs int32 accumulator scratch).
+    return c
+
+
+def _w8a8_runner(cfg: Config, ctx: TuningContext):
+    from repro.kernels.matmul_int8 import matmul_w8a8 as mm8
+    args, _ = _w8a8_operands(ctx, cfg)
+    fn = jax.jit(functools.partial(mm8, **cfg))
+    return KernelRunner(fn, *args)
+
+
+MATMUL_W8A8 = TunableKernel(
+    name="matmul_w8a8",
+    space=matmul_w8a8_space(),
+    version=1,
+    workload_fn=_w8a8_workload,
+    make_runner=_w8a8_runner,
+    heuristic=_w8a8_heuristic,
+    canonicalize=_w8a8_canonical,
+)
+
+
+def matmul_w8a8(x, w, x_scale, w_scale, *, config: Optional[Config] = None,
+                tuner: Optional[Autotuner] = None, interpret: bool = True):
+    """Autotuned w8a8 GEMM. x (M,K) int8; w (K,N) int8; x_scale (M,1) or
+    scalar; w_scale (1,N) or scalar. Returns (M,N) float32 with the
+    calibration scales fused into the kernel."""
+    from repro.kernels.matmul_int8 import matmul_w8a8 as mm8
+    # Granularity is decided by the weight scale's layout (a per-token
+    # activation scale with M == 1 is legitimately scalar-sized).
+    gran = ("per_tensor"
+            if int(math.prod(jnp.shape(w_scale) or (1,))) == 1
+            else "per_channel")
+    if config is None:
+        tuner = tuner or default_tuner()
+        ctx = _ctx(tuner, {"x": x.shape, "y": w.shape}, "int8",
+                   scale_gran=gran)
+        config = tuner.best_config(MATMUL_W8A8, ctx)
+    cfg = dict(config)
+    cfg.setdefault("scale_gran", gran)
+    return mm8(x, w, x_scale, w_scale, interpret=interpret, **cfg)
+
+
+# ===========================================================================
+# Int8-KV ragged GQA decode (kv8): in-kernel dequant over a quantized cache
+# ===========================================================================
+
+def _kv8_vmem(cfg: Config, ctx: TuningContext) -> int:
+    B, Hq, D = ctx.shape("q")
+    Hkv = ctx.shape("k")[1]
+    g = max(1, Hq // Hkv) if cfg.get("pack_gqa", True) else 1
+    bk = cfg["block_kv"]
+    buf = 2 * (2 * bk * D * 1 + 2 * bk * 4 + g * D * 4)   # int8 kv + scales
+    scratch = g * D * 4 + 2 * g * LANES * 4
+    out = 2 * (g * D * 4 + g * LANES * 4)
+    return buf + scratch + out
+
+
+def gqa_decode_kv8_space() -> ConfigSpace:
+    sp = ConfigSpace(
+        "gqa_decode_kv8",
+        [
+            Param("block_kv", (128, 256, 512, 1024, 2048, 4096)),
+            Param("k_splits", (1, 2, 4, 8, 16, 32)),
+            Param("pack_gqa", (True, False)),
+        ],
+        version=1,
+    )
+    sp.constrain("vmem", vmem_fits(_kv8_vmem))
+    sp.constrain(
+        "splits<=blocks",
+        lambda c, x: c["k_splits"] <= max(1, _cdiv(x.shape("k")[2],
+                                                   c["block_kv"])))
+    return sp
+
+
+def _kv8_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
+    B, Hq, D = ctx.shape("q")
+    _, Hkv, T, _ = ctx.shape("k")
+    group = max(1, Hq // Hkv)
+    pack = cfg.get("pack_gqa", True)
+    g = group if pack else 1
+    rows = B * Hkv if pack else B * Hq
+    fill = float(ctx.extra.get("fill", 1.0))
+    bk = min(cfg["block_kv"], _rup(T, 128))
+    ks = cfg["k_splits"]
+    t_pad = _rup(T, bk * ks)
+    blocks = t_pad // bk
+    run_rows = max(1.0, t_pad * fill)
+    flops = 4.0 * B * Hq * T * D * fill
+    # int8 cache + f32 per-token scales: the bandwidth win vs gqa_decode
+    # is the whole point — D bytes per token instead of 2·D, plus 8 for
+    # the two scales.
+    bytes_kv = rows * run_rows * (2.0 * D * 1 + 2 * 4)
+    bytes_q = rows * ks * g * D * 4
+    bytes_part = 2.0 * rows * ks * g * (D + LANES) * 4
+    return KernelWorkload(
+        flops=flops,
+        hbm_bytes=bytes_kv + bytes_q + bytes_part,
+        grid_steps=int(rows * max(1, round(blocks * fill))),
+        vmem_bytes=_kv8_vmem(cfg, ctx),
+        matmuls=[MatmulShape(g, D, bk), MatmulShape(g, bk, D)],
+        # dequant (2 muls/element) rides the softmax pipeline on the VPU
+        vector_flops=(6.0 * B * Hq * T + 4.0 * rows * run_rows * D) * fill,
+        dtype="bfloat16",        # post-dequant MXU math runs at float peak
+        parallel_grid=rows * ks,
+    )
+
+
+def _kv8_heuristic(ctx: TuningContext) -> Config:
+    return {"block_kv": 512, "k_splits": 1, "pack_gqa": True}
+
+
+def _kv8_canonical(cfg: Config, ctx: TuningContext) -> Config:
+    c = dict(cfg)
+    c["block_kv"] = min(c["block_kv"], _rup(ctx.shape("k")[2], 128))
+    return c
+
+
+def _kv8_runner(cfg: Config, ctx: TuningContext):
+    from repro.kernels.gqa_decode_kv8 import gqa_decode_kv8 as kv8_kernel
+    args, kwargs = _kv8_operands(ctx, cfg)
+    fn = jax.jit(functools.partial(kv8_kernel, **cfg))
+    return KernelRunner(fn, *args, **kwargs)
+
+
+GQA_DECODE_KV8 = TunableKernel(
+    name="gqa_decode_kv8",
+    space=gqa_decode_kv8_space(),
+    version=1,
+    workload_fn=_kv8_workload,
+    make_runner=_kv8_runner,
+    heuristic=_kv8_heuristic,
+    canonicalize=_kv8_canonical,
+)
+
+
+def ragged_decode_kv8(q, k, v, k_scale, v_scale, *, kv_len=None,
+                      config: Optional[Config] = None,
+                      tuner: Optional[Autotuner] = None,
+                      interpret: bool = True):
+    """Autotuned int8-KV ragged decode. q (B,Hq,D) float; k, v
+    (B,Hkv,T,D) int8; k_scale, v_scale (B,Hkv,T) f32 per-token scales;
+    kv_len (B,) int32 valid lengths."""
+    from repro.kernels.gqa_decode_kv8 import gqa_decode_kv8 as kv8_kernel
+    if config is None:
+        tuner = tuner or default_tuner()
+        ctx = _ctx(tuner, {"q": q.shape, "k": k.shape}, "int8")
+        config = tuner.best_config(GQA_DECODE_KV8, ctx)
+    return kv8_kernel(q, k, v, k_scale, v_scale, kv_len=kv_len,
+                      interpret=interpret, **config)
+
+
 def _cdiv(a: int, b: int) -> int:
     return -(-a // b)
 
@@ -1029,6 +1296,51 @@ def _mm_operands(ctx: TuningContext, cfg: Optional[Config] = None):
     keys = jax.random.split(jax.random.PRNGKey(0), 2)
     return (_rand(keys[0], ctx.shape("x"), dtype),
             _rand(keys[1], ctx.shape("y"), dtype)), {}
+
+
+def _w8a8_operands(ctx: TuningContext, cfg: Optional[Config] = None):
+    """Quantized GEMM operands at the granularity the config (or the
+    context pin) asks for — operand *layout* is config-dependent, like
+    paged_decode's pool."""
+    gran = ((cfg or {}).get("scale_gran")
+            or ctx.extra.get("scale_gran", "per_channel"))
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    x_s, y_s = ctx.shape("x"), ctx.shape("y")
+
+    def build():
+        from repro.quant import calibrate
+        x = _rand(keys[0], x_s, jnp.float32)
+        w = _rand(keys[1], y_s, jnp.float32)
+        if gran == "per_tensor":
+            xs = calibrate.absmax_scale(x)
+            ws = calibrate.absmax_scale(w)
+        else:
+            xs = calibrate.absmax_scale(x, axis=-1)      # (M, 1)
+            ws = calibrate.absmax_scale(w, axis=0)       # (1, N)
+        return (calibrate.quantize(x, xs), calibrate.quantize(w, ws),
+                xs, ws)
+
+    args = _memo_operand(("w8a8", x_s, y_s, gran), build)
+    return args, {}
+
+
+def _kv8_operands(ctx: TuningContext, cfg: Optional[Config] = None):
+    """Int8-KV decode operands: float q, per-token-quantized cache."""
+    B, Hq, D = ctx.shape("q")
+    k_s = ctx.shape("k")
+    T = k_s[2]
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(keys[0], (B, Hq, D), jnp.float32)
+    kq, ks, vq, vs = _memo_operand(
+        ("int8kv", k_s),
+        lambda: _quantize_kv_pair(_rand(keys[1], k_s, jnp.float32),
+                                  _rand(keys[2], k_s, jnp.float32)))
+    fill = float(ctx.extra.get("fill", 1.0))
+    hi = max(2, int(T * fill)) + 1
+    lens = _memo_operand(
+        ("randint", 7, B, hi),
+        lambda: jax.random.randint(jax.random.PRNGKey(7), (B,), 1, hi))
+    return (q, kq, vq, ks, vs), {"kv_len": lens}
 
 
 # ===========================================================================
@@ -1102,18 +1414,24 @@ def _register_builtin_kernels() -> None:
     ))
     register(KernelSpec(
         tunable=PAGED_DECODE,
-        scenarios=("decode", "gqa", "ragged", "serving", "paged"),
+        scenarios=("decode", "gqa", "ragged", "serving", "paged", "quant"),
         reference=ref.paged_decode,
         entry_point=paged_decode,
         operands=_paged_operands,
         description="Paged-KV decode over block tables (continuous "
-                    "batching page pool)",
+                    "batching page pool; int8 pages under the kv8 policy)",
         bench_cases=(
             BenchCase("p1024", {"q": (2, 8, 128), "k": (2, 2, 1024, 128)},
                       extra={"fill": 0.5}),
+            BenchCase("p1024_kv8",
+                      {"q": (2, 8, 128), "k": (2, 2, 1024, 128)},
+                      dtype="int8", extra={"fill": 0.5}),
             BenchCase("pool32k",
                       {"q": (16, 32, 128), "k": (16, 8, 32768, 128)},
                       dtype="bfloat16", extra={"fill": 0.5}, scale="paper"),
+            BenchCase("pool32k_kv8",
+                      {"q": (16, 32, 128), "k": (16, 8, 32768, 128)},
+                      dtype="int8", extra={"fill": 0.5}, scale="paper"),
         ),
     ))
     register(KernelSpec(
@@ -1157,6 +1475,41 @@ def _register_builtin_kernels() -> None:
             BenchCase("m256", {"x": (256, 256), "y": (256, 256)}),
             BenchCase("mm8k", {"x": (8192, 8192), "y": (8192, 8192)},
                       dtype="bfloat16", scale="paper"),
+        ),
+    ))
+    register(KernelSpec(
+        tunable=MATMUL_W8A8,
+        scenarios=("prefill", "training", "serving", "quant"),
+        precision="int8",
+        reference=ref.matmul_w8a8,
+        entry_point=matmul_w8a8,
+        operands=_w8a8_operands,
+        description="w8a8 GEMM: int8×int8→int32 MXU accumulate with "
+                    "fused per-channel/per-tensor dequant",
+        bench_cases=(
+            BenchCase("m256", {"x": (256, 256), "y": (256, 256)},
+                      dtype="int8"),
+            BenchCase("proj4k", {"x": (512, 4096), "y": (4096, 4096)},
+                      dtype="int8", scale="paper"),
+            BenchCase("mm8k", {"x": (8192, 8192), "y": (8192, 8192)},
+                      dtype="int8", scale="paper"),
+        ),
+    ))
+    register(KernelSpec(
+        tunable=GQA_DECODE_KV8,
+        scenarios=("decode", "gqa", "ragged", "serving", "quant"),
+        precision="int8",
+        reference=ref.gqa_decode_kv8,
+        entry_point=ragged_decode_kv8,
+        operands=_kv8_operands,
+        description="Ragged GQA decode over an int8 KV cache "
+                    "(per-token scales, in-kernel dequant)",
+        bench_cases=(
+            BenchCase("r1024", {"q": (2, 8, 128), "k": (2, 2, 1024, 128)},
+                      dtype="int8", extra={"fill": 0.5}),
+            BenchCase("serve32k",
+                      {"q": (16, 32, 128), "k": (16, 8, 32768, 128)},
+                      dtype="int8", extra={"fill": 0.5}, scale="paper"),
         ),
     ))
 

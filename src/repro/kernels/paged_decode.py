@@ -53,10 +53,14 @@ LANES = 128
 
 def _paged_kernel(tbl_ref, len_ref,                # scalar-prefetched
                   q_ref, k_ref, v_ref,             # inputs (k/v: one page)
-                  o_ref,                           # output
-                  acc_ref, m_ref, l_ref,           # scratch
-                  *, scale: float, page_size: int, pages_per_block: int,
-                  heads_per_b: int, capacity: int):
+                  *rest,                           # [ks, vs,] o, scratch...
+                  scale: float, page_size: int, pages_per_block: int,
+                  heads_per_b: int, capacity: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, acc_ref, m_ref, l_ref = rest
     r = pl.program_id(0)                 # which (batch, head) row
     sj = pl.program_id(1)                # which block_kv super-block
     pj = pl.program_id(2)                # page within the super-block
@@ -82,6 +86,11 @@ def _paged_kernel(tbl_ref, len_ref,                # scalar-prefetched
         q = q_ref[0].astype(jnp.float32)            # (g, D)
         k = k_ref[0, 0].astype(jnp.float32)         # (page_size, D)
         v = v_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            # int8 pages: dequantize rows by their per-token scales (the
+            # kv8 policy — scales live in parallel scale pools).
+            k = k * ks_ref[0, 0][:, None]
+            v = v * vs_ref[0, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (g, page_size)
@@ -109,6 +118,8 @@ def _paged_kernel(tbl_ref, len_ref,                # scalar-prefetched
 
 def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
                  block_tables: jnp.ndarray, kv_len: jnp.ndarray, *,
+                 k_scales: Optional[jnp.ndarray] = None,
+                 v_scales: Optional[jnp.ndarray] = None,
                  scale: Optional[float] = None,
                  block_kv: Optional[int] = None,
                  pack_gqa: bool = True,
@@ -120,6 +131,9 @@ def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     v_pages      (Hkv, P, page_size, D)
     block_tables (B, max_pages) int32     logical block j of seq b -> page id
     kv_len       (B,) int32               valid tokens per sequence
+    k_scales     optional (Hkv, P, page_size) f32 — required iff the pools
+    v_scales     are int8 (the kv8 policy): per-token dequant scales,
+                 chased through the same block tables as the pages
 
     ``page_size`` is a property of the pool layout (``k_pages.shape[2]``);
     ``block_kv`` must be a multiple of it (default: one page per block).
@@ -128,6 +142,9 @@ def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     B, Hq, D = q.shape
     Hkv, n_pages, page_size, _ = k_pages.shape
     assert Hq % Hkv == 0
+    quantized = k_pages.dtype == jnp.int8
+    assert quantized == (k_scales is not None) == (v_scales is not None), \
+        "int8 pools require k_scales/v_scales; float pools forbid them"
     group = Hq // Hkv
     if scale is None:
         scale = D ** -0.5
@@ -158,14 +175,24 @@ def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     def kv_index(r, sj, pj, tbl, lens, ppb=pages_per_block):
         return (kv_head(r), tbl[r // heads_per_b, sj * ppb + pj], 0, 0)
 
+    def scale_index(r, sj, pj, tbl, lens, ppb=pages_per_block):
+        return (kv_head(r), tbl[r // heads_per_b, sj * ppb + pj], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, g, D), lambda r, sj, pj, tbl, lens: (r, 0, 0)),
+        pl.BlockSpec((1, 1, page_size, D), kv_index),
+        pl.BlockSpec((1, 1, page_size, D), kv_index),
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1, page_size), scale_index),
+                     pl.BlockSpec((1, 1, page_size), scale_index)]
+        operands += [k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(rows, n_super, pages_per_block),
-        in_specs=[
-            pl.BlockSpec((1, g, D), lambda r, sj, pj, tbl, lens: (r, 0, 0)),
-            pl.BlockSpec((1, 1, page_size, D), kv_index),
-            pl.BlockSpec((1, 1, page_size, D), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, g, D),
                                lambda r, sj, pj, tbl, lens: (r, 0, 0)),
         scratch_shapes=[
@@ -177,12 +204,12 @@ def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     kernel = functools.partial(
         _paged_kernel, scale=scale, page_size=page_size,
         pages_per_block=pages_per_block, heads_per_b=heads_per_b,
-        capacity=capacity)
+        capacity=capacity, quantized=quantized)
     o = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((rows, g, D), jnp.float32),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), kv_len.astype(jnp.int32),
-      qg, k_pages, v_pages)
+      *operands)
     return o.reshape(B, Hq, D).astype(q.dtype)

@@ -93,10 +93,19 @@ def gather_pages(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
 
 def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
                  block_tables: jnp.ndarray, kv_len: jnp.ndarray, *,
+                 k_scales: Optional[jnp.ndarray] = None,
+                 v_scales: Optional[jnp.ndarray] = None,
                  scale: Optional[float] = None) -> jnp.ndarray:
     """Paged decode oracle: gather each sequence's pages into a dense cache
     and run the dense ragged-decode reference. Rows with kv_len == 0
-    (inactive batch slots) return zeros, matching the kernel."""
+    (inactive batch slots) return zeros, matching the kernel. Int8 pools
+    (the kv8 policy) pass per-token ``k_scales``/``v_scales``
+    (Hkv, P, page_size) and are dequantized before the gather."""
+    if k_scales is not None:
+        k_pages = k_pages.astype(jnp.float32) * \
+            k_scales.astype(jnp.float32)[..., None]
+        v_pages = v_pages.astype(jnp.float32) * \
+            v_scales.astype(jnp.float32)[..., None]
     k = gather_pages(k_pages, block_tables)
     v = gather_pages(v_pages, block_tables)
     capacity = k.shape[2]
@@ -127,6 +136,30 @@ def mla_decode(q_abs: jnp.ndarray, q_rope: jnp.ndarray, ckv: jnp.ndarray,
     p = jnp.exp(s - m)
     p = p / jnp.sum(p, axis=-1, keepdims=True)
     return jnp.einsum("bht,btc->bhc", p, ckv.astype(jnp.float32))
+
+
+def gqa_decode_kv8(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   k_scale: jnp.ndarray, v_scale: jnp.ndarray, *,
+                   kv_len: Optional[jnp.ndarray] = None,
+                   scale: Optional[float] = None) -> jnp.ndarray:
+    """Int8-KV ragged decode oracle: dequantize the cache (per-token-per-
+    head scales), then run the dense ragged reference. q (B, Hq, D) float;
+    k, v (B, Hkv, T, D) int8; k_scale, v_scale (B, Hkv, T) f32."""
+    kf = k.astype(jnp.float32) * k_scale.astype(jnp.float32)[..., None]
+    vf = v.astype(jnp.float32) * v_scale.astype(jnp.float32)[..., None]
+    return decode_attention(q, kf, vf, kv_len=kv_len, scale=scale)
+
+
+def matmul_w8a8(x: jnp.ndarray, w: jnp.ndarray, x_scale: jnp.ndarray,
+                w_scale: jnp.ndarray) -> jnp.ndarray:
+    """w8a8 GEMM oracle: dequantize both int8 operands, matmul in f32.
+    x (M, K) int8 with x_scale (M, 1) or scalar; w (K, N) int8 with
+    w_scale (1, N) or scalar."""
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(-1, 1)
+    ws = jnp.asarray(w_scale, jnp.float32).reshape(1, -1)
+    xf = x.astype(jnp.float32) * xs
+    wf = w.astype(jnp.float32) * ws
+    return jnp.dot(xf, wf, preferred_element_type=jnp.float32)
 
 
 def rms_norm(x: jnp.ndarray, weight: jnp.ndarray,

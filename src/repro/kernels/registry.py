@@ -71,6 +71,13 @@ class KernelSpec:
     entry_point: Optional[Callable[..., Any]] = None
     bench_cases: Tuple[BenchCase, ...] = ()
     description: str = ""
+    # Numerics family of the kernel's data stream: "float" (bf16/f32
+    # operands) or "int8" (quantized operands with in-kernel dequant). A
+    # first-class tag — not a scenario — because consumers filter on it
+    # orthogonally: the oracle conformance sweep picks tolerances by it,
+    # deployment tooling selects the families a policy enables, and each
+    # precision is its own version family ("A Few Fit Most").
+    precision: str = "float"
     # Optional (ctx, config) -> (args, kwargs) builder producing concrete
     # operands that BOTH ``entry_point`` and ``reference`` accept. This is
     # what makes registry-driven conformance possible: a new kernel that
@@ -131,19 +138,24 @@ def get_kernel(name: str) -> KernelSpec:
             ) from None
 
 
-def list_kernels(scenario: Optional[str] = None) -> List[KernelSpec]:
+def list_kernels(scenario: Optional[str] = None,
+                 precision: Optional[str] = None) -> List[KernelSpec]:
     """All registered kernels, name-sorted; optionally filtered by a
-    scenario tag (e.g. ``scenario="decode"``)."""
+    scenario tag (e.g. ``scenario="decode"``) and/or a precision family
+    (e.g. ``precision="int8"`` for the quantized kernels)."""
     _ensure_builtins()
     with _LOCK:
         specs = sorted(_REGISTRY.values(), key=lambda s: s.name)
-    if scenario is None:
-        return specs
-    return [s for s in specs if scenario in s.scenarios]
+    if scenario is not None:
+        specs = [s for s in specs if scenario in s.scenarios]
+    if precision is not None:
+        specs = [s for s in specs if s.precision == precision]
+    return specs
 
 
-def kernel_names(scenario: Optional[str] = None) -> List[str]:
-    return [s.name for s in list_kernels(scenario)]
+def kernel_names(scenario: Optional[str] = None,
+                 precision: Optional[str] = None) -> List[str]:
+    return [s.name for s in list_kernels(scenario, precision)]
 
 
 def scenarios() -> List[str]:

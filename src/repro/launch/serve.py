@@ -14,6 +14,14 @@
             block tables. The pool's page size comes from the tuner's
             deployment-level ``paged_decode`` config (docs/serving.md).
 
+``--quant`` selects a quantization policy (repro/quant/): ``w8a8`` /
+``w8a16`` quantize the MLP projection weights (per-channel int8, QTensor
+params), ``kv8`` serves an int8 KV cache — dense caches under
+``--decode-impl pallas`` (the ``gqa_decode_kv8`` kernel) and int8 pages
+under ``--decode-impl paged`` (the ``paged_decode`` kernel dequantizing
+in-kernel). Each policy's kernels tune as their own scenarios (dtype is
+part of the cache key), warm-started from the shipped DB.
+
 With ``--on-miss heuristic`` the decode hot path never tunes inline:
 kernels launch with their heuristic defaults while the daemon background
 worker drains the tuning queue off the critical path (paper Q4.4), so
@@ -40,6 +48,7 @@ from repro.models.param import init_params
 def serve_paged(args, cfg, tuner):
     """Continuous batching over a paged KV pool."""
     from repro.core.config_space import TuningContext
+    from repro.quant import get_policy
     from repro.serving import Request, ServingEngine
 
     B, P, G = args.requests, args.prompt_len, args.gen
@@ -49,14 +58,19 @@ def serve_paged(args, cfg, tuner):
     # shipped dtype) — exactly what gen_shipped_db ships, so a warm
     # process reads the overlay instead of tuning at startup. A cold
     # cache tunes it once here (pipelined engine / analytical default).
+    # The kv8 policy serves int8 pages: its deployment scenario is the
+    # SAME shapes at dtype "int8" — a distinct cache key, because the
+    # winning layout shifts with the halved KV traffic (also shipped).
     from repro.configs.gen_shipped_db import (
         SHIP_DTYPE, paged_deployment_shapes,
     )
+    policy = get_policy(None if args.quant == "none" else args.quant)
+    kv8 = policy is not None and policy.quantizes_kv
     chip = getattr(tuner.backend, "chip", None) or \
         getattr(getattr(tuner.backend, "analytical", None), "chip", None)
     full_cfg = get_config(args.arch)
     ctx = TuningContext(chip=chip, shapes=paged_deployment_shapes(full_cfg),
-                        dtype=SHIP_DTYPE)
+                        dtype="int8" if kv8 else SHIP_DTYPE)
     deploy_cfg = tuner.best_config("paged_decode", ctx)
     # Clamp to the largest tunable page size that a single sequence can
     # still fill (tiny smoke traces would otherwise waste a whole page).
@@ -76,7 +90,8 @@ def serve_paged(args, cfg, tuner):
         cfg, params, num_pages=1 + args.max_batch * pages_per_seq,
         page_size=page_size, max_batch=args.max_batch,
         max_seq_len=max_seq_len + args.prefill_chunk,
-        prefill_chunk=args.prefill_chunk)
+        prefill_chunk=args.prefill_chunk,
+        quant=None if args.quant == "none" else args.quant)
     reqs = []
     for i in range(B):
         plen = int(rng.integers(max(1, P // 2), P + 1))
@@ -98,12 +113,17 @@ def serve_paged(args, cfg, tuner):
 
 def serve_dense(args, cfg):
     """Static batch with dense per-request KV caches (the baseline)."""
+    from repro.quant import quantize_params
+
     mesh = make_local_mesh()
+    quant = None if args.quant == "none" else args.quant
     scfg = steps_lib.StepConfig(policy="serve_tp",
                                 opts=lm.ForwardOpts(
                                     attn_chunk=64,
-                                    decode_impl=args.decode_impl))
+                                    decode_impl=args.decode_impl,
+                                    quant=quant))
     params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    params = quantize_params(params, quant, store="grid")
     B, P, G = args.requests, args.prompt_len, args.gen
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(1, cfg.vocab_size, size=(B, P)),
@@ -151,6 +171,11 @@ def main(argv=None):
                     help="pallas = registry decode kernels on dense caches; "
                          "paged = continuous batching over the page pool "
                          "(paged_decode kernel)")
+    ap.add_argument("--quant", choices=("none", "w8a8", "w8a16", "kv8"),
+                    default="none",
+                    help="quantization policy (repro.quant): w8a8/w8a16 "
+                         "quantize the MLP projections, kv8 serves an int8 "
+                         "KV cache (dense caches and paged pools)")
     ap.add_argument("--max-batch", type=int, default=4,
                     help="concurrent sequences (paged only)")
     ap.add_argument("--prefill-chunk", type=int, default=16,

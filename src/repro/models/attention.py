@@ -279,10 +279,31 @@ def attn_forward(p, x, cfg: ModelConfig, *, impl="chunked", chunk=512,
 
 # --- caches ------------------------------------------------------------------
 
-def attn_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
-    """ShapeDtypeStructs of this layer's decode cache."""
+def _check_kv8(cfg: ModelConfig) -> None:
+    if cfg.mla is not None:
+        raise NotImplementedError(
+            f"kv8 int8 caching needs the latent-cache quant path; "
+            f"{cfg.name!r} uses MLA")
+
+
+def _quant_kv_token(k, v):
+    """Per-token-per-head symmetric int8 quantization of new KV entries
+    (the cache is self-calibrating: every token carries its own absmax
+    scale). Delegates to the shared kv8 wire-format contract so the
+    runtime caches match the tuner's benchmark operands exactly."""
+    from repro.quant.calibrate import quantize_kv
+    return quantize_kv(k, v)
+
+
+def attn_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+                    kv_dtype: Optional[str] = None):
+    """ShapeDtypeStructs of this layer's decode cache. ``kv_dtype="int8"``
+    (the kv8 policy) stores int8 entries plus per-token-per-head f32
+    scales in parallel ``k_scale``/``v_scale`` buffers."""
     dt = jnp.dtype(cfg.dtype)
     if cfg.mla is not None:
+        if kv_dtype is not None:
+            _check_kv8(cfg)
         m = cfg.mla
         return {
             "ckv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), dt),
@@ -290,15 +311,27 @@ def attn_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
         }
     slots = min(max_len, cfg.window) if cfg.window else max_len
     shape = (batch, slots, cfg.n_kv_heads, cfg.head_dim)
-    return {"k": jax.ShapeDtypeStruct(shape, dt),
-            "v": jax.ShapeDtypeStruct(shape, dt)}
+    if kv_dtype is None:
+        return {"k": jax.ShapeDtypeStruct(shape, dt),
+                "v": jax.ShapeDtypeStruct(shape, dt)}
+    assert kv_dtype == "int8", kv_dtype
+    sshape = (batch, slots, cfg.n_kv_heads)
+    return {"k": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct(sshape, jnp.float32)}
 
 
 def attn_prefill(p, x, cfg: ModelConfig, *, max_len: int, impl="chunked",
-                 chunk=512):
+                 chunk=512, kv_dtype: Optional[str] = None):
     """Forward over the prompt; returns (out, cache) with caches sized for
-    ``max_len`` total positions (ring-buffered to ``window`` slots for SWA)."""
+    ``max_len`` total positions (ring-buffered to ``window`` slots for
+    SWA). ``kv_dtype="int8"`` stores the quantized kv8 cache (attention
+    over the prompt itself still runs full precision — only what persists
+    is quantized)."""
     if cfg.mla is not None:
+        if kv_dtype is not None:
+            _check_kv8(cfg)
         return _mla_prefill(p, x, cfg, max_len=max_len, impl=impl, chunk=chunk)
     B, S, _ = x.shape
     positions = jnp.arange(S)
@@ -306,18 +339,23 @@ def attn_prefill(p, x, cfg: ModelConfig, *, max_len: int, impl="chunked",
     o = run_attention(q, k, v, impl=impl, causal=True, window=cfg.window,
                       chunk=chunk)
     slots = min(max_len, cfg.window) if cfg.window else max_len
-    ck = jnp.zeros((B, slots, cfg.n_kv_heads, cfg.head_dim), k.dtype)
-    cv = jnp.zeros_like(ck)
+    srcs = {"k": k, "v": v}
+    if kv_dtype is not None:
+        assert kv_dtype == "int8", kv_dtype
+        kq, ks, vq, vs = _quant_kv_token(k, v)
+        srcs = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
     if cfg.window and S > slots:
         idx = np.arange(S - slots, S)
-        ck = ck.at[:, idx % slots].set(k[:, idx])
-        cv = cv.at[:, idx % slots].set(v[:, idx])
+        dst = idx % slots
     else:
-        idx = np.arange(S) % slots
-        ck = ck.at[:, idx].set(k)
-        cv = cv.at[:, idx].set(v)
-    cache = {"k": shard(ck, "batch", None, "kv_heads", None),
-             "v": shard(cv, "batch", None, "kv_heads", None)}
+        idx = np.arange(S)
+        dst = idx % slots
+    cache = {}
+    for name, src in srcs.items():
+        buf = jnp.zeros((B, slots) + src.shape[2:], src.dtype)
+        buf = buf.at[:, dst].set(src[:, idx])
+        axes = ("batch", None, "kv_heads") + (None,) * (buf.ndim - 3)
+        cache[name] = shard(buf, *axes)
     return _proj_out(p, o, cfg), cache
 
 
@@ -325,9 +363,12 @@ def attn_decode(p, x, cfg: ModelConfig, cache: Cache, pos, *, impl="full"):
     """One-token decode. x (B, 1, d); pos scalar int32 (current index).
 
     ``impl="pallas"`` dispatches through the registry's ragged decode
-    kernels (``gqa_decode_ragged`` / ``mla_decode``) with per-request valid
-    lengths; sliding-window (ring-buffer) caches fall back to the einsum
-    path because their slot order is not a contiguous KV prefix.
+    kernels (``gqa_decode_ragged`` / ``mla_decode``; ``gqa_decode_kv8``
+    for int8 caches) with per-request valid lengths; sliding-window
+    (ring-buffer) caches fall back to the einsum path because their slot
+    order is not a contiguous KV prefix. A kv8 cache is detected by its
+    ``k_scale`` buffer — the new token is quantized with its own absmax
+    scale before the cache update.
     """
     if cfg.mla is not None:
         return _mla_decode(p, x, cfg, cache, pos, impl=impl)
@@ -337,45 +378,77 @@ def attn_decode(p, x, cfg: ModelConfig, cache: Cache, pos, *, impl="full"):
     q, k, v = _qkv(p, x, cfg, positions)
     slots = cache["k"].shape[1]
     slot = pos % slots
+    quantized = "k_scale" in cache         # kv8: int8 entries + scales
+    if quantized:
+        k, ks, v, vs = _quant_kv_token(k, v)
     ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
     cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    new = {"k": ck, "v": cv}
+    if quantized:
+        new["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_scale"], ks, slot, axis=1)
+        new["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_scale"], vs, slot, axis=1)
 
     if impl == "pallas" and cfg.window is None:
         from repro.kernels import ops as kops
         kv_len = jnp.full((B,), pos + 1, jnp.int32)
-        o = kops.ragged_decode(q[:, 0], jnp.moveaxis(ck, 1, 2),
-                            jnp.moveaxis(cv, 1, 2), kv_len=kv_len)
-        return _proj_out(p, o[:, None], cfg), {"k": ck, "v": cv}
+        if quantized:
+            o = kops.ragged_decode_kv8(
+                q[:, 0], jnp.moveaxis(ck, 1, 2), jnp.moveaxis(cv, 1, 2),
+                jnp.moveaxis(new["k_scale"], 1, 2),
+                jnp.moveaxis(new["v_scale"], 1, 2), kv_len=kv_len)
+        else:
+            o = kops.ragged_decode(q[:, 0], jnp.moveaxis(ck, 1, 2),
+                                   jnp.moveaxis(cv, 1, 2), kv_len=kv_len)
+        return _proj_out(p, o[:, None], cfg), new
 
+    ckf, cvf = ck.astype(jnp.float32), cv.astype(jnp.float32)
+    if quantized:                          # dequant for the einsum path
+        ckf = ckf * new["k_scale"].astype(jnp.float32)[..., None]
+        cvf = cvf * new["v_scale"].astype(jnp.float32)[..., None]
     qg = _group(q, hkv).astype(jnp.float32)
-    s = jnp.einsum("bskgd,btkd->bkgst", qg, ck.astype(jnp.float32)) * dh ** -0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, ckf) * dh ** -0.5
     # Valid slots: s <= pos when the ring has not wrapped, else all.
     slot_ids = jnp.arange(slots)
     valid = jnp.logical_or(slot_ids <= pos, pos + 1 >= slots)
     s = jnp.where(valid[None, None, None, None, :], s, -1e30)
     prob = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgst,btkv->bskgv", prob, cv.astype(jnp.float32))
+    o = jnp.einsum("bkgst,btkv->bskgv", prob, cvf)
     o = o.reshape(B, 1, hq, dh).astype(x.dtype)
-    return _proj_out(p, o, cfg), {"k": ck, "v": cv}
+    return _proj_out(p, o, cfg), new
 
 
 # --- paged KV cache (continuous-batching serving, repro/serving/) ------------
 
-def paged_cache_spec(cfg: ModelConfig, num_pages: int, page_size: int):
+def paged_cache_spec(cfg: ModelConfig, num_pages: int, page_size: int,
+                     kv_dtype: Optional[str] = None):
     """ShapeDtypeStructs of this layer's shared page pool. Layout
     (Hkv, P, page_size, D): the paged_decode kernel's block-table index map
-    picks (head, page) per grid step."""
+    picks (head, page) per grid step. ``kv_dtype="int8"`` (the kv8 policy)
+    makes the pools int8 and adds parallel per-token scale pools
+    (Hkv, P, page_size) the kernel chases through the same tables."""
     dt = jnp.dtype(cfg.dtype)
     shape = (cfg.n_kv_heads, num_pages, page_size, cfg.head_dim)
-    return {"k_pages": jax.ShapeDtypeStruct(shape, dt),
-            "v_pages": jax.ShapeDtypeStruct(shape, dt)}
+    if kv_dtype is None:
+        return {"k_pages": jax.ShapeDtypeStruct(shape, dt),
+                "v_pages": jax.ShapeDtypeStruct(shape, dt)}
+    assert kv_dtype == "int8", kv_dtype
+    _check_kv8(cfg)
+    sshape = shape[:-1]
+    return {"k_pages": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "v_pages": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "k_scales": jax.ShapeDtypeStruct(sshape, jnp.float32),
+            "v_scales": jax.ShapeDtypeStruct(sshape, jnp.float32)}
 
 
 def _scatter_pages(pages, vals, block_tables, start):
     """Write vals (B, S, Hkv, D) at token positions start[b] + s into the
     pool (Hkv, P, page_size, D) through each sequence's block table
     (B, max_pages). Inactive writes must be routed to the reserved scratch
-    page by the caller (table entry 0)."""
+    page by the caller (table entry 0). Also scatters per-token scale
+    values — (B, S, Hkv) into (Hkv, P, page_size) — through the identical
+    index arithmetic (the trailing D axis just isn't there)."""
     B, S = vals.shape[:2]
     page_size = pages.shape[2]
     pos = start[:, None] + jnp.arange(S)[None, :]              # (B, S)
@@ -392,6 +465,16 @@ def _gather_pages_bthd(pages, block_tables):
     return jnp.moveaxis(gather_pages(pages, block_tables), 1, 2)
 
 
+def _gather_scales_bth(scales, block_tables):
+    """Densify a per-token scale pool (Hkv, P, page_size) through the
+    block tables into (B, capacity, Hkv) — the scale-side twin of
+    ``_gather_pages_bthd``."""
+    Hkv, _, ps = scales.shape
+    B, nb = block_tables.shape
+    dense = scales[:, block_tables].reshape(Hkv, B, nb * ps)
+    return jnp.moveaxis(dense, 0, 2)
+
+
 def attn_prefill_paged(p, x, cfg: ModelConfig, cache, block_tables, start):
     """One chunked-prefill step: write the chunk's KV into the pool, then
     attend the chunk's queries over the sequence's dense prefix (gathered
@@ -406,10 +489,27 @@ def attn_prefill_paged(p, x, cfg: ModelConfig, cache, block_tables, start):
     B, S, _ = x.shape
     positions = start[:, None] + jnp.arange(S)[None, :]
     q, k, v = _qkv(p, x, cfg, positions)
+    new = dict(cache)
+    if "k_scales" in cache:                 # int8 pools (kv8 policy)
+        k, ks, v, vs = _quant_kv_token(k, v)
+        new["k_scales"] = _scatter_pages(cache["k_scales"], ks,
+                                         block_tables, start)
+        new["v_scales"] = _scatter_pages(cache["v_scales"], vs,
+                                         block_tables, start)
     kp = _scatter_pages(cache["k_pages"], k, block_tables, start)
     vp = _scatter_pages(cache["v_pages"], v, block_tables, start)
+    new["k_pages"], new["v_pages"] = kp, vp
     kd = _gather_pages_bthd(kp, block_tables)
     vd = _gather_pages_bthd(vp, block_tables)
+    if "k_scales" in cache:
+        # Dequantize AFTER the gather: scales ride the same block tables,
+        # and only the pages the active sequences own get the f32 copy
+        # (dequantizing the whole pool would transiently materialize a
+        # 4×-pool-sized buffer — the memory the int8 pool exists to save).
+        ksd = _gather_scales_bth(new["k_scales"], block_tables)
+        vsd = _gather_scales_bth(new["v_scales"], block_tables)
+        kd = kd.astype(jnp.float32) * ksd[..., None]
+        vd = vd.astype(jnp.float32) * vsd[..., None]
     # Per-sequence q_offset differs: mask via kv_valid/causal per batch row.
     T = kd.shape[1]
     k_pos = jnp.arange(T)[None, None, :]                       # (1,1,T)
@@ -423,7 +523,7 @@ def attn_prefill_paged(p, x, cfg: ModelConfig, cache, block_tables, start):
     o = jnp.einsum("bkgst,btkv->bskgv", prob.astype(vd.dtype), vd,
                    preferred_element_type=jnp.float32)
     o = o.reshape(B, S, cfg.n_heads, cfg.head_dim).astype(x.dtype)
-    return _proj_out(p, o, cfg), {"k_pages": kp, "v_pages": vp}
+    return _proj_out(p, o, cfg), new
 
 
 def attn_decode_paged(p, x, cfg: ModelConfig, cache, block_tables, lens):
@@ -439,10 +539,20 @@ def attn_decode_paged(p, x, cfg: ModelConfig, cache, block_tables, lens):
     from repro.kernels import ops as kops
     positions = lens[:, None]                                  # (B, 1)
     q, k, v = _qkv(p, x, cfg, positions)
+    new = dict(cache)
+    scales = {}
+    if "k_scales" in cache:                 # int8 pools (kv8 policy)
+        k, ks, v, vs = _quant_kv_token(k, v)
+        new["k_scales"] = _scatter_pages(cache["k_scales"], ks,
+                                         block_tables, lens)
+        new["v_scales"] = _scatter_pages(cache["v_scales"], vs,
+                                         block_tables, lens)
+        scales = {"k_scales": new["k_scales"], "v_scales": new["v_scales"]}
     kp = _scatter_pages(cache["k_pages"], k, block_tables, lens)
     vp = _scatter_pages(cache["v_pages"], v, block_tables, lens)
-    o = kops.paged_decode(q[:, 0], kp, vp, block_tables, lens + 1)
-    return _proj_out(p, o[:, None], cfg), {"k_pages": kp, "v_pages": vp}
+    new["k_pages"], new["v_pages"] = kp, vp
+    o = kops.paged_decode(q[:, 0], kp, vp, block_tables, lens + 1, **scales)
+    return _proj_out(p, o[:, None], cfg), new
 
 
 # --- cross attention (whisper decoder) ----------------------------------------

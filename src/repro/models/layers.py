@@ -81,16 +81,27 @@ def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None):
     }
 
 
-def apply_mlp(p, x, cfg: ModelConfig):
+def _proj(x, w, quant_impl: str = "sim"):
+    """x @ w where w may be a quantized ``QTensor`` (the w8a8/w8a16
+    policies installed by ``quant.quantize_params``). Dispatch keys off
+    the param type, so every MLP call site — train forward, prefill,
+    decode, paged — quantizes identically with zero signature churn."""
+    from repro.quant.qtensor import QTensor, qmatmul
+    if isinstance(w, QTensor):
+        return qmatmul(x, w, impl=quant_impl)
+    return x @ w
+
+
+def apply_mlp(p, x, cfg: ModelConfig, *, quant_impl: str = "sim"):
     if cfg.act == "swiglu":
-        gu = shard(x @ p["wi"], "batch", "seq", "act_model")
+        gu = shard(_proj(x, p["wi"], quant_impl), "batch", "seq", "act_model")
         g, u = jnp.split(gu, 2, axis=-1)
         h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     else:
-        h = (x @ p["wi"] + p["bi"].astype(x.dtype))
+        h = (_proj(x, p["wi"], quant_impl) + p["bi"].astype(x.dtype))
         h = shard(h, "batch", "seq", "act_model")
         h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
-    out = h @ p["wo"]
+    out = _proj(h, p["wo"], quant_impl)
     if "bo" in p:
         out = out + p["bo"].astype(x.dtype)
     return shard(out, "batch", "seq", None)

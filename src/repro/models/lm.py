@@ -45,6 +45,19 @@ class ForwardOpts:
     remat: str = "none"              # none | full | dots
     norm_impl: str = "jnp"           # jnp | pallas
     ssd_chunk: Optional[int] = None  # None → cfg.ssm.chunk
+    # Quantization policy (repro.quant): None | w8a8 | w8a16 | kv8. Weight
+    # policies take effect through quant.quantize_params (QTensor leaves
+    # dispatch the quantized GEMM wherever they appear); kv8 makes the
+    # serving caches int8 (dense and paged). quant_impl picks the GEMM
+    # backend: "sim" = exact integer-grid XLA math (host production path),
+    # "pallas" = the autotuned matmul_w8a8 kernel (TPU / interpret mode).
+    quant: Optional[str] = None
+    quant_impl: str = "sim"          # sim | pallas
+
+    def kv_dtype(self) -> Optional[str]:
+        from repro.quant.policy import get_policy
+        pol = get_policy(self.quant)
+        return pol.kv_dtype if pol is not None else None
 
 
 # ---------------------------------------------------------------------------
@@ -119,7 +132,8 @@ def _block_apply(p, h, kind, cfg: ModelConfig, opts: ForwardOpts,
         dense_cfg = (dataclasses.replace(cfg, d_ff=cfg.d_ff_dense)
                      if cfg.d_ff_dense else cfg)
         h = h + apply_mlp(p["ffn"], apply_norm(p["ln2"], h, cfg,
-                                               impl=opts.norm_impl), dense_cfg)
+                                               impl=opts.norm_impl), dense_cfg,
+                          quant_impl=opts.quant_impl)
     elif ffn == "moe":
         fn = _moe_fn(opts)
         mo, aux = fn(p["ffn"], apply_norm(p["ln2"], h, cfg,
@@ -280,7 +294,8 @@ def _block_prefill(p, h, kind, cfg, opts, max_len, enc_h=None):
     hn = apply_norm(p["ln1"], h, cfg, impl=opts.norm_impl)
     if mixer in ("attn", "dec"):
         mix, c = ATT.attn_prefill(p["mix"], hn, cfg, max_len=max_len,
-                                  impl=opts.attn_impl, chunk=opts.attn_chunk)
+                                  impl=opts.attn_impl, chunk=opts.attn_chunk,
+                                  kv_dtype=opts.kv_dtype())
         cache["self"] = c
     else:
         mix, c = MAM.mamba_prefill(p["mix"], hn, cfg, chunk=opts.ssd_chunk)
@@ -296,7 +311,8 @@ def _block_prefill(p, h, kind, cfg, opts, max_len, enc_h=None):
         dense_cfg = (dataclasses.replace(cfg, d_ff=cfg.d_ff_dense)
                      if cfg.d_ff_dense else cfg)
         h = h + apply_mlp(p["ffn"], apply_norm(p["ln2"], h, cfg,
-                                               impl=opts.norm_impl), dense_cfg)
+                                               impl=opts.norm_impl), dense_cfg,
+                          quant_impl=opts.quant_impl)
     elif ffn == "moe":
         mo, _ = _moe_fn(opts)(p["ffn"], apply_norm(p["ln2"], h, cfg,
                                                    impl=opts.norm_impl), cfg)
@@ -324,7 +340,8 @@ def _block_decode(p, h, kind, cfg, opts, cache, pos):
         dense_cfg = (dataclasses.replace(cfg, d_ff=cfg.d_ff_dense)
                      if cfg.d_ff_dense else cfg)
         h = h + apply_mlp(p["ffn"], apply_norm(p["ln2"], h, cfg,
-                                               impl=opts.norm_impl), dense_cfg)
+                                               impl=opts.norm_impl), dense_cfg,
+                          quant_impl=opts.quant_impl)
     elif ffn == "moe":
         mo, _ = _moe_fn(opts)(p["ffn"], apply_norm(p["ln2"], h, cfg,
                                                    impl=opts.norm_impl), cfg)
@@ -417,7 +434,7 @@ def _apply_ffn(p, h, ffn, cfg: ModelConfig, opts: ForwardOpts):
                      if cfg.d_ff_dense else cfg)
         return h + apply_mlp(p["ffn"], apply_norm(p["ln2"], h, cfg,
                                                   impl=opts.norm_impl),
-                             dense_cfg)
+                             dense_cfg, quant_impl=opts.quant_impl)
     if ffn == "moe":
         mo, _ = _moe_fn(opts)(p["ffn"], apply_norm(p["ln2"], h, cfg,
                                                    impl=opts.norm_impl), cfg)
@@ -494,13 +511,17 @@ def decode_step_paged(params, cfg: ModelConfig, token, cache, block_tables,
     return logits[:, 0], new_cache
 
 
-def paged_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int):
-    """ShapeDtypeStruct tree matching the paged cache (pool per layer)."""
+def paged_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
+                      kv_dtype: Optional[str] = None):
+    """ShapeDtypeStruct tree matching the paged cache (pool per layer).
+    ``kv_dtype="int8"`` (the kv8 policy) makes the pools int8 with
+    parallel per-token scale pools."""
     _check_paged(cfg)
     caches = {}
     for ui, (unit, reps) in enumerate(cfg.scan_plan()):
         cs = {f"l{i}": {"self": ATT.paged_cache_spec(cfg, num_pages,
-                                                     page_size)}
+                                                     page_size,
+                                                     kv_dtype=kv_dtype)}
               for i, kind in enumerate(unit)}
         if reps > 1:
             cs = jax.tree.map(
@@ -509,13 +530,17 @@ def paged_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int):
     return caches
 
 
-def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
-    """Zero-filled page pools for every layer."""
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     kv_dtype: Optional[str] = None):
+    """Zero-filled page pools for every layer (int8 + scale pools under
+    ``kv_dtype="int8"``)."""
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        paged_cache_specs(cfg, num_pages, page_size))
+                        paged_cache_specs(cfg, num_pages, page_size,
+                                          kv_dtype=kv_dtype))
 
 
-def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                kv_dtype: Optional[str] = None):
     """ShapeDtypeStruct tree matching prefill's cache (for the dry-run)."""
     caches = {}
     for ui, (unit, reps) in enumerate(cfg.scan_plan()):
@@ -524,7 +549,8 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
             mixer = kind.split("_")[0]
             c: Dict[str, Any] = {}
             if mixer in ("attn", "dec"):
-                c["self"] = ATT.attn_cache_spec(cfg, batch, max_len)
+                c["self"] = ATT.attn_cache_spec(cfg, batch, max_len,
+                                                kv_dtype=kv_dtype)
             else:
                 c["ssm"] = MAM.mamba_cache_spec(cfg, batch)
             if mixer == "dec":

@@ -1,0 +1,29 @@
+"""Quantized-inference subsystem: int8 policies, calibration, and the
+QTensor param representation.
+
+The ROADMAP's "open a new workload" axis: LLM serving economics live and
+die on low-precision GEMMs and KV caches, and they are exactly where the
+paper's autotuning story compounds — every dtype policy multiplies the
+kernel-version families (scale granularity, dequant placement, and
+accumulator blocking all become tunables), and the best configs shift per
+chip generation (v5e's int8 peak is 2× its bf16 peak; v4's is 1×).
+
+    policy.py    — named dtype policies (w8a8 / w8a16 / kv8)
+    calibrate.py — absmax / percentile per-channel scale computation
+    qtensor.py   — packed int8 + scale pytree; quantize_params; qmatmul
+
+The autotuned kernels live with their peers in ``repro.kernels``
+(``matmul_w8a8``, ``gqa_decode_kv8``, int8-paged ``paged_decode``) and
+register in the kernel registry like every other kernel. Model wiring is
+``ForwardOpts.quant``; serving wiring is ``launch/serve.py --quant``.
+See docs/quantization.md.
+"""
+
+from repro.quant.calibrate import (  # noqa: F401
+    absmax_scale, compute_scale, dequantize, percentile_scale, quantize,
+    quantize_dynamic, quantize_kv,
+)
+from repro.quant.policy import POLICIES, QuantPolicy, get_policy  # noqa: F401
+from repro.quant.qtensor import (  # noqa: F401
+    QTensor, qmatmul, quantization_error, quantize_params, quantize_tensor,
+)

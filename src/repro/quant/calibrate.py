@@ -1,0 +1,94 @@
+"""Scale calibration for int8 quantization.
+
+Symmetric int8 quantization maps x -> round(x / scale) clipped to
+[-127, 127]; everything here is about choosing ``scale``:
+
+  * ``absmax_scale``     — scale = max|x| / 127 over the reduced axes. The
+                           robust default for weights and the only sound
+                           choice for *dynamic* (runtime) activation/KV
+                           scales, where there is no second pass.
+  * ``percentile_scale`` — scale = P-th percentile of |x| / 127. Clips the
+                           outlier tail instead of dedicating the whole
+                           int8 range to it; the classic accuracy lever for
+                           activation-heavy-tailed layers (offline only —
+                           percentiles need the full tensor).
+
+Granularity is expressed by ``axis``: the axes that are *reduced over*
+share one scale. Per-output-channel weight scales for a (K, N) projection
+reduce over axis=0; per-token activation scales for (T, K) reduce over
+axis=-1; per-tensor reduces over everything (axis=None). Scales keep
+reduced dims (keepdims) so they broadcast straight back onto the tensor.
+
+All math is float32 regardless of input dtype; scales are clamped to a
+tiny positive floor so an all-zero channel quantizes to zeros instead of
+NaNs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+QMAX = 127.0          # symmetric int8 range (−127..127; −128 unused)
+_SCALE_FLOOR = 1e-8
+
+Axis = Union[None, int, Tuple[int, ...]]
+
+
+def absmax_scale(x: jnp.ndarray, axis: Axis = None) -> jnp.ndarray:
+    """Symmetric absmax scale over ``axis`` (kept dims, float32)."""
+    a = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    return jnp.maximum(a, _SCALE_FLOOR) / QMAX
+
+
+def percentile_scale(x: jnp.ndarray, pct: float = 99.9,
+                     axis: Axis = None) -> jnp.ndarray:
+    """P-th percentile of |x| over ``axis`` (kept dims, float32)."""
+    if not 0.0 < pct <= 100.0:
+        raise ValueError(f"percentile must be in (0, 100], got {pct}")
+    a = jnp.percentile(jnp.abs(x.astype(jnp.float32)), pct, axis=axis,
+                       keepdims=True)
+    return jnp.maximum(a, _SCALE_FLOOR) / QMAX
+
+
+def compute_scale(x: jnp.ndarray, *, method: str = "absmax",
+                  axis: Axis = None, percentile: float = 99.9) -> jnp.ndarray:
+    if method == "absmax":
+        return absmax_scale(x, axis=axis)
+    if method == "percentile":
+        return percentile_scale(x, percentile, axis=axis)
+    raise ValueError(f"unknown calibration method {method!r} "
+                     "(absmax | percentile)")
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """x -> int8 on the symmetric grid defined by ``scale`` (broadcast)."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+               dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_dynamic(x: jnp.ndarray, axis: Axis = -1
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-pass dynamic quantization (runtime activations / KV tokens):
+    absmax over ``axis``, then quantize. Returns (int8 values, f32 scale
+    with kept dims)."""
+    scale = absmax_scale(x, axis=axis)
+    return quantize(x, scale), scale
+
+
+def quantize_kv(k: jnp.ndarray, v: jnp.ndarray):
+    """THE kv8 cache wire format: per-token-per-head symmetric int8 with
+    the channel axis reduced and the kept dim stripped. k, v (..., D) →
+    (k int8, k_scale (...,), v int8, v_scale (...,)). The model
+    cache-append paths (models/attention.py) and the tuner's operand
+    builders (kernels/ops.py) both quantize through here, so what the
+    tuner benchmarks is byte-for-byte what the runtime serves."""
+    kq, ks = quantize_dynamic(k, axis=-1)
+    vq, vs = quantize_dynamic(v, axis=-1)
+    return kq, ks[..., 0], vq, vs[..., 0]

@@ -1,0 +1,81 @@
+"""Quantization dtype policies — the named numerics contracts of the
+quantized-inference subsystem.
+
+A policy names which tensor classes drop to int8 and how their scales are
+calibrated. Policies are deliberately coarse (three named points, not a
+combinatorial config): each named policy is a *version family* in the
+"A Few Fit Most" sense — the tuner treats every (kernel, shapes, policy
+dtype) triple as its own scenario with its own best config, and the cache
+key derives from the TuningContext dtype, so two policies can never share
+a tuned entry by accident (tests/test_quant.py pins this).
+
+    w8a8   — int8 weights AND int8 activations for the MLP projections:
+             per-output-channel weight scales (offline, absmax or
+             percentile) + per-token dynamic activation scales (absmax at
+             runtime). The GEMM runs on the int8 MXU path
+             (``matmul_w8a8`` kernel / its XLA simulation).
+    w8a16  — weight-only: int8 weights dequantized into the activation
+             dtype at the GEMM. Halves+ weight HBM traffic; activations
+             keep full precision (no dynamic quant on the hot path).
+    kv8    — int8 KV cache with per-token-per-head scales, dequantized
+             in-kernel by ``gqa_decode_kv8`` (dense caches) and
+             ``paged_decode`` over int8 pages (paged serving).
+
+Policies compose with the rest of ``ForwardOpts`` orthogonally: ``quant``
+selects the policy; everything else (attn impl, decode impl, ...) is
+unchanged. See docs/quantization.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """One named quantization contract."""
+
+    name: str
+    weights: Optional[str] = None     # "int8" | None — MLP projection weights
+    acts: Optional[str] = None        # "int8" | None — dynamic per-token
+    kv: Optional[str] = None          # "int8" | None — KV cache entries
+    method: str = "absmax"            # weight calibration: absmax | percentile
+    percentile: float = 99.9          # used when method == "percentile"
+
+    @property
+    def quantizes_weights(self) -> bool:
+        return self.weights is not None
+
+    @property
+    def quantizes_acts(self) -> bool:
+        return self.acts is not None
+
+    @property
+    def quantizes_kv(self) -> bool:
+        return self.kv is not None
+
+    @property
+    def kv_dtype(self) -> Optional[str]:
+        return self.kv
+
+
+POLICIES: Dict[str, QuantPolicy] = {
+    "w8a8": QuantPolicy(name="w8a8", weights="int8", acts="int8"),
+    "w8a16": QuantPolicy(name="w8a16", weights="int8"),
+    "kv8": QuantPolicy(name="kv8", kv="int8"),
+}
+
+
+def get_policy(name: Optional[str]) -> Optional[QuantPolicy]:
+    """Resolve a policy name; ``None``/``"none"`` mean full precision."""
+    if name is None or name == "none":
+        return None
+    if isinstance(name, QuantPolicy):
+        return name
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown quant policy {name!r}; known: {sorted(POLICIES)} "
+            "(or 'none')") from None

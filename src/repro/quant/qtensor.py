@@ -1,0 +1,191 @@
+"""QTensor — a quantized tensor that behaves like any other param leaf.
+
+A ``QTensor`` bundles the packed values and their calibration scale as ONE
+jax pytree node, so quantized weights flow through every existing tree
+path unchanged: ``jax.jit`` arguments, ``lax.scan`` over stacked layer
+units (both children carry the stacking dim and are sliced together),
+checkpoint save/restore (checkpoint/checkpoint.py flattens with
+tree-paths; a QTensor leaf becomes two named sub-leaves), and sharding
+(tree maps see through it).
+
+Two storage modes, identical numerics:
+
+  * ``int8`` — packed int8 values. What ships in checkpoints and what the
+    ``matmul_w8a8`` Pallas kernel consumes on TPU (¼ the HBM traffic of
+    f32 weights — the point of the exercise).
+  * ``grid`` — the same integer lattice held in float32. Products and
+    block-sums of int8-magnitude integers are exactly representable in
+    f32 (|q| ≤ 127 ⇒ products ≤ 2¹⁴, K-sums < 2²⁴ for any realistic K),
+    so GEMMs over grid values are bit-equivalent to the int8 math while
+    running on XLA:CPU's fast f32 path. This is the host-side simulation
+    mode benchmarks/quant_speedup.py times (this container has no int8
+    matrix unit; see docs/quantization.md §Host simulation).
+
+``quantize_params`` maps a policy over a materialized param tree,
+replacing the MLP projection weights (``ffn/wi``, ``ffn/wo``) with
+QTensors; everything else is untouched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import calibrate
+from repro.quant.policy import QuantPolicy, get_policy
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Packed quantized values + broadcastable calibration scale.
+
+    ``values`` is int8 (packed) or float32 on the integer grid (host
+    simulation); ``scale`` keeps reduced dims so ``values * scale``
+    broadcasts back to the original tensor. ``act_quant`` records whether
+    the matmul consuming this weight should also dynamically quantize its
+    activation operand (w8a8) or keep it full precision (w8a16).
+    """
+
+    values: jnp.ndarray
+    scale: jnp.ndarray
+    act_quant: bool = False
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.values, self.scale), (self.act_quant,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, scale = children
+        return cls(values=values, scale=scale, act_quant=aux[0])
+
+    # -- views -------------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.values.shape)
+
+    def grid(self) -> "QTensor":
+        """Integer-grid float32 storage (host simulation fast path)."""
+        return QTensor(self.values.astype(jnp.float32), self.scale,
+                       self.act_quant)
+
+    def packed(self) -> "QTensor":
+        """Packed int8 storage (checkpoints / the TPU kernel operand)."""
+        return QTensor(self.values.astype(jnp.int8), self.scale,
+                       self.act_quant)
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        return (self.values.astype(jnp.float32) * self.scale).astype(dtype)
+
+
+def quantize_tensor(x: jnp.ndarray, *, axis=0, method: str = "absmax",
+                    percentile: float = 99.9, act_quant: bool = False,
+                    store: str = "int8") -> QTensor:
+    """Quantize ``x`` with one scale per slice along the non-reduced axes.
+
+    ``axis`` follows calibrate.py's convention: the axes reduced over
+    share a scale. Per-output-channel weight scales for a (K, N)
+    projection reduce over axis=0 (one scale per output column).
+    """
+    scale = calibrate.compute_scale(x, method=method, axis=axis,
+                                    percentile=percentile)
+    q = calibrate.quantize(x, scale)
+    qt = QTensor(values=q, scale=scale, act_quant=act_quant)
+    if store == "grid":
+        return qt.grid()
+    if store != "int8":
+        raise ValueError(f"unknown store mode {store!r} (int8 | grid)")
+    return qt
+
+
+def quantization_error(x: jnp.ndarray, qt: QTensor) -> float:
+    """Mean |x - dq(x)| — calibration sanity metric (tests, docs)."""
+    return float(jnp.mean(jnp.abs(x.astype(jnp.float32) - qt.dequantize())))
+
+
+# ---------------------------------------------------------------------------
+# Param-tree quantization
+# ---------------------------------------------------------------------------
+
+# Path suffixes (outer key, leaf key) eligible for weight quantization: the
+# dense-MLP projections of layers.py. Attention/embedding/norm weights stay
+# full precision — the accuracy-critical tails (see docs/quantization.md).
+_QUANT_LEAVES = {"wi", "wo"}
+
+
+def _is_mlp_weight(path) -> bool:
+    keys = [getattr(p, "key", None) for p in path]
+    return (len(keys) >= 2 and keys[-1] in _QUANT_LEAVES
+            and keys[-2] == "ffn")
+
+
+def quantize_params(params, policy, *, store: str = "int8"):
+    """Replace MLP projection weights with QTensors per ``policy``.
+
+    Works on materialized trees (including scan-stacked units: a stacked
+    (reps, K, N) weight gets per-(rep, channel) scales whose leading dim
+    scans in lockstep with the values). Non-weight leaves and non-MLP
+    weights pass through untouched. ``policy`` may be a name or a
+    QuantPolicy; a None/"none" policy returns ``params`` unchanged.
+    """
+    pol = get_policy(policy) if not isinstance(policy, QuantPolicy) else policy
+    if pol is None or not pol.quantizes_weights:
+        return params
+
+    def one(path, leaf):
+        if not _is_mlp_weight(path):
+            return leaf
+        # Reduce over the fan-in axis (second-to-last): one scale per
+        # output channel, per stacked layer if the unit is scanned.
+        return quantize_tensor(
+            leaf, axis=leaf.ndim - 2, method=pol.method,
+            percentile=pol.percentile, act_quant=pol.quantizes_acts,
+            store=store)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# The quantized GEMM used by model layers (XLA path)
+# ---------------------------------------------------------------------------
+
+def qmatmul(x: jnp.ndarray, qt: QTensor, *,
+            config: Optional[dict] = None,
+            impl: str = "sim") -> jnp.ndarray:
+    """x (..., K) @ QTensor (K, N) under the weight's recorded policy.
+
+    ``impl="sim"`` (default) runs the int8 math as XLA ops — exact
+    integer-grid arithmetic in f32/int32, the host production path.
+    ``impl="pallas"`` dispatches the autotuned ``matmul_w8a8`` registry
+    kernel (interpret-mode Pallas here, the real MXU path on TPU); it
+    requires ``act_quant`` weights (w8a8) and packs operands to int8.
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    w_scale = qt.scale.reshape(1, -1)          # (1, N)
+    if impl == "pallas":
+        if not qt.act_quant:
+            raise NotImplementedError(
+                "matmul_w8a8 kernel path needs an act-quant (w8a8) weight; "
+                "w8a16 runs via the sim path")
+        from repro.kernels import ops as kops
+        xq, xs = calibrate.quantize_dynamic(x2, axis=-1)
+        out = kops.matmul_w8a8(xq, qt.packed().values, xs, w_scale)
+        return out.reshape(*lead, -1).astype(x.dtype)
+    if impl != "sim":
+        raise ValueError(f"unknown qmatmul impl {impl!r} (sim | pallas)")
+    wv = qt.values.astype(jnp.float32)         # int8-packed or grid storage
+    if qt.act_quant:                           # w8a8: dynamic per-token acts
+        xf = x2.astype(jnp.float32)
+        xs = calibrate.absmax_scale(xf, axis=-1)
+        xg = jnp.round(xf / xs)                # integer grid, exact in f32
+        acc = xg @ wv
+        out = acc * xs * w_scale
+    else:                                      # w8a16: weight-only dequant
+        out = (x2 @ (wv * w_scale).astype(x.dtype)).astype(jnp.float32)
+    return out.reshape(*lead, -1).astype(x.dtype)

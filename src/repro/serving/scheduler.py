@@ -223,23 +223,35 @@ class ServingEngine:
 
     def __init__(self, cfg, params, *, num_pages: int, page_size: int,
                  max_batch: int, max_seq_len: int, prefill_chunk: int = 8,
-                 opts=None):
+                 opts=None, quant=None):
         import jax
         import jax.numpy as jnp
 
         from repro.models import lm
+        from repro.quant import get_policy, quantize_params
 
         self.cfg = cfg
-        self.params = params
         self.pool = PagePool(num_pages, page_size)
         self.scheduler = Scheduler(
             self.pool, max_batch=max_batch,
             max_pages=self.pool.pages_for(max_seq_len),
             prefill_chunk=prefill_chunk)
         self.max_seq_len = int(max_seq_len)
-        self.opts = opts if opts is not None else lm.ForwardOpts(
-            decode_impl="paged")
-        self.cache = lm.init_paged_cache(cfg, num_pages, page_size)
+        if opts is None:
+            opts = lm.ForwardOpts(decode_impl="paged", quant=quant)
+        elif quant is not None and opts.quant != quant:
+            raise ValueError(
+                f"quant={quant!r} conflicts with opts.quant={opts.quant!r}")
+        self.opts = opts
+        policy = get_policy(self.opts.quant)
+        # Weight policies install QTensor leaves once at engine build; the
+        # kv policy sizes int8 pools (+ per-token scale pools) instead.
+        self.params = quantize_params(
+            params, policy,
+            store="grid" if self.opts.quant_impl == "sim" else "int8")
+        kv_dtype = policy.kv_dtype if policy is not None else None
+        self.cache = lm.init_paged_cache(cfg, num_pages, page_size,
+                                         kv_dtype=kv_dtype)
         self._jnp = jnp
 
         # Greedy sampling runs inside the jitted step so only token ids

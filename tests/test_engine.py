@@ -211,14 +211,18 @@ def test_tune_many_return_exceptions(tmp_cache):
         t.tune_many([(no_workload, ctx())])
 
 
+@pytest.mark.parametrize("kernel", ["paged_decode", "matmul_w8a8",
+                                    "gqa_decode_kv8"])
 @pytest.mark.parametrize("name", ALL_STRATEGIES)
-def test_paged_decode_ask_tell_determinism(name):
-    """PR-2's ask/tell contract on the new serving kernel: the same seed
-    must produce byte-identical trial logs for the ``paged_decode`` space
-    at any in-flight batch size (engine.run() == hand-driven batches)."""
+def test_registry_kernel_ask_tell_determinism(name, kernel):
+    """PR-2's ask/tell contract on the serving/quant kernels: the same
+    seed must produce byte-identical trial logs at any in-flight batch
+    size (engine.run() == hand-driven batches). The quant kernels' spaces
+    flow through the pipelined engine unchanged — their extra tunables
+    (dequant placement, scale granularity) are just more dimensions."""
     from repro.kernels.registry import get_kernel
 
-    spec = get_kernel("paged_decode")
+    spec = get_kernel(kernel)
     chip = get_chip("tpu_v5e")
     c = spec.cases(scale="host")[0].context(chip)
     ev = AnalyticalMeasure(chip).evaluator(spec.tunable, c)

@@ -1,0 +1,493 @@
+"""Quantized-inference subsystem: policies, calibration, QTensor pytree
+behavior, the int8 kernels, the int8 roofline, dtype-policy cache-key
+separation, and the model/serving wiring."""
+
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import quant
+from repro.core import get_chip
+from repro.core.cache import cache_key
+from repro.core.config_space import TuningContext
+from repro.core.costmodel import estimate_seconds
+from repro.kernels import ref
+from repro.kernels.registry import get_kernel, list_kernels
+
+CHIP = get_chip("tpu_v5e")
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+def test_policies():
+    w8a8 = quant.get_policy("w8a8")
+    assert w8a8.quantizes_weights and w8a8.quantizes_acts
+    assert not w8a8.quantizes_kv
+    w8a16 = quant.get_policy("w8a16")
+    assert w8a16.quantizes_weights and not w8a16.quantizes_acts
+    kv8 = quant.get_policy("kv8")
+    assert kv8.kv_dtype == "int8" and not kv8.quantizes_weights
+    assert quant.get_policy(None) is None
+    assert quant.get_policy("none") is None
+    assert quant.get_policy(w8a8) is w8a8
+    with pytest.raises(KeyError, match="unknown quant policy"):
+        quant.get_policy("w4a4")
+
+
+def test_forward_opts_kv_dtype():
+    from repro.models.lm import ForwardOpts
+    assert ForwardOpts().kv_dtype() is None
+    assert ForwardOpts(quant="w8a8").kv_dtype() is None
+    assert ForwardOpts(quant="kv8").kv_dtype() == "int8"
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+def test_absmax_scale_per_channel():
+    x = jnp.asarray([[1.0, -2.0], [-4.0, 0.5]])
+    s = quant.absmax_scale(x, axis=0)             # per column
+    np.testing.assert_allclose(np.asarray(s), [[4 / 127, 2 / 127]])
+    s_tok = quant.absmax_scale(x, axis=-1)        # per row
+    np.testing.assert_allclose(np.asarray(s_tok), [[2 / 127], [4 / 127]])
+    s_all = quant.absmax_scale(x)
+    np.testing.assert_allclose(np.asarray(s_all), [[4 / 127]])
+
+
+def test_percentile_scale_clips_outliers():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4096,)).astype(np.float32)
+    x[7] = 1000.0                                 # one wild outlier
+    s_abs = float(quant.absmax_scale(jnp.asarray(x))[0])
+    s_pct = float(quant.percentile_scale(jnp.asarray(x), 99.0)[0])
+    assert s_pct < s_abs / 10                     # outlier no longer owns
+    with pytest.raises(ValueError):               # the whole int8 range
+        quant.percentile_scale(jnp.asarray(x), 0.0)
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    q, s = quant.quantize_dynamic(x, axis=-1)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(quant.dequantize(q, s) - x))
+    # |err| <= scale/2 per element (round-to-nearest on the grid)
+    assert (err <= np.asarray(s) / 2 + 1e-7).all()
+
+
+def test_zero_channel_quantizes_to_zeros():
+    x = jnp.zeros((8, 16))
+    q, s = quant.quantize_dynamic(x, axis=-1)
+    assert np.isfinite(np.asarray(s)).all()
+    np.testing.assert_array_equal(np.asarray(q), 0)
+
+
+# ---------------------------------------------------------------------------
+# QTensor
+# ---------------------------------------------------------------------------
+
+def test_qtensor_pytree_jit_and_scan():
+    stacked = quant.quantize_tensor(
+        jax.random.normal(jax.random.PRNGKey(0), (3, 16, 32)),
+        axis=1, act_quant=True)
+    assert stacked.values.dtype == jnp.int8
+    assert stacked.scale.shape == (3, 1, 32)
+
+    @jax.jit
+    def run(qt, x):
+        def body(c, sl):
+            return c, quant.qmatmul(x, sl)
+        _, ys = jax.lax.scan(body, 0, qt)
+        return ys
+
+    ys = run(stacked, jnp.ones((2, 16), jnp.bfloat16))
+    assert ys.shape == (3, 2, 32)
+    # act_quant aux survives flatten/unflatten
+    leaves, tdef = jax.tree_util.tree_flatten(stacked)
+    assert jax.tree_util.tree_unflatten(tdef, leaves).act_quant
+
+
+def test_qtensor_grid_and_packed_same_numerics():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 32))
+    qw = quant.quantize_tensor(w, axis=0, act_quant=True)
+    a = quant.qmatmul(x, qw)
+    b = quant.qmatmul(x, qw.grid())
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert qw.grid().values.dtype == jnp.float32
+    assert qw.grid().packed().values.dtype == jnp.int8
+
+
+def test_qmatmul_pallas_matches_sim():
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, 128), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(4), (128, 64))
+    qw = quant.quantize_tensor(w, axis=0, act_quant=True)
+    sim = quant.qmatmul(x, qw, impl="sim")
+    pal = quant.qmatmul(x, qw, impl="pallas")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(sim),
+                               atol=2e-3, rtol=1e-3)
+    with pytest.raises(NotImplementedError):
+        quant.qmatmul(x, quant.quantize_tensor(w, axis=0), impl="pallas")
+
+
+def test_quantize_params_selects_mlp_weights_only():
+    params = {"u0": {"l0": {
+        "ffn": {"wi": jnp.ones((16, 32)), "wo": jnp.ones((32, 16))},
+        "ln1": {"w": jnp.ones((16,))},
+        "mix": {"wq": jnp.ones((16, 16))}}}}
+    qp = quant.quantize_params(params, "w8a8")
+    assert isinstance(qp["u0"]["l0"]["ffn"]["wi"], quant.QTensor)
+    assert isinstance(qp["u0"]["l0"]["ffn"]["wo"], quant.QTensor)
+    assert not isinstance(qp["u0"]["l0"]["mix"]["wq"], quant.QTensor)
+    assert not isinstance(qp["u0"]["l0"]["ln1"]["w"], quant.QTensor)
+    # kv8 quantizes no weights; None is the identity
+    assert quant.quantize_params(params, "kv8") is params
+    assert quant.quantize_params(params, None) is params
+    # w8a16 records no act quant
+    assert not quant.quantize_params(params, "w8a16")["u0"]["l0"]["ffn"][
+        "wi"].act_quant
+
+
+def test_qtensor_checkpoints_like_any_param(tmp_path):
+    from repro.checkpoint.checkpoint import restore, save
+    tree = {"ffn": {"wi": quant.quantize_tensor(
+        jax.random.normal(jax.random.PRNGKey(5), (16, 8)), axis=0)},
+        "plain": jnp.arange(4.0)}
+    save(str(tmp_path), 3, tree)
+    back, _ = restore(str(tmp_path), tree)
+    qt = back["ffn"]["wi"]
+    assert isinstance(qt, quant.QTensor)
+    assert qt.values.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(qt.values),
+                                  np.asarray(tree["ffn"]["wi"].values))
+    np.testing.assert_array_equal(np.asarray(qt.scale),
+                                  np.asarray(tree["ffn"]["wi"].scale))
+
+
+# ---------------------------------------------------------------------------
+# The dtype → peak helper (the previously-dead int8 roofline)
+# ---------------------------------------------------------------------------
+
+def test_flops_for_dtype_routes_all_three_families():
+    for chip_name in ("tpu_v4", "tpu_v5e", "tpu_v5p", "tpu_v6e"):
+        chip = get_chip(chip_name)
+        assert chip.flops_for_dtype("bfloat16") == chip.peak_bf16_flops
+        assert chip.flops_for_dtype("bf16") == chip.peak_bf16_flops
+        assert chip.flops_for_dtype("int8") == chip.peak_int8_ops
+        assert chip.flops_for_dtype("uint8") == chip.peak_int8_ops
+        assert chip.flops_for_dtype("float32") == chip.peak_fp32_flops
+        assert chip.flops_for_dtype("f32") == chip.peak_fp32_flops
+    with pytest.raises(KeyError, match="unknown stream dtype"):
+        get_chip("tpu_v5e").flops_for_dtype("float64")
+
+
+def test_int8_workload_reaches_the_int8_peak():
+    """A compute-bound matmul workload priced at int8 must run at the
+    chip's int8 rate: on v5e (2× bf16) the estimate halves; on v4 (1×)
+    it matches. This is the satellite fix — before the quant kernels, no
+    matmul-family workload ever declared int8 and peak_int8_ops was
+    unreachable."""
+    from repro.core.costmodel import KernelWorkload, MatmulShape
+    mm = [MatmulShape(512, 512, 512)]
+
+    def wl(dtype):
+        return KernelWorkload(flops=1e13, hbm_bytes=1e6, grid_steps=1,
+                              vmem_bytes=1024, matmuls=mm, dtype=dtype)
+
+    v5e, v4 = get_chip("tpu_v5e"), get_chip("tpu_v4")
+    assert estimate_seconds(wl("int8"), v5e) == pytest.approx(
+        estimate_seconds(wl("bfloat16"), v5e) / 2, rel=0.05)
+    assert estimate_seconds(wl("int8"), v4) == pytest.approx(
+        estimate_seconds(wl("bfloat16"), v4), rel=0.05)
+
+
+def test_w8a8_registry_workload_prices_int8():
+    """The registered matmul_w8a8 workload_fn declares the int8 stream
+    regardless of how the context was labeled."""
+    spec = get_kernel("matmul_w8a8")
+    ctx = spec.cases(scale="host")[0].context(CHIP)
+    cfg = spec.tunable.default_config(ctx)
+    assert spec.tunable.workload_fn(cfg, ctx).dtype == "int8"
+
+
+# ---------------------------------------------------------------------------
+# Kernels vs oracles (direct spot-checks; the registry sweep covers more)
+# ---------------------------------------------------------------------------
+
+def test_matmul_w8a8_all_dequant_and_gran_variants():
+    from repro.kernels.matmul_int8 import matmul_w8a8
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(keys[0], (100, 200))
+    w = jax.random.normal(keys[1], (200, 96))
+    for gran in ("per_channel", "per_tensor"):
+        if gran == "per_channel":
+            xs = quant.absmax_scale(x, axis=-1)
+            ws = quant.absmax_scale(w, axis=0)
+        else:
+            xs, ws = quant.absmax_scale(x), quant.absmax_scale(w)
+        xq, wq = quant.quantize(x, xs), quant.quantize(w, ws)
+        want = ref.matmul_w8a8(xq, wq, xs, ws)
+        for dequant in ("epilogue", "inline"):
+            got = matmul_w8a8(xq, wq, xs, ws, block_m=64, block_n=128,
+                              block_k=128, dequant=dequant, scale_gran=gran)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-5,
+                err_msg=f"{dequant}/{gran}")
+        # and the quantization itself tracks the float product
+        rel = float(jnp.mean(jnp.abs(want - x @ w)) /
+                    jnp.mean(jnp.abs(x @ w)))
+        assert rel < 0.05, rel
+
+
+def test_gqa_decode_kv8_matches_oracle_ragged():
+    from repro.kernels.gqa_decode_kv8 import gqa_decode_kv8
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (2, 8, 64))
+    k = jax.random.normal(keys[1], (2, 2, 300, 64))
+    v = jax.random.normal(keys[2], (2, 2, 300, 64))
+    kq, ks = quant.quantize_dynamic(k, axis=-1)
+    vq, vs = quant.quantize_dynamic(v, axis=-1)
+    ks, vs = ks[..., 0], vs[..., 0]
+    lens = jnp.asarray([17, 300], jnp.int32)
+    want = ref.gqa_decode_kv8(q, kq, vq, ks, vs, kv_len=lens)
+    for pack in (True, False):
+        for splits in (1, 4):
+            got = gqa_decode_kv8(q, kq, vq, ks, vs, kv_len=lens,
+                                 block_kv=128, k_splits=splits,
+                                 pack_gqa=pack)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=2e-5, rtol=1e-4,
+                                       err_msg=f"pack={pack} s={splits}")
+
+
+def test_paged_decode_rejects_mismatched_scales():
+    from repro.kernels.paged_decode import paged_decode
+    q = jnp.zeros((1, 2, 64))
+    pages_f = jnp.zeros((1, 3, 8, 64))
+    pages_q = jnp.zeros((1, 3, 8, 64), jnp.int8)
+    tbl = jnp.asarray([[1, 2]], jnp.int32)
+    lens = jnp.asarray([4], jnp.int32)
+    with pytest.raises(AssertionError):
+        paged_decode(q, pages_q, pages_q, tbl, lens)      # int8, no scales
+    with pytest.raises(AssertionError):
+        paged_decode(q, pages_f, pages_f, tbl, lens,      # float + scales
+                     k_scales=jnp.ones((1, 3, 8)),
+                     v_scales=jnp.ones((1, 3, 8)))
+
+
+# ---------------------------------------------------------------------------
+# Registry polish: precision tags
+# ---------------------------------------------------------------------------
+
+def test_precision_tag_and_filter():
+    int8_kernels = {s.name for s in list_kernels(precision="int8")}
+    assert int8_kernels == {"matmul_w8a8", "gqa_decode_kv8"}
+    assert get_kernel("matmul").precision == "float"
+    # quant kernels ride every registry-driven consumer: scenario filter
+    # composes with precision filter
+    assert [s.name for s in list_kernels(scenario="decode",
+                                         precision="int8")] == \
+        ["gqa_decode_kv8"]
+    # and they contribute tuning pairs like any other kernel
+    from repro.kernels.registry import tuning_pairs
+    labels = [lbl for lbl, _, _ in tuning_pairs(CHIP, scale="host")]
+    assert any(lbl.startswith("matmul_w8a8/") for lbl in labels)
+    assert any(lbl.startswith("gqa_decode_kv8/") for lbl in labels)
+
+
+# ---------------------------------------------------------------------------
+# Cache-key separation across dtype policies
+# ---------------------------------------------------------------------------
+
+def _paged_ctx(dtype):
+    return TuningContext(chip=CHIP,
+                         shapes={"q": (16, 32, 128),
+                                 "k": (16, 8, 32768, 128)},
+                         dtype=dtype)
+
+
+def test_dtype_policy_produces_distinct_cache_keys():
+    """Same kernel + same shapes under different quant policies must
+    never share a tuned entry: the context dtype is part of the key."""
+    spec = get_kernel("paged_decode")
+    k_bf16 = cache_key(spec.name, spec.tunable.version, spec.space,
+                       _paged_ctx("bfloat16"))
+    k_int8 = cache_key(spec.name, spec.tunable.version, spec.space,
+                       _paged_ctx("int8"))
+    assert k_bf16 != k_int8
+
+
+def test_shipped_db_has_distinct_quant_entries():
+    """gen_shipped_db ships BOTH policies' deployment entries for every
+    serving kernel family: float and int8 paged pools, the kv8 dense
+    cache, and the w8a8 GEMM."""
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "src",
+                        "repro", "configs", "shipped_tuning_db.json")
+    with open(path) as f:
+        db = json.load(f)
+    by_kernel_dtype = {}
+    for key in db:
+        k = json.loads(key)
+        ctx = json.loads(k["ctx"])
+        by_kernel_dtype.setdefault((k["kernel"], ctx["dtype"]), 0)
+        by_kernel_dtype[(k["kernel"], ctx["dtype"])] += 1
+    assert by_kernel_dtype.get(("paged_decode", "bfloat16"), 0) > 0
+    assert by_kernel_dtype.get(("paged_decode", "int8"), 0) > 0
+    assert by_kernel_dtype.get(("gqa_decode_kv8", "int8"), 0) > 0
+    assert by_kernel_dtype.get(("matmul_w8a8", "int8"), 0) > 0
+    # every shipped entry is a finite (servable) tuning result
+    for key, raw in db.items():
+        kernel = json.loads(key)["kernel"]
+        if kernel in ("matmul_w8a8", "gqa_decode_kv8"):
+            assert math.isfinite(raw["metric"]), key
+
+
+def test_quant_kernels_tunable_by_name_through_tuner(tuner):
+    """Autotuner resolves the quant kernels through the registry and the
+    analytical backend prices their spaces (the full ask/tell engine path
+    is exercised in test_engine.py)."""
+    for name in ("matmul_w8a8", "gqa_decode_kv8"):
+        spec = get_kernel(name)
+        ctx = spec.cases(scale="host")[0].context(CHIP)
+        entry = tuner.tune(name, ctx)
+        assert math.isfinite(entry.metric)
+        assert spec.space.is_valid(entry.config, ctx)
+
+
+def test_w8a8_runtime_lookup_pins_scale_granularity(tuner):
+    """ops.matmul_w8a8 derives scale_gran from the operand layout and the
+    space constraint prunes mismatching configs."""
+    spec = get_kernel("matmul_w8a8")
+    ctx = TuningContext(chip=CHIP, shapes={"x": (256, 256),
+                                           "y": (256, 256)},
+                        dtype="int8", extra={"scale_gran": "per_tensor"})
+    cfgs = spec.space.valid_configs(ctx)
+    assert cfgs and all(c["scale_gran"] == "per_tensor" for c in cfgs)
+    free_ctx = TuningContext(chip=CHIP, shapes={"x": (256, 256),
+                                                "y": (256, 256)},
+                             dtype="int8")
+    grans = {c["scale_gran"] for c in spec.space.valid_configs(free_ctx)}
+    assert grans == {"per_channel", "per_tensor"}
+
+
+# ---------------------------------------------------------------------------
+# Model + serving wiring
+# ---------------------------------------------------------------------------
+
+def _smoke_cfg():
+    from repro.configs import get_config
+    return get_config("phi3-mini-3.8b", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    from repro.models import lm
+    from repro.models.param import init_params
+    cfg = _smoke_cfg()
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        1, cfg.vocab_size, (2, 10)), jnp.int32)
+    return cfg, params, toks
+
+
+def test_w8a8_forward_tracks_baseline(smoke_model):
+    from repro.models import lm
+    cfg, params, toks = smoke_model
+    logits0, cache0 = lm.prefill(params, cfg, toks, max_len=16)
+    qp = quant.quantize_params(params, "w8a8", store="grid")
+    opts = lm.ForwardOpts(quant="w8a8")
+    logits_q, cache_q = lm.prefill(qp, cfg, toks, max_len=16, opts=opts)
+    assert float(jnp.mean(jnp.abs(logits_q - logits0))) < 0.05
+    tok = jnp.argmax(logits0, -1)[:, None].astype(jnp.int32)
+    l1, _ = lm.decode_step(params, cfg, tok, cache0, jnp.int32(10))
+    l1q, _ = lm.decode_step(qp, cfg, tok, cache_q, jnp.int32(10), opts=opts)
+    assert float(jnp.mean(jnp.abs(l1q - l1))) < 0.05
+
+
+def test_kv8_dense_cache_einsum_and_pallas_agree(smoke_model):
+    from repro.models import attention as ATT
+    from repro.models import lm
+    cfg, params, toks = smoke_model
+    logits0, cache0 = lm.prefill(params, cfg, toks, max_len=16)
+    opts = lm.ForwardOpts(quant="kv8")
+    logits_kv, cache_kv = lm.prefill(params, cfg, toks, max_len=16,
+                                     opts=opts)
+    # prefill attention itself is full precision — only the cache differs
+    np.testing.assert_allclose(np.asarray(logits_kv), np.asarray(logits0),
+                               atol=1e-4, rtol=1e-4)
+    leaf = jax.tree_util.tree_leaves_with_path(cache_kv)[0]
+    spec = lm.cache_specs(cfg, 2, 16, kv_dtype="int8")
+    flat_spec = {tuple(str(p) for p in path): s.dtype
+                 for path, s in jax.tree_util.tree_flatten_with_path(
+                     spec)[0]}
+    assert any(d == jnp.int8 for d in flat_spec.values())
+    tok = jnp.argmax(logits0, -1)[:, None].astype(jnp.int32)
+    l_e, _ = lm.decode_step(params, cfg, tok, cache_kv, jnp.int32(10),
+                            opts=opts)
+    l_p, _ = lm.decode_step(params, cfg, tok, cache_kv, jnp.int32(10),
+                            opts=lm.ForwardOpts(quant="kv8",
+                                                decode_impl="pallas"))
+    np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_e),
+                               atol=2e-3, rtol=1e-3)
+    # and the quantized decode stays close to the float path
+    l_f, _ = lm.decode_step(params, cfg, tok, cache0, jnp.int32(10))
+    assert float(jnp.mean(jnp.abs(l_e - l_f))) < 0.05
+    # kv8 + MLA is rejected loudly
+    mla_cfg = _mla_cfg()
+    with pytest.raises(NotImplementedError, match="kv8"):
+        ATT.attn_cache_spec(mla_cfg, 1, 8, kv_dtype="int8")
+
+
+def _mla_cfg():
+    from repro.configs import get_config
+    return get_config("deepseek-v2-lite-16b", smoke=True)
+
+
+def test_paged_kv8_engine_serves_and_agrees(smoke_model):
+    from repro.serving import Request, ServingEngine
+    cfg, params, _ = smoke_model
+
+    def reqs():
+        r = np.random.default_rng(7)
+        return [Request(rid=i,
+                        prompt=r.integers(1, cfg.vocab_size, 9).astype(
+                            np.int32),
+                        max_new_tokens=4) for i in range(2)]
+
+    kw = dict(num_pages=1 + 2 * 4, page_size=8, max_batch=2,
+              max_seq_len=24, prefill_chunk=8)
+    eng_f = ServingEngine(cfg, params, **kw)
+    eng_q = ServingEngine(cfg, params, quant="kv8", **kw)
+    # int8 pools + scale pools actually installed
+    pool_leaves = {jnp.dtype(l.dtype)
+                   for l in jax.tree_util.tree_leaves(eng_q.cache)}
+    assert jnp.dtype(jnp.int8) in pool_leaves
+    r_f, r_q = reqs(), reqs()
+    eng_f.run(r_f)
+    res = eng_q.run(r_q)
+    assert res["generated_tokens"] == sum(r.max_new_tokens for r in r_q)
+    eng_q.scheduler.check_invariants()
+    assert eng_q.pool.num_allocated == 0
+    agree = np.mean([np.mean(np.array(a.tokens) == np.array(b.tokens))
+                     for a, b in zip(r_f, r_q)])
+    assert agree >= 0.75       # int8 KV noise may flip rare near-ties
+
+
+def test_engine_rejects_conflicting_quant():
+    from repro.models import lm
+    from repro.serving import ServingEngine
+    cfg = _smoke_cfg()
+    from repro.models.param import init_params
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    with pytest.raises(ValueError, match="conflicts"):
+        ServingEngine(cfg, params, num_pages=4, page_size=8, max_batch=1,
+                      max_seq_len=16, opts=lm.ForwardOpts(
+                          decode_impl="paged"), quant="kv8")
