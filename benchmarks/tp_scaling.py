@@ -1,0 +1,172 @@
+"""Tensor-parallel decode scaling: per-token latency + collective overhead.
+
+For each TP degree this benchmark runs the shard_map serving path
+(distribution/tp.py) in a fresh subprocess with that many forced host
+devices, and records
+
+  * per-token decode latency (median of timed jitted steps),
+  * collective traffic per decode step, parsed from the partitioned HLO
+    with ``launch.hlo_analysis.analyze_hlo`` — per-device all-reduce wire
+    bytes and op counts. The TP path's contract is exactly two
+    all-reduces per layer (attention wo + MLP wo psums), each moving the
+    (B, 1, d_model) activation, so the analytic expectation
+    ``2 · n_layers · B · d_model · 4 bytes × 2(g−1)/g`` (ring factor) is
+    recorded alongside and gated under ``--check``.
+
+On this CPU-only container the latency column measures interpret-mode
+kernels over host "devices" — useful as a regression trend and for the
+structural collective numbers, not as TPU wall-clock (EXPERIMENTS.md
+§TP scaling documents the caveat). TP=1 runs the same code over a 1-axis
+mesh and must show ZERO collective bytes.
+
+Run:  PYTHONPATH=src python benchmarks/tp_scaling.py [--fast] [--check]
+Writes results/BENCH_tp_scaling.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), os.pardir, "results")
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+_WORKER = r"""
+import json, os, sys, time
+import jax, jax.numpy as jnp, numpy as np
+
+tp, n_layers, gen = (int(x) for x in sys.argv[1:4])
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.param import init_params
+from repro.distribution import tp as tp_lib
+from repro.launch.hlo_analysis import analyze_hlo
+
+cfg = ModelConfig(name="tp-bench", family="dense", n_layers=n_layers,
+                  d_model=64, n_heads=8, n_kv_heads=4, head_dim=16,
+                  d_ff=128, vocab_size=256, dtype="float32")
+B, P, MAXLEN = 2, 8, 64
+params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+mesh = tp_lib.make_tp_mesh(tp)
+sp = tp_lib.shard_params(params, cfg, mesh)
+opts_p = lm.ForwardOpts(attn_impl="full")
+opts_d = lm.ForwardOpts(decode_impl="pallas")
+pre = jax.jit(tp_lib.make_tp_prefill(cfg, mesh, max_len=MAXLEN, opts=opts_p))
+dec_fn = tp_lib.make_tp_decode(cfg, mesh, opts=opts_d)
+
+rng = np.random.default_rng(0)
+toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, P)), jnp.int32)
+t0 = time.perf_counter()
+logits, cache = pre(sp, toks)
+jax.block_until_ready(logits)
+prefill_s = time.perf_counter() - t0
+
+tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+compiled = jax.jit(dec_fn).lower(sp, tok, cache, jnp.int32(P)).compile()
+st = analyze_hlo(compiled.as_text(), tp)
+coll_ops = {k: v for k, v in st.op_bytes.items()
+            if k in ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute")}
+
+# warmup + timed greedy decode through the compiled step
+lat = []
+pos = P
+for i in range(gen + 1):
+    t0 = time.perf_counter()
+    logits, cache = compiled(sp, tok, cache, jnp.int32(pos))
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    if i > 0:                       # first call may fault buffers in
+        lat.append(dt)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    pos += 1
+lat.sort()
+
+expected_wire = (2 * n_layers * B * cfg.d_model * 4
+                 * 2 * (tp - 1) / max(tp, 1))
+print(json.dumps({
+    "tp": tp,
+    "prefill_ms": prefill_s * 1e3,
+    "per_token_ms": lat[len(lat) // 2] * 1e3,
+    "decode_steps_timed": len(lat),
+    "wire_bytes_per_step": st.wire_bytes,
+    "expected_wire_bytes": expected_wire,
+    "collective_op_bytes": coll_ops,
+}))
+"""
+
+
+def run_one(tp: int, n_layers: int, gen: int) -> dict:
+    env = dict(os.environ)
+    # Append: caller-supplied XLA options must survive into the workers.
+    inherited = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (f"{inherited} "
+                        f"--xla_force_host_platform_device_count={tp}").strip()
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", _WORKER, str(tp), str(n_layers), str(gen)],
+        env=env, capture_output=True, text=True, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"tp={tp} worker failed:\n{out.stdout}\n{out.stderr}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def check(rows) -> None:
+    by_tp = {r["tp"]: r for r in rows}
+    r1 = by_tp.get(1)
+    if r1 is not None:                  # --tps may skip the TP=1 baseline
+        assert r1["wire_bytes_per_step"] == 0, \
+            f"TP=1 must move zero collective bytes: {r1}"
+    for tp, r in by_tp.items():
+        assert r["per_token_ms"] > 0, r
+        if tp == 1:
+            continue
+        got, want = r["wire_bytes_per_step"], r["expected_wire_bytes"]
+        assert got > 0, f"TP={tp}: no collective traffic in the decode HLO"
+        assert 0.25 * want <= got <= 10 * want, \
+            f"TP={tp}: wire bytes {got:.0f} outside sanity band of " \
+            f"analytic {want:.0f} (2 all-reduces/layer contract broken?)"
+    print("collective-overhead sanity: OK")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tps", default="1,2,4",
+                    help="comma-separated TP degrees")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--gen", type=int, default=8,
+                    help="timed decode steps per degree")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI mode: fewer decode steps")
+    ap.add_argument("--check", action="store_true",
+                    help="gate the collective-overhead sanity contract")
+    args = ap.parse_args(argv)
+    gen = 4 if args.fast else args.gen
+
+    rows = []
+    for tp in (int(t) for t in args.tps.split(",")):
+        r = run_one(tp, args.layers, gen)
+        rows.append(r)
+        print(f"tp={r['tp']}: {r['per_token_ms']:.1f} ms/token, "
+              f"{r['wire_bytes_per_step']:.0f} collective B/step "
+              f"(analytic {r['expected_wire_bytes']:.0f})")
+
+    base = next((r for r in rows if r["tp"] == 1), None)
+    for r in rows:
+        r["latency_vs_tp1"] = (r["per_token_ms"] / base["per_token_ms"]
+                               if base else float("nan"))
+    os.makedirs(RESULTS, exist_ok=True)
+    out_path = os.path.join(RESULTS, "BENCH_tp_scaling.json")
+    with open(out_path, "w") as f:
+        json.dump({"config": {"layers": args.layers, "gen": gen},
+                   "results": rows}, f, indent=1)
+    print(f"wrote {out_path}")
+    if args.check:
+        check(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,26 +26,46 @@ OUT = os.path.join(os.path.dirname(__file__), "shipped_tuning_db.json")
 # Every shipped scenario is tuned at serving numerics.
 SHIP_DTYPE = "bfloat16"
 
+# Tensor-parallel deployment degrees shipped alongside the TP=1 entries.
+# Tuning runs against per-shard LOCAL shapes under a mesh-signature key:
+# the shipped DB answers "what should THIS shard launch", not "what would
+# a small unsharded model with these shapes launch".
+SHIP_TP = (2, 4)
 
-def paged_deployment_shapes(cfg):
+
+def tp_mesh_signature(tp: int):
+    """Mesh signature of a TP=N serving deployment (matches
+    distribution/sharding.mesh_signature of the tp.py 1-D mesh — the axis
+    name comes from there so shipped keys can never drift from what the
+    runtime stamps)."""
+    from repro.distribution.tp import TP_AXIS
+    return {TP_AXIS: int(tp)} if tp > 1 else {}
+
+
+def paged_deployment_shapes(cfg, tp: int = 1):
     """Canonical deployment-level paged_decode scenario for an arch —
     page_size left free so the winner sizes the pool. serve.py must look
-    up EXACTLY this context (shapes + SHIP_DTYPE, full-config geometry) or
-    the shipped entry can never hit: context signatures match exactly."""
-    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    up EXACTLY this context (shapes + SHIP_DTYPE + mesh signature,
+    full-config geometry) or the shipped entry can never hit: context
+    signatures match exactly. ``tp > 1`` yields the per-shard local view
+    (heads divided across the mesh's model axis)."""
+    hq, hkv, dh = cfg.n_heads // tp, cfg.n_kv_heads // tp, cfg.head_dim
     return {"q": (16, hq, dh), "k": (16, hkv, 32768, dh)}
 
 
 def scenarios():
-    """Representative (kernel, shapes, extra[, dtype]) per arch × serving
-    context. A scenario may append an explicit dtype to override
+    """Representative (kernel, shapes, extra[, dtype[, mesh]]) per arch ×
+    serving context. A scenario may append an explicit dtype to override
     SHIP_DTYPE — the quantized kernel family ships at "int8" (each dtype
-    policy is its own cache scenario: dtype is part of the key).
+    policy is its own cache scenario: dtype is part of the key) — and a
+    mesh signature for tensor-parallel deployments (per-shard local
+    shapes; the mesh is part of the key, DESIGN.md §11).
 
     Kernels resolve through the registry; every arch contributes its
     prefill, dense decode, ragged serving decode (float and int8-KV), the
-    paged deployment entries (float and int8 pools), and (for MLA archs)
-    the latent-cache decode scenario."""
+    paged deployment entries (float and int8 pools) at TP=1 and every
+    divisible SHIP_TP degree, and (for MLA archs) the latent-cache decode
+    scenario."""
     seen = set()
     for arch in ARCHS:
         cfg = get_config(arch)
@@ -79,6 +99,24 @@ def scenarios():
         # winning layouts differ with the halved KV traffic.
         yield ("paged_decode", paged_deployment_shapes(cfg), {})
         yield ("paged_decode", paged_deployment_shapes(cfg), {}, "int8")
+        # Tensor-parallel serving deployments: each shard decodes its local
+        # heads, so the scenario is (local shapes, mesh signature) — tuned
+        # per shard, keyed per mesh. Mesh-keyed entries are only reachable
+        # through the tp.py serving path, so ship exactly the (arch, tp)
+        # pairs it accepts — head divisibility alone would ship dead
+        # entries for MLA/SWA/MoE/encdec archs it rejects.
+        from repro.distribution.tp import check_tp_supported
+        for tp in SHIP_TP:
+            try:
+                check_tp_supported(cfg, tp)
+            except (NotImplementedError, ValueError):
+                continue
+            sig = tp_mesh_signature(tp)
+            local = paged_deployment_shapes(cfg, tp=tp)
+            yield ("gqa_decode_ragged", local, {}, None, sig)
+            yield ("gqa_decode_kv8", local, {}, "int8", sig)
+            yield ("paged_decode", local, {}, None, sig)
+            yield ("paged_decode", local, {}, "int8", sig)
         if cfg.mla is not None:
             m = cfg.mla
             yield ("mla_decode",
@@ -110,10 +148,11 @@ def main():
         pairs = []
         for scen in scenarios():
             name, shapes, extra = scen[:3]
-            dtype = scen[3] if len(scen) > 3 else SHIP_DTYPE
+            dtype = (scen[3] if len(scen) > 3 and scen[3] else SHIP_DTYPE)
+            mesh = scen[4] if len(scen) > 4 else {}
             kernel = get_kernel(name).tunable
             ctx = TuningContext(chip=chip, shapes=shapes, dtype=dtype,
-                                extra=extra)
+                                extra=extra, mesh=mesh)
             pairs.append((kernel, ctx))
         entries = tuner.tune_many(pairs, return_exceptions=True)
         for (kernel, ctx), entry in zip(pairs, entries):

@@ -48,24 +48,43 @@ class Param:
 
 @dataclasses.dataclass(frozen=True)
 class TuningContext:
-    """Everything a constraint may condition on besides the config itself."""
+    """Everything a constraint may condition on besides the config itself.
+
+    ``mesh`` is the deployment's device-mesh signature (axis name → size,
+    non-trivial axes only; empty = unsharded). Under tensor parallelism each
+    shard launches kernels on *local* operand shapes — ``shapes`` here are
+    those local shapes, and the mesh signature keeps the sharded scenario a
+    distinct cache key from a genuinely-small unsharded model that happens
+    to have the same shapes (its best config can differ: per-shard HBM
+    pressure and grid parallelism are not those of the small model's chip-
+    filling launch). See DESIGN.md §11.
+    """
 
     chip: ChipSpec
     shapes: Mapping[str, Tuple[int, ...]] = dataclasses.field(default_factory=dict)
     dtype: str = "bfloat16"
     extra: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    mesh: Mapping[str, int] = dataclasses.field(default_factory=dict)
 
     def shape(self, name: str) -> Tuple[int, ...]:
         return tuple(self.shapes[name])
 
     def signature(self) -> str:
-        """Stable string identifying the tuning scenario (cache key part)."""
+        """Stable string identifying the tuning scenario (cache key part).
+
+        The mesh field is serialized only when non-empty: unsharded
+        signatures stay byte-identical to pre-mesh ones, so every
+        previously persisted cache entry (user caches, shipped DBs)
+        remains addressable while sharded scenarios get distinct keys.
+        """
         payload = {
             "chip": self.chip.name,
             "shapes": {k: list(v) for k, v in sorted(self.shapes.items())},
             "dtype": self.dtype,
             "extra": {k: self.extra[k] for k in sorted(self.extra)},
         }
+        if self.mesh:
+            payload["mesh"] = {k: int(self.mesh[k]) for k in sorted(self.mesh)}
         return json.dumps(payload, sort_keys=True)
 
 

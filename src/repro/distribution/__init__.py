@@ -1,3 +1,9 @@
 from repro.distribution.sharding import (  # noqa: F401
-    POLICIES, ShardingPolicy, params_shardings, shard, spec_for, use_sharding,
+    POLICIES, ShardingPolicy, current_mesh_signature, mesh_signature,
+    params_shardings, shard, spec_for, tensor_parallel, tp_psum,
+    use_sharding,
 )
+
+# repro.distribution.tp (the shard_map tensor-parallel serving path) is
+# imported lazily by its consumers — it pulls in repro.models, which this
+# package must not import at module scope.

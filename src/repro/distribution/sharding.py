@@ -169,6 +169,62 @@ def shard(x, *axes: Logical):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
+# --- tensor-parallel (shard_map manual-collective) context ------------------
+#
+# The GSPMD path above annotates *global* tensors and lets XLA partition; the
+# TP serving path (distribution/tp.py) instead runs model code inside a
+# shard_map body where every array is *local* and cross-shard reductions are
+# explicit psums. Two things need to know that context is active:
+#
+#   * the row-parallel output projections (attention wo, MLP wo) must
+#     all-reduce their partial sums — ``tp_psum`` is their hook;
+#   * the kernel autotuner must key its cache on the mesh: inside the body,
+#     kernels see per-shard local shapes, and ``current_mesh_signature()``
+#     (read by kernels/ops.py when building a TuningContext) keeps those
+#     scenarios distinct from a same-shaped unsharded model.
+#
+# ``use_sharding`` deliberately does NOT set the tuning mesh: under GSPMD the
+# kernels trace with global shapes, so the existing unsharded cache keys stay
+# correct there.
+
+_TP: contextvars.ContextVar = contextvars.ContextVar("repro_tp", default=None)
+
+
+def mesh_signature(mesh: Mesh) -> Dict[str, int]:
+    """Non-trivial axes (size > 1) of a physical mesh — the tuner-key part.
+    A 1-device mesh signs as {} so TP=1 shares keys with unsharded runs."""
+    return {str(a): int(s) for a, s in mesh.shape.items() if int(s) > 1}
+
+
+@contextlib.contextmanager
+def tensor_parallel(axis: str, signature: Dict[str, int]):
+    """Mark a shard_map body as tensor-parallel over mesh axis ``axis``.
+
+    Entered at trace time by the tp.py step wrappers; ``signature`` is
+    ``mesh_signature(mesh)`` of the enclosing mesh.
+    """
+    token = _TP.set((axis, dict(signature)))
+    try:
+        yield
+    finally:
+        _TP.reset(token)
+
+
+def tp_psum(x):
+    """All-reduce a row-parallel partial sum across the TP axis; identity
+    outside a ``tensor_parallel`` context (the single-device path)."""
+    active = _TP.get()
+    if active is None:
+        return x
+    return jax.lax.psum(x, active[0])
+
+
+def current_mesh_signature() -> Dict[str, int]:
+    """Mesh signature of the active tensor_parallel context ({} if none)."""
+    active = _TP.get()
+    return dict(active[1]) if active is not None else {}
+
+
 def shard_heads_or_seq(x, *, head_axis: int, seq_axis: int,
                        head_logical: str = "heads"):
     """Head-parallel attention activations when the head count divides the

@@ -55,7 +55,13 @@ def _ctx(tuner: Autotuner, shapes: Dict[str, Tuple[int, ...]], dtype: str,
     if chip is None:
         from repro.core.hardware import get_chip
         chip = get_chip("tpu_v5e")
-    return TuningContext(chip=chip, shapes=shapes, dtype=dtype, extra=extra)
+    # Inside a tensor_parallel shard_map body the entry points trace with
+    # per-shard LOCAL shapes; stamping the mesh signature keeps those tuning
+    # scenarios (and their cached winners) distinct from an unsharded model
+    # with the same shapes (DESIGN.md §11). Unsharded runs sign mesh={}.
+    from repro.distribution.sharding import current_mesh_signature
+    return TuningContext(chip=chip, shapes=shapes, dtype=dtype, extra=extra,
+                         mesh=current_mesh_signature())
 
 
 # Runner factories are called once per candidate config, but the operands

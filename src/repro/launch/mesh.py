@@ -29,5 +29,8 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many (host) devices exist — tests/examples."""
+    """Small mesh over however many (host) devices exist — tests/examples.
+
+    The 1-D tensor-parallel serving mesh lives with its consumer:
+    ``repro.distribution.tp.make_tp_mesh`` (the shard_map path)."""
     return _make_mesh((data, model), ("data", "model"))

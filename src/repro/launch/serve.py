@@ -22,6 +22,13 @@ under ``--decode-impl paged`` (the ``paged_decode`` kernel dequantizing
 in-kernel). Each policy's kernels tune as their own scenarios (dtype is
 part of the cache key), warm-started from the shipped DB.
 
+``--tp N`` serves tensor-parallel over an N-device mesh (both dense and
+paged paths, distribution/tp.py): params are column/row-sharded, KV
+caches and page pools kv-head-sharded, and the decode kernels launch on
+per-shard local shapes — their tuned configs live under mesh-signature
+cache keys (shipped for TP=1/2/4 by gen_shipped_db). On a CPU-only host
+run with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
 With ``--on-miss heuristic`` the decode hot path never tunes inline:
 kernels launch with their heuristic defaults while the daemon background
 worker drains the tuning queue off the critical path (paper Q4.4), so
@@ -61,16 +68,30 @@ def serve_paged(args, cfg, tuner):
     # The kv8 policy serves int8 pages: its deployment scenario is the
     # SAME shapes at dtype "int8" — a distinct cache key, because the
     # winning layout shifts with the halved KV traffic (also shipped).
+    # Under --tp N the lookup is the SHARDED deployment: per-shard local
+    # shapes plus the mesh signature — the shipped TP entries, never the
+    # unsharded global-shape ones.
     from repro.configs.gen_shipped_db import (
-        SHIP_DTYPE, paged_deployment_shapes,
+        SHIP_DTYPE, paged_deployment_shapes, tp_mesh_signature,
     )
     policy = get_policy(None if args.quant == "none" else args.quant)
     kv8 = policy is not None and policy.quantizes_kv
     chip = getattr(tuner.backend, "chip", None) or \
         getattr(getattr(tuner.backend, "analytical", None), "chip", None)
     full_cfg = get_config(args.arch)
-    ctx = TuningContext(chip=chip, shapes=paged_deployment_shapes(full_cfg),
-                        dtype="int8" if kv8 else SHIP_DTYPE)
+    if args.tp > 1:
+        # Fail fast BEFORE the deployment lookup: a non-dividing tp would
+        # floor the head counts into a nonexistent scenario and (under
+        # on_miss=tune) waste minutes tuning garbage inline. Both views
+        # must divide: the full config keys the lookup, the (possibly
+        # smoke-scaled) serving config builds the engine.
+        from repro.distribution.tp import check_tp_supported
+        check_tp_supported(full_cfg, args.tp)
+        check_tp_supported(cfg, args.tp)
+    ctx = TuningContext(
+        chip=chip, shapes=paged_deployment_shapes(full_cfg, tp=args.tp),
+        dtype="int8" if kv8 else SHIP_DTYPE,
+        mesh=tp_mesh_signature(args.tp))
     deploy_cfg = tuner.best_config("paged_decode", ctx)
     # Clamp to the largest tunable page size that a single sequence can
     # still fill (tiny smoke traces would otherwise waste a whole page).
@@ -91,7 +112,7 @@ def serve_paged(args, cfg, tuner):
         page_size=page_size, max_batch=args.max_batch,
         max_seq_len=max_seq_len + args.prefill_chunk,
         prefill_chunk=args.prefill_chunk,
-        quant=None if args.quant == "none" else args.quant)
+        quant=None if args.quant == "none" else args.quant, tp=args.tp)
     reqs = []
     for i in range(B):
         plen = int(rng.integers(max(1, P // 2), P + 1))
@@ -112,16 +133,15 @@ def serve_paged(args, cfg, tuner):
 
 
 def serve_dense(args, cfg):
-    """Static batch with dense per-request KV caches (the baseline)."""
+    """Static batch with dense per-request KV caches (the baseline).
+    ``--tp N`` swaps the GSPMD step builders for the shard_map
+    tensor-parallel ones (distribution/tp.py): column/row-sharded params,
+    head-sharded caches, registry kernels launching on local shapes."""
     from repro.quant import quantize_params
 
-    mesh = make_local_mesh()
     quant = None if args.quant == "none" else args.quant
-    scfg = steps_lib.StepConfig(policy="serve_tp",
-                                opts=lm.ForwardOpts(
-                                    attn_chunk=64,
-                                    decode_impl=args.decode_impl,
-                                    quant=quant))
+    opts = lm.ForwardOpts(attn_chunk=64, decode_impl=args.decode_impl,
+                          quant=quant)
     params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
     params = quantize_params(params, quant, store="grid")
     B, P, G = args.requests, args.prompt_len, args.gen
@@ -139,9 +159,27 @@ def serve_dense(args, cfg):
             jnp.dtype(cfg.dtype))
     off = cfg.n_prefix or 0
 
-    prefill = jax.jit(steps_lib.make_prefill_step(cfg, scfg, mesh,
-                                                  max_len=off + P + G))
-    decode = jax.jit(steps_lib.make_decode_step(cfg, scfg, mesh))
+    if args.tp > 1:
+        from repro.distribution import tp as tp_lib
+        from repro.quant import get_policy
+        pol = get_policy(quant)
+        if pol is not None and pol.quantizes_weights:
+            raise SystemExit("--tp with w8a8/w8a16 is not supported yet "
+                             "(QTensor param sharding); use kv8 or none")
+        mesh = tp_lib.make_tp_mesh(args.tp)
+        params = tp_lib.shard_params(params, cfg, mesh)
+        print(f"tensor-parallel dense serving: tp={args.tp} "
+              f"({len(jax.devices())} devices)")
+        prefill = jax.jit(tp_lib.make_tp_prefill(cfg, mesh,
+                                                 max_len=off + P + G,
+                                                 opts=opts))
+        decode = jax.jit(tp_lib.make_tp_decode(cfg, mesh, opts=opts))
+    else:
+        mesh = make_local_mesh()
+        scfg = steps_lib.StepConfig(policy="serve_tp", opts=opts)
+        prefill = jax.jit(steps_lib.make_prefill_step(cfg, scfg, mesh,
+                                                      max_len=off + P + G))
+        decode = jax.jit(steps_lib.make_decode_step(cfg, scfg, mesh))
     t0 = time.perf_counter()
     logits, cache = prefill(params, prompts, **extra)
     jax.block_until_ready(logits)
@@ -176,6 +214,11 @@ def main(argv=None):
                     help="quantization policy (repro.quant): w8a8/w8a16 "
                          "quantize the MLP projections, kv8 serves an int8 "
                          "KV cache (dense caches and paged pools)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree (distribution/tp.py "
+                         "shard_map serving). Needs >= N jax devices: on a "
+                         "CPU host, launch with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--max-batch", type=int, default=4,
                     help="concurrent sequences (paged only)")
     ap.add_argument("--prefill-chunk", type=int, default=16,

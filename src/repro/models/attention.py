@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distribution.sharding import shard, shard_heads_or_seq
+from repro.distribution.sharding import shard, shard_heads_or_seq, tp_psum
 from repro.models.config import ModelConfig
 from repro.models.layers import rope
 from repro.models.param import ParamSpec
@@ -256,7 +256,10 @@ def _qkv(p, x, cfg: ModelConfig, positions):
 
 def _proj_out(p, o, cfg: ModelConfig):
     B, S = o.shape[:2]
-    out = o.reshape(B, S, -1) @ p["wo"]
+    # Row-parallel under TP: each shard contracts its local heads against its
+    # wo rows; the psum (no-op single-device) completes the sum BEFORE the
+    # replicated bias so bo is not added tp× times.
+    out = tp_psum(o.reshape(B, S, -1) @ p["wo"])
     if "bo" in p:
         out = out + p["bo"].astype(out.dtype)
     return shard(out, "batch", "seq", None)

@@ -14,7 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.distribution.sharding import shard
+from repro.distribution.sharding import shard, tp_psum
 from repro.models.config import ModelConfig
 from repro.models.param import ParamSpec
 
@@ -101,7 +101,9 @@ def apply_mlp(p, x, cfg: ModelConfig, *, quant_impl: str = "sim"):
         h = (_proj(x, p["wi"], quant_impl) + p["bi"].astype(x.dtype))
         h = shard(h, "batch", "seq", "act_model")
         h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
-    out = _proj(h, p["wo"], quant_impl)
+    # Row-parallel under TP (column-parallel wi → sharded h → row-sharded
+    # wo): psum the partial products before the replicated bias.
+    out = tp_psum(_proj(h, p["wo"], quant_impl))
     if "bo" in p:
         out = out + p["bo"].astype(x.dtype)
     return shard(out, "batch", "seq", None)

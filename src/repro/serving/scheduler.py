@@ -219,11 +219,20 @@ class ServingEngine:
     chunk runs per step. Greedy (argmax) sampling keeps runs deterministic
     so the paged pipeline can be checked token-for-token against the dense
     reference path.
+
+    ``tp > 1`` serves tensor-parallel over a 1-D device mesh
+    (distribution/tp.py): parameters are column/row-sharded, the page
+    pools are kv-head-sharded, and the jitted steps run inside shard_map —
+    so the autotuned ``paged_decode`` kernel launches (and tunes) on
+    per-shard local shapes under mesh-signature cache keys. Greedy
+    sampling stays deterministic: logits are replicated after the
+    per-layer psums, so TP output is token-for-token the single-device
+    output.
     """
 
     def __init__(self, cfg, params, *, num_pages: int, page_size: int,
                  max_batch: int, max_seq_len: int, prefill_chunk: int = 8,
-                 opts=None, quant=None):
+                 opts=None, quant=None, tp: int = 1):
         import jax
         import jax.numpy as jnp
 
@@ -254,16 +263,38 @@ class ServingEngine:
                                          kv_dtype=kv_dtype)
         self._jnp = jnp
 
+        self.tp = int(tp)
+        self.mesh = None
+        if self.tp > 1:
+            from repro.distribution import tp as tp_lib
+            if policy is not None and policy.quantizes_weights:
+                raise NotImplementedError(
+                    "tp > 1 with weight quantization needs QTensor-aware "
+                    "param sharding; use tp=1 or the kv8 policy")
+            self.mesh = tp_lib.make_tp_mesh(self.tp)
+            self.params = tp_lib.shard_params(self.params, cfg, self.mesh)
+            self.cache = tp_lib.shard_cache(self.cache, self.mesh)
+            step_prefill = tp_lib.make_tp_prefill_paged(cfg, self.mesh,
+                                                        opts=self.opts)
+            step_decode = tp_lib.make_tp_decode_paged(cfg, self.mesh,
+                                                      opts=self.opts)
+        else:
+            def step_prefill(params, tokens, cache, tables, start):
+                return lm.prefill_paged(params, cfg, tokens, cache,
+                                        tables, start, self.opts)
+
+            def step_decode(params, token, cache, tables, lens):
+                return lm.decode_step_paged(params, cfg, token, cache,
+                                            tables, lens, self.opts)
+
         # Greedy sampling runs inside the jitted step so only token ids
         # cross the device boundary every iteration, never logits.
         def _prefill(params, tokens, cache, tables, start):
-            logits, cache = lm.prefill_paged(params, cfg, tokens, cache,
-                                             tables, start, self.opts)
+            logits, cache = step_prefill(params, tokens, cache, tables, start)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
         def _decode(params, token, cache, tables, lens):
-            logits, cache = lm.decode_step_paged(params, cfg, token, cache,
-                                                 tables, lens, self.opts)
+            logits, cache = step_decode(params, token, cache, tables, lens)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
         # Donate the cache on real accelerators: the previous pool buffers

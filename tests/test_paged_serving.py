@@ -150,6 +150,129 @@ def test_property_no_leak_no_double_free(spec, max_batch, page_size, chunk):
 
 
 # ---------------------------------------------------------------------------
+# Share/free/fork traces interleaved with admission bursts: the refcount
+# machinery (prefix caching / beam forks) must keep the pool whole under
+# arbitrary interleavings, not just the scheduler's own alloc/free pattern.
+# ---------------------------------------------------------------------------
+
+def drive_fork_trace(ops, num_pages=16, page_size=8, max_batch=3):
+    """Interpret a trace of (op, arg) steps against a PagePool plus a
+    shadow ownership model, checking ``check_invariants`` AND shadow
+    agreement after every step.
+
+    Ops: ("burst", n)  — admission burst: up to n allocations of 1-3 pages
+         ("fork", i)   — share() handle i's pages (new owner, beam fork)
+         ("free", i)   — release handle i (indices wrap over live handles)
+    Returns the pool and the live-handle list (caller drains + re-checks).
+    """
+    pool = PagePool(num_pages, page_size)
+    handles = []                       # each: list of pages owned once
+
+    def check():
+        pool.check_invariants()
+        want = {}
+        for h in handles:
+            for p in h:
+                want[p] = want.get(p, 0) + 1
+        for p in range(1, num_pages):
+            assert pool.refcount(p) == want.get(p, 0), \
+                f"page {p}: pool says {pool.refcount(p)}, shadow {want.get(p, 0)}"
+
+    for op, arg in ops:
+        if op == "burst":
+            for k in range(arg):
+                pages = pool.alloc(1 + (k % 3))
+                if pages is None:
+                    break              # admission control, not an error
+                handles.append(pages)
+        elif op == "fork" and handles:
+            src = handles[arg % len(handles)]
+            pool.share(src)
+            handles.append(list(src))
+        elif op == "free" and handles:
+            pool.free(handles.pop(arg % len(handles)))
+        check()
+    return pool, handles
+
+
+def _drain(pool, handles):
+    while handles:
+        pool.free(handles.pop())
+        pool.check_invariants()
+    assert pool.num_allocated == 0
+    assert pool.num_free == pool.num_pages - 1
+
+
+def test_fork_trace_seeded():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        n = int(rng.integers(1, 30))
+        ops = [(("burst", "fork", "free")[int(rng.integers(0, 3))],
+                int(rng.integers(0, 6))) for _ in range(n)]
+        pool, handles = drive_fork_trace(
+            ops, num_pages=int(rng.integers(4, 24)),
+            page_size=int(rng.choice([4, 8])))
+        _drain(pool, handles)
+
+
+@given(st.lists(st.tuples(st.sampled_from(["burst", "fork", "free"]),
+                          st.integers(0, 6)), min_size=1, max_size=40),
+       st.integers(4, 24))
+@settings(max_examples=50, deadline=None)
+def test_property_fork_traces_keep_pool_whole(ops, num_pages):
+    """Every interleaving of admission bursts, prefix forks, and frees
+    keeps refcounts exact and the pool leak-free at every step."""
+    pool, handles = drive_fork_trace(ops, num_pages=num_pages)
+    _drain(pool, handles)
+
+
+def test_scheduler_trace_with_shared_prefix_pages():
+    """A scheduler trace runs to completion while an external owner holds
+    share()d references to admitted sequences' pages (prefix cache): the
+    scheduler's frees release its ownership only, the pages survive until
+    the external owner lets go, and invariants hold at every step."""
+    pool = PagePool(24, 8)
+    sched = Scheduler(pool, max_batch=2, max_pages=pool.pages_for(64),
+                      prefill_chunk=4)
+    for r in _mk_reqs([(6, 3), (10, 2), (4, 4), (9, 1)]):
+        sched.submit(r)
+    forked = []
+    guard = 0
+    while sched.has_work():
+        guard += 1
+        assert guard < 10_000
+        sched.retire_finished()
+        for b in sched.admit():
+            # fork every admitted sequence's pages (prefix cache holds on)
+            pages = sched.slots[b].pages
+            pool.share(pages)
+            forked.append(list(pages))
+        chunk = sched.next_prefill()
+        if chunk is not None:
+            b, tokens, start, valid = chunk
+            sched.mark_prefilled(b, valid)
+            if sched.slots[b].prompt_done:
+                sched.slots[b].req.tokens.append(1)
+        mask = sched.decode_mask()
+        for b in np.nonzero(mask)[0]:
+            sched.slots[int(b)].req.tokens.append(1)
+        sched.advance_decoded(mask)
+        sched.check_invariants()
+    sched.retire_finished()
+    sched.check_invariants()
+    # Scheduler released its ownerships; the forked prefixes still pin
+    # every page they reference (held pages are never recycled, so each
+    # admission got fresh pages and the forked sets are disjoint).
+    assert len(sched.finished) == 4
+    assert pool.num_allocated == len({p for f in forked for p in f})
+    for f in forked:
+        pool.free(f)
+        pool.check_invariants()
+    assert pool.num_allocated == 0
+    assert pool.num_free == pool.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
 # Block tables vs a dense reference cache (scatter/gather consistency)
 # ---------------------------------------------------------------------------
 

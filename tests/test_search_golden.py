@@ -1,0 +1,128 @@
+"""Golden-log regression for the four search strategies.
+
+The ask/tell protocol guarantees trial logs are order-deterministic and
+batch-size-invariant; tests/test_engine.py checks self-consistency within
+one build of the code. This suite pins the logs against COMMITTED
+fixtures, so an ask/tell refactor that silently reorders trials (same
+final winner, different exploration order) fails at PR time instead of
+invalidating every historical search-efficiency comparison.
+
+Regenerate fixtures after an INTENTIONAL ordering change with:
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_search_golden.py
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core import (
+    ConfigSpace, EvolutionarySearch, ExhaustiveSearch, Param, RandomSearch,
+    SuccessiveHalving, Trial, TuningContext, get_chip,
+)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures",
+                        "search_golden")
+
+STRATEGIES = {
+    "exhaustive": lambda: ExhaustiveSearch(),
+    "random": lambda: RandomSearch(budget=12, seed=3),
+    "evolutionary": lambda: EvolutionarySearch(population=4, generations=3,
+                                               children=4, seed=5),
+    "successive_halving": lambda: SuccessiveHalving(initial=10, rungs=3,
+                                                    base_fidelity=1,
+                                                    fidelity_mult=4, seed=7),
+}
+
+
+def _space():
+    sp = ConfigSpace("golden", [Param("block", (32, 64, 128, 256, 512)),
+                                Param("splits", (1, 2, 4, 8))])
+    sp.constrain("splits<=block/16",
+                 lambda c, x: c["splits"] <= c["block"] // 16)
+    return sp
+
+
+def _ctx():
+    return TuningContext(chip=get_chip("tpu_v5e"), shapes={"x": (1024, 1024)})
+
+
+def _evaluate(cfg, fidelity=1):
+    """Deterministic synthetic landscape (pure integer/float arithmetic —
+    bit-identical across platforms): a bowl around (128, 4) whose noise
+    term shrinks with fidelity, exercising the SH rung logs."""
+    base = abs(cfg["block"] - 128) / 64.0 + abs(cfg["splits"] - 4) * 0.25
+    noise = ((cfg["block"] * 31 + cfg["splits"] * 17) % 7) / (10.0 * fidelity)
+    return 0.1 + base + noise
+
+
+def _serialize(trials):
+    return json.dumps(
+        [{"config": {k: t.config[k] for k in sorted(t.config)},
+          "metric": t.metric, "fidelity": t.fidelity} for t in trials],
+        indent=1, sort_keys=True).encode() + b"\n"
+
+
+def _log_via_run(strategy):
+    return strategy.run(_space(), _ctx(), _evaluate).trials
+
+
+def _log_via_ask_tell(strategy, batch):
+    strategy.reset(_space(), _ctx())
+    while not strategy.finished():
+        configs = strategy.suggest(batch)
+        if not configs:
+            break
+        fid = strategy.fidelity
+        strategy.observe([Trial(dict(c), _evaluate(c, fidelity=fid),
+                                fidelity=fid) for c in configs])
+    return strategy.result().trials
+
+
+def _fixture_path(name):
+    return os.path.join(FIXTURES, f"{name}.json")
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_trial_log_matches_committed_fixture(name):
+    got = _serialize(_log_via_run(STRATEGIES[name]()))
+    path = _fixture_path(name)
+    if os.environ.get("REPRO_REGEN_GOLDEN") == "1":
+        os.makedirs(FIXTURES, exist_ok=True)
+        with open(path, "wb") as f:
+            f.write(got)
+        pytest.skip(f"regenerated {path}")
+    with open(path, "rb") as f:
+        want = f.read()
+    assert got == want, (
+        f"{name}: trial log diverged from the committed fixture. If the "
+        f"ordering change is intentional, regenerate with "
+        f"REPRO_REGEN_GOLDEN=1 (see module docstring).")
+
+
+@pytest.mark.parametrize("batch", [1, 3, 7])
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_ask_tell_batches_reproduce_fixture(name, batch):
+    """Driving suggest/observe at any batch size must produce the SAME
+    byte-identical log as the committed serial fixture — the engine can
+    pipeline at any width without changing what history records."""
+    path = _fixture_path(name)
+    if not os.path.exists(path):
+        pytest.skip("fixtures not generated yet")
+    got = _serialize(_log_via_ask_tell(STRATEGIES[name](), batch))
+    with open(path, "rb") as f:
+        want = f.read()
+    assert got == want
+
+
+def test_fixture_logs_nonempty_and_valid():
+    sp, ctx = _space(), _ctx()
+    for name in STRATEGIES:
+        path = _fixture_path(name)
+        if not os.path.exists(path):
+            pytest.skip("fixtures not generated yet")
+        trials = json.loads(open(path).read())
+        assert len(trials) >= 5, (name, len(trials))
+        for t in trials:
+            assert sp.is_valid(t["config"], ctx), (name, t)

@@ -1,0 +1,139 @@
+"""Shipped tuning DB validity: every entry must parse against its
+kernel's CURRENT config space.
+
+The shipped DB is machine-generated and long-lived; kernels evolve. A
+renamed tunable, a dropped domain value, a version bump, or an edited
+constraint silently turns shipped entries into dead weight (the cache's
+space-hash check makes them misses — correct, but then every deployment
+cold-tunes at startup and nobody notices at PR time). This suite turns
+that rot into a test failure the moment it is introduced."""
+
+import json
+import os
+
+from repro.core.cache import CacheEntry, cache_key
+from repro.core.config_space import TuningContext
+from repro.core.hardware import get_chip
+from repro.kernels.registry import get_kernel
+
+DB_PATH = os.path.join(os.path.dirname(__file__), os.pardir, "src", "repro",
+                       "configs", "shipped_tuning_db.json")
+
+
+def _load():
+    with open(DB_PATH) as f:
+        return json.load(f)
+
+
+def _parse_key(key):
+    k = json.loads(key)
+    ctx_payload = json.loads(k["ctx"])
+    ctx = TuningContext(
+        chip=get_chip(ctx_payload["chip"]),
+        shapes={n: tuple(v) for n, v in ctx_payload["shapes"].items()},
+        dtype=ctx_payload["dtype"],
+        extra=dict(ctx_payload["extra"]),
+        mesh=dict(ctx_payload.get("mesh", {})),
+    )
+    return k, ctx
+
+
+def test_db_loads_and_is_not_tiny():
+    db = _load()
+    assert len(db) > 300, f"shipped DB suspiciously small: {len(db)}"
+
+
+def test_every_entry_parses_against_current_config_space():
+    """The PR-time gate: kernel exists, version and space hash are
+    current, the stored config is valid for the reconstructed context,
+    and the signature round-trips (so runtime lookups can actually hit
+    the key as written)."""
+    db = _load()
+    assert db, "empty shipped DB"
+    for key, raw in db.items():
+        k, ctx = _parse_key(key)
+        spec = get_kernel(k["kernel"])          # raises for renamed kernels
+        tk = spec.tunable
+        assert k["kernel_version"] == tk.version, \
+            f"{k['kernel']}: shipped at version {k['kernel_version']}, " \
+            f"kernel is now {tk.version} — regenerate the DB"
+        assert k["space"] == tk.space.space_hash(), \
+            f"{k['kernel']}: config space changed since the DB was " \
+            f"generated (dead/renamed tunables?) — regenerate the DB"
+        entry = CacheEntry.from_json(raw)
+        assert not entry.failed(), \
+            f"{k['kernel']}: shipped a failed search for {ctx.signature()}"
+        why = tk.space.why_invalid(entry.config, ctx)
+        assert why is None, \
+            f"{k['kernel']}: shipped config {entry.config} violates " \
+            f"constraint {why!r} for {ctx.signature()}"
+        # Round-trip: rebuilding the key from parsed parts reproduces it,
+        # so a runtime lookup with this context hits this entry.
+        assert cache_key(k["kernel"], k["kernel_version"], tk.space,
+                         ctx) == key
+
+
+def test_entries_cover_every_chip_generation():
+    from repro.configs.gen_shipped_db import CHIPS as SHIP_CHIPS
+    db = _load()
+    chips = {json.loads(json.loads(k)["ctx"])["chip"] for k in db}
+    assert chips == set(SHIP_CHIPS), chips
+
+
+def test_tp_deployment_entries_shipped():
+    """TP=2 and TP=4 sharded serving deployments ship warm (DESIGN.md
+    §11): mesh-signature keys exist for the decode serving family, and
+    each sharded paged_decode scenario has a float and an int8 variant."""
+    db = _load()
+    by_mesh = {}
+    for key in db:
+        k, ctx = _parse_key(key)
+        tp = ctx.mesh.get("model", 1)
+        by_mesh.setdefault(tp, set()).add((k["kernel"], ctx.dtype))
+    assert set(by_mesh) == {1, 2, 4}, sorted(by_mesh)
+    for tp in (2, 4):
+        assert ("paged_decode", "bfloat16") in by_mesh[tp]
+        assert ("paged_decode", "int8") in by_mesh[tp]
+        assert ("gqa_decode_ragged", "bfloat16") in by_mesh[tp]
+        assert ("gqa_decode_kv8", "int8") in by_mesh[tp]
+
+
+def test_sharded_entries_use_local_shapes():
+    """A TP entry's shapes must be the per-shard view: for every arch
+    that shipped a TP=N paged_decode entry, an unsharded entry with N×
+    the head counts exists — the global scenario it was derived from."""
+    db = _load()
+    plain, sharded = set(), []
+    for key in db:
+        k, ctx = _parse_key(key)
+        if k["kernel"] != "paged_decode" or ctx.dtype != "bfloat16":
+            continue
+        hq, hkv = ctx.shape("q")[1], ctx.shape("k")[1]
+        tp = ctx.mesh.get("model", 1)
+        if tp == 1:
+            plain.add((ctx.chip.name, hq, hkv))
+        else:
+            sharded.append((ctx.chip.name, hq, hkv, tp))
+    assert sharded, "no sharded paged_decode entries"
+    for chip, hq, hkv, tp in sharded:
+        assert (chip, hq * tp, hkv * tp) in plain, \
+            f"TP={tp} entry ({hq},{hkv}) has no parent global entry"
+
+
+def test_deployment_lookup_context_matches_shipped_key():
+    """serve.py's paged deployment lookup must reconstruct EXACTLY a
+    shipped context — shapes, dtype, and mesh signature — or warm starts
+    silently break. Pin it for a known-divisible arch at TP=1/2/4."""
+    from repro.configs import get_config
+    from repro.configs.gen_shipped_db import (
+        SHIP_DTYPE, paged_deployment_shapes, tp_mesh_signature,
+    )
+    db = _load()
+    cfg = get_config("phi3-mini-3.8b")
+    kernel = get_kernel("paged_decode").tunable
+    for tp in (1, 2, 4):
+        ctx = TuningContext(chip=get_chip("tpu_v5e"),
+                            shapes=paged_deployment_shapes(cfg, tp=tp),
+                            dtype=SHIP_DTYPE, mesh=tp_mesh_signature(tp))
+        key = cache_key(kernel.name, kernel.version, kernel.space, ctx)
+        assert key in db, f"no shipped TP={tp} deployment entry for phi3"
