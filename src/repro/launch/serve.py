@@ -22,6 +22,14 @@ under ``--decode-impl paged`` (the ``paged_decode`` kernel dequantizing
 in-kernel). Each policy's kernels tune as their own scenarios (dtype is
 part of the cache key), warm-started from the shipped DB.
 
+``--prefix-cache`` (paged only) turns on cross-request prefix caching
+(repro/serving/prefix_cache.py): retired sequences park their KV pages
+in a radix tree keyed by token ids, later requests with a shared prefix
+(system prompts) reuse the cached full pages via refcount bumps and
+prefill only their marginal suffix, and LRU eviction reclaims cold
+refcount-1 pages under pool pressure. Composes with ``--quant kv8`` and
+``--tp N``; output stays token-for-token equal to the uncached path.
+
 ``--tp N`` serves tensor-parallel over an N-device mesh (both dense and
 paged paths, distribution/tp.py): params are column/row-sharded, KV
 caches and page pools kv-head-sharded, and the decode kernels launch on
@@ -112,21 +120,50 @@ def serve_paged(args, cfg, tuner):
         page_size=page_size, max_batch=args.max_batch,
         max_seq_len=max_seq_len + args.prefill_chunk,
         prefill_chunk=args.prefill_chunk,
-        quant=None if args.quant == "none" else args.quant, tp=args.tp)
+        quant=None if args.quant == "none" else args.quant, tp=args.tp,
+        prefix_cache=args.prefix_cache)
     reqs = []
+    # A shared system prompt heads every request when prefix caching is
+    # on — the chat-traffic shape the radix tree exists for. Without the
+    # cache, keep the fully-random prompts (the PR 3 smoke behavior).
+    # The shared prompt must span at least one full page or no request
+    # can ever hit (only full pages are shareable, and the match is
+    # capped at prompt_len - 1): grow it to the page boundary and shrink
+    # the per-request suffix budget so prompts stay within P.
+    sys_len = max(1, P // 2)
+    if args.prefix_cache:
+        sys_len = min(max(sys_len, page_size), max(1, P - 1))
+    sys_prompt = rng.integers(1, cfg.vocab_size, sys_len,
+                              dtype=np.int64).astype(np.int32)
     for i in range(B):
-        plen = int(rng.integers(max(1, P // 2), P + 1))
-        reqs.append(Request(
-            rid=i, prompt=rng.integers(1, cfg.vocab_size, plen,
-                                       dtype=np.int64).astype(np.int32),
-            max_new_tokens=G))
+        if args.prefix_cache:
+            sfx = rng.integers(1, cfg.vocab_size,
+                               int(rng.integers(1, max(2, P - sys_len))),
+                               dtype=np.int64).astype(np.int32)
+            prompt = np.concatenate([sys_prompt, sfx])
+        else:
+            plen = int(rng.integers(max(1, P // 2), P + 1))
+            prompt = rng.integers(1, cfg.vocab_size, plen,
+                                  dtype=np.int64).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=G))
     t0 = time.perf_counter()
     res = engine.run(reqs)
     print(f"served {res['requests']} requests / "
           f"{res['generated_tokens']} tokens in {res['wall_s']*1e3:.0f} ms "
           f"({res['tokens_per_s']:.1f} tok/s, {res['steps']} steps)")
     engine.scheduler.check_invariants()
-    assert engine.pool.num_allocated == 0, "page leak after drain"
+    if engine.prefix_cache is not None:
+        stats = engine.prefix_cache.stats()
+        print(f"prefix cache: {stats['hit_tokens']} prefill tokens avoided, "
+              f"{stats['hits']}/{stats['lookups']} request hits, "
+              f"{stats['parked_pages']} pages parked "
+              f"({stats['evicted_pages']} evicted)")
+        # Parked pages survive the drain by design (they ARE the cache);
+        # everything else must be back in the free list.
+        assert engine.pool.num_allocated == engine.prefix_cache.num_pages, \
+            "page leak after drain (beyond parked cache pages)"
+    else:
+        assert engine.pool.num_allocated == 0, "page leak after drain"
     r0 = engine.scheduler.finished[0]
     print("sample:", r0.tokens[:12])
     print(f"total wall (incl jit): {(time.perf_counter()-t0)*1e3:.0f} ms")
@@ -219,6 +256,11 @@ def main(argv=None):
                          "shard_map serving). Needs >= N jax devices: on a "
                          "CPU host, launch with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request prefix caching (paged only): "
+                         "retired sequences park their pages in a radix "
+                         "tree and later requests reuse cached full-page "
+                         "prefixes (docs/serving.md)")
     ap.add_argument("--max-batch", type=int, default=4,
                     help="concurrent sequences (paged only)")
     ap.add_argument("--prefill-chunk", type=int, default=16,

@@ -10,16 +10,20 @@ registry kernel over the scheduler's block tables.
 
     PagePool   — ref-counted fixed-size page allocator (page 0 reserved as
                  the scratch page inactive slots write into)
+    PrefixCache — radix tree over token prefixes -> shared KV pages
+                 (cross-request prefix caching, RadixAttention-style)
     Request    — one inference request (prompt + generation budget)
     Scheduler  — admission / chunked prefill / decode / retirement loop
     ServingEngine — binds a model to the scheduler and runs the jitted
                  prefill_paged / decode_step_paged steps
 
-See docs/serving.md for the design and benchmarks/serving_throughput.py
-for the dense-vs-paged throughput comparison.
+See docs/serving.md for the design, benchmarks/serving_throughput.py
+for the dense-vs-paged throughput comparison, and
+benchmarks/prefix_caching.py for the shared-prefix trace benchmark.
 """
 
 from repro.serving.page_pool import PagePool  # noqa: F401
+from repro.serving.prefix_cache import PrefixCache  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
     Request, Scheduler, ServingEngine, StepStats,
 )

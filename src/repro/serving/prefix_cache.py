@@ -1,0 +1,233 @@
+"""Cross-request prefix cache: a radix tree over token prefixes mapping
+to shared KV pages (vLLM / SGLang-style RadixAttention).
+
+The ``PagePool`` already refcounts pages so sequences can share a common
+prefix (``share()`` / ``free()``); this module is the index that *finds*
+the sharing. Every node of the trie covers exactly one full page —
+``page_size`` token ids (the edge label from its parent) plus the page
+that holds their KV. Page granularity keeps the invariants simple: a
+cached page is reusable only if every token in it matches, so a match
+walk never has to split a page between two owners.
+
+Lifecycle (driven by the ``Scheduler``):
+
+  admit   — ``match()`` walks the trie over the request's prompt and
+            returns the longest cached full-page prefix; the scheduler
+            ``share()``s those pages (the request becomes a co-owner),
+            charges admission only the *marginal* pages, and starts
+            chunked prefill at the first uncached token. Matching is
+            capped at ``prompt_len - 1`` tokens so at least one prompt
+            token always prefills (the step that yields the first
+            generated token's logits).
+  retire  — ``insert()`` parks the retired request's full resident pages
+            under its token sequence instead of freeing them: ownership
+            of pages new to the trie *transfers* to the cache; pages
+            whose path already exists are released (the trie keeps one
+            canonical page per prefix — dedupe).
+  pressure— ``evict()`` frees least-recently-used leaves whose pages have
+            refcount 1 (owned only by the cache). Pages shared with a
+            live request have refcount >= 2 and are never evicted, so the
+            pool's refcounts double as eviction pins. Evicting a leaf may
+            expose its parent as the next candidate, so one call can
+            reclaim a whole refcount-1 subtree.
+
+Determinism contract: a cached page holds KV for exactly the token ids
+on its path at absolute positions, and KV depends only on (token,
+position) — so serving through cached pages is token-for-token identical
+to re-prefilling them (tests/test_prefix_cache.py replays traces against
+the no-cache engine, including kv8 int8 pools and TP-sharded pools).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.page_pool import PagePool
+
+
+class _Node:
+    """One full page of cached prefix: ``key`` is the page's token ids
+    (the edge label from the parent), ``page`` the pool page holding
+    their KV. The root is a sentinel with no key/page."""
+
+    __slots__ = ("key", "page", "children", "parent", "last_use")
+
+    def __init__(self, key: Tuple[int, ...], page: int,
+                 parent: Optional["_Node"]):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], _Node] = {}
+        self.last_use = 0
+
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+class PrefixCache:
+    """Radix-tree index over token prefixes -> pool pages.
+
+    Single ownership rule: the cache holds exactly ONE pool ownership per
+    node (taken over at ``insert``, released at ``evict``). Requests that
+    hit add their own ownership via ``PagePool.share`` — the scheduler
+    does that, keeping this class free of admission policy.
+    """
+
+    def __init__(self, pool: PagePool, record_events: bool = False):
+        self.pool = pool
+        self.page_size = pool.page_size
+        self._root = _Node((), -1, None)
+        self._nodes: List[_Node] = []      # insertion order (LRU tiebreak)
+        self._clock = 0
+        self.record_events = record_events
+        self.events: List[dict] = []
+        self._stats = {
+            "lookups": 0, "hits": 0, "misses": 0,
+            "hit_pages": 0, "hit_tokens": 0,
+            "inserted_pages": 0, "deduped_pages": 0, "evicted_pages": 0,
+        }
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def num_pages(self) -> int:
+        """Pages currently parked in the trie."""
+        return len(self._nodes)
+
+    def stats(self) -> dict:
+        return dict(self._stats, parked_pages=self.num_pages)
+
+    def _event(self, op: str, **kw) -> None:
+        if self.record_events:
+            self.events.append({"op": op, **kw})
+
+    def prefixes(self) -> Dict[Tuple[int, ...], int]:
+        """Every cached prefix as {token tuple -> page of its last node}
+        — the flat shadow model the property tests compare against."""
+        out: Dict[Tuple[int, ...], int] = {}
+
+        def walk(node: _Node, prefix: Tuple[int, ...]) -> None:
+            for key, child in node.children.items():
+                out[prefix + key] = child.page
+                walk(child, prefix + key)
+
+        walk(self._root, ())
+        return out
+
+    # -- match / insert / evict --------------------------------------------
+    def _chunks(self, tokens: Sequence[int]):
+        ps = self.page_size
+        for i in range(0, len(tokens) - ps + 1, ps):
+            yield tuple(int(t) for t in tokens[i:i + ps])
+
+    def match(self, tokens: Sequence[int], limit: Optional[int] = None,
+              rid: Optional[int] = None) -> Tuple[List[int], int]:
+        """Longest cached full-page prefix of ``tokens`` (at most
+        ``limit`` tokens): returns (pages, n_tokens). Touches the path
+        for LRU but takes NO ownership — the caller must ``share()`` the
+        pages before anything can evict them."""
+        n = len(tokens) if limit is None else min(limit, len(tokens))
+        self._clock += 1
+        self._stats["lookups"] += 1
+        node, pages = self._root, []
+        for key in self._chunks(tokens[:max(0, n)]):
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.last_use = self._clock
+            pages.append(child.page)
+            node = child
+        matched = len(pages) * self.page_size
+        self._stats["hits" if pages else "misses"] += 1
+        self._stats["hit_pages"] += len(pages)
+        self._stats["hit_tokens"] += matched
+        if pages:
+            self._event("hit", rid=rid, pages=len(pages), tokens=matched)
+        return pages, matched
+
+    def insert(self, tokens: Sequence[int], pages: Sequence[int],
+               rid: Optional[int] = None) -> Tuple[int, int]:
+        """Park ``pages`` (one per full page of ``tokens``) under their
+        token path. The caller cedes one ownership of every page: pages
+        that extend the trie are adopted; pages whose path already exists
+        are freed (their ownership released — the existing node's page
+        stays canonical). Returns (parked, deduped)."""
+        ps = self.page_size
+        if len(tokens) != len(pages) * ps:
+            raise ValueError(
+                f"insert: {len(tokens)} tokens != {len(pages)} pages "
+                f"x page_size {ps}")
+        self._clock += 1
+        node, parked, deduped = self._root, 0, 0
+        for key, page in zip(self._chunks(tokens), pages):
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(key, int(page), node)
+                node.children[key] = child
+                self._nodes.append(child)
+                parked += 1
+            else:
+                # Path already cached: release the caller's ownership —
+                # either its share of this very page (a hit it is handing
+                # back) or its duplicate prefill of the same prefix (the
+                # existing node's page stays canonical).
+                self.pool.free([page])
+                deduped += 1
+            child.last_use = self._clock
+            node = child
+        self._stats["inserted_pages"] += parked
+        self._stats["deduped_pages"] += deduped
+        self._event("insert", rid=rid, parked=parked, deduped=deduped,
+                    tokens=len(tokens))
+        return parked, deduped
+
+    def evict(self, n_pages: int) -> int:
+        """Free up to ``n_pages`` pages, LRU-first over evictable leaves
+        (refcount 1 = no live request shares them). Freed parents become
+        leaves and rejoin the candidate set, so one call can consume an
+        entire cold subtree. Returns pages actually freed."""
+        freed = 0
+        while freed < n_pages:
+            victim = None
+            for node in self._nodes:        # insertion order breaks ties
+                if node.is_leaf() and self.pool.refcount(node.page) == 1 \
+                        and (victim is None
+                             or node.last_use < victim.last_use):
+                    victim = node
+            if victim is None:
+                break
+            del victim.parent.children[victim.key]
+            self._nodes.remove(victim)
+            self.pool.free([victim.page])
+            freed += 1
+        self._stats["evicted_pages"] += freed
+        if n_pages > 0:
+            self._event("evict", requested=n_pages, freed=freed)
+        return freed
+
+    def drop(self) -> int:
+        """Evict everything evictable (shutdown / tests). Returns pages
+        freed; pages shared with live requests stay."""
+        return self.evict(len(self._nodes))
+
+    # -- invariants ---------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Trie/pool consistency: every parked page is allocated exactly
+        once in the trie, node keys are full pages, the reachable tree
+        and the flat node list agree, and the pool itself is whole."""
+        self.pool.check_invariants()
+        reachable = []
+
+        def walk(node: _Node) -> None:
+            for key, child in node.children.items():
+                assert key == child.key and len(key) == self.page_size
+                assert child.parent is node
+                assert self.pool.refcount(child.page) >= 1, \
+                    f"trie page {child.page} not allocated"
+                reachable.append(child)
+                walk(child)
+
+        walk(self._root)
+        assert len(reachable) == len(self._nodes), \
+            "trie nodes unreachable from root"
+        pages = [n.page for n in reachable]
+        assert len(pages) == len(set(pages)), "page parked twice"

@@ -34,6 +34,7 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serving.page_pool import SCRATCH_PAGE, PagePool
+from repro.serving.prefix_cache import PrefixCache
 
 
 @dataclasses.dataclass
@@ -64,6 +65,7 @@ class _Seq:
     pages: List[int]
     pos: int = 0                       # resident (written) valid tokens
     prompt_done: bool = False
+    cached_tokens: int = 0             # prefix served from the cache
 
 
 @dataclasses.dataclass
@@ -72,6 +74,7 @@ class StepStats:
     retired: int = 0
     prefill_tokens: int = 0
     decode_tokens: int = 0
+    prefix_cached_tokens: int = 0      # prefill tokens avoided this step
 
 
 class Scheduler:
@@ -83,17 +86,23 @@ class Scheduler:
     """
 
     def __init__(self, pool: PagePool, max_batch: int, max_pages: int,
-                 prefill_chunk: int = 8):
+                 prefill_chunk: int = 8,
+                 prefix_cache: Optional[PrefixCache] = None):
         self.pool = pool
         self.max_batch = int(max_batch)
         self.max_pages = int(max_pages)
         self.prefill_chunk = int(prefill_chunk)
+        self.prefix_cache = prefix_cache
+        if prefix_cache is not None and prefix_cache.pool is not pool:
+            raise ValueError("prefix cache must index the scheduler's pool")
         self.waiting: Deque[Request] = deque()
         self.slots: List[Optional[_Seq]] = [None] * self.max_batch
         self.finished: List[Request] = []
         self._tables = np.full((self.max_batch, self.max_pages),
                                SCRATCH_PAGE, np.int32)
         self._prefill_rr = 0           # round-robin cursor over slots
+        self.total_prefill_tokens = 0  # chunk tokens actually computed
+        self.total_cached_tokens = 0   # prefill tokens the cache avoided
 
     # -- request intake ----------------------------------------------------
     def max_tokens(self, req: Request) -> int:
@@ -118,17 +127,40 @@ class Scheduler:
         out = []
         for b, seq in enumerate(self.slots):
             if seq is not None and seq.prompt_done and seq.req.done():
-                self.pool.free(seq.pages)
+                if self.prefix_cache is None:
+                    self.pool.free(seq.pages)
+                else:
+                    self._park(seq)
                 self._tables[b, :] = SCRATCH_PAGE
                 self.slots[b] = None
                 self.finished.append(seq.req)
                 out.append(seq.req)
         return out
 
+    def _park(self, seq: _Seq) -> None:
+        """Retire through the prefix cache: the sequence's full resident
+        pages are parked in the trie under their token ids (prompt +
+        generated tokens — the last generated token was never written),
+        so the next request with this prefix hits instead of
+        re-prefilling; the ragged tail and unused reservation are freed."""
+        ps = self.pool.page_size
+        n_full = min(seq.pos // ps, len(seq.pages))
+        resident = np.concatenate(
+            [seq.req.prompt,
+             np.asarray(seq.req.tokens[:-1], np.int32)])[:n_full * ps]
+        self.prefix_cache.insert(resident, seq.pages[:n_full],
+                                 rid=seq.req.rid)
+        self.pool.free(seq.pages[n_full:])
+
     def admit(self, now: float = float("inf")) -> List[int]:
         """FIFO admission: a request enters when a slot is free AND its
         worst-case page reservation fits. Head-of-line blocking is
-        deliberate (no starvation of big requests)."""
+        deliberate (no starvation of big requests).
+
+        With a prefix cache, the cached full-page prefix is share()d
+        (refcount bump pins it against eviction) and admission charges
+        only the *marginal* pages; under pool pressure, LRU refcount-1
+        trie pages are evicted before giving up."""
         admitted = []
         for b in range(self.max_batch):
             if not self.waiting or self.slots[b] is not None:
@@ -136,13 +168,32 @@ class Scheduler:
             req = self.waiting[0]
             if req.arrival > now:
                 break
-            pages = self.pool.alloc(self.pool.pages_for(self.max_tokens(req)))
+            need = self.pool.pages_for(self.max_tokens(req))
+            cached_pages: List[int] = []
+            cached_tokens = 0
+            if self.prefix_cache is not None:
+                # Cap the match at prompt_len - 1: at least one prompt
+                # token must prefill to produce the first-token logits.
+                cached_pages, cached_tokens = self.prefix_cache.match(
+                    req.prompt, limit=req.prompt_len - 1, rid=req.rid)
+                self.pool.share(cached_pages)   # pin before any eviction
+                need -= len(cached_pages)
+                deficit = need - self.pool.num_free
+                if deficit > 0:
+                    self.prefix_cache.evict(deficit)
+            pages = self.pool.alloc(need)
             if pages is None:
+                if cached_pages:
+                    self.pool.free(cached_pages)   # unpin, retry later
                 break                  # pool pressure: wait for retirement
             self.waiting.popleft()
-            self.slots[b] = _Seq(req=req, pages=pages)
+            all_pages = cached_pages + pages
+            self.slots[b] = _Seq(req=req, pages=all_pages,
+                                 pos=cached_tokens,
+                                 cached_tokens=cached_tokens)
             self._tables[b, :] = SCRATCH_PAGE
-            self._tables[b, :len(pages)] = pages
+            self._tables[b, :len(all_pages)] = all_pages
+            self.total_cached_tokens += cached_tokens
             admitted.append(b)
         return admitted
 
@@ -170,6 +221,7 @@ class Scheduler:
         seq = self.slots[slot]
         assert seq is not None and not seq.prompt_done
         seq.pos += n_valid
+        self.total_prefill_tokens += n_valid
         if seq.pos >= seq.req.prompt_len:
             seq.prompt_done = True
 
@@ -197,7 +249,7 @@ class Scheduler:
     def check_invariants(self) -> None:
         """Pool consistency + block tables consistent with ownership."""
         self.pool.check_invariants()
-        owned: List[int] = []
+        owners: Dict[int, int] = {}
         for b, seq in enumerate(self.slots):
             if seq is None:
                 assert (self._tables[b] == SCRATCH_PAGE).all()
@@ -206,10 +258,20 @@ class Scheduler:
             assert list(self._tables[b, :n]) == seq.pages
             assert (self._tables[b, n:] == SCRATCH_PAGE).all()
             assert seq.pos <= n * self.pool.page_size
-            owned.extend(seq.pages)
-        assert len(owned) == len(set(owned)), "page mapped to two slots"
-        for p in owned:
-            assert self.pool.refcount(p) >= 1
+            assert len(set(seq.pages)) == n, "page twice in one table"
+            for p in seq.pages:
+                owners[p] = owners.get(p, 0) + 1
+        if self.prefix_cache is None:
+            # Without prefix sharing a page belongs to exactly one slot.
+            assert all(c == 1 for c in owners.values()), \
+                "page mapped to two slots"
+        else:
+            self.prefix_cache.check_invariants()
+        for p, c in owners.items():
+            # Every slot mapping is backed by an ownership the pool knows
+            # about (shared cache pages count each co-owner).
+            assert self.pool.refcount(p) >= c, \
+                f"page {p}: {c} slot owners > refcount {self.pool.refcount(p)}"
 
 
 class ServingEngine:
@@ -232,7 +294,8 @@ class ServingEngine:
 
     def __init__(self, cfg, params, *, num_pages: int, page_size: int,
                  max_batch: int, max_seq_len: int, prefill_chunk: int = 8,
-                 opts=None, quant=None, tp: int = 1):
+                 opts=None, quant=None, tp: int = 1,
+                 prefix_cache: bool = False, record_cache_events: bool = False):
         import jax
         import jax.numpy as jnp
 
@@ -241,10 +304,19 @@ class ServingEngine:
 
         self.cfg = cfg
         self.pool = PagePool(num_pages, page_size)
+        # Cross-request prefix caching (docs/serving.md): retired
+        # sequences park their pages in a radix tree instead of freeing
+        # them, and admissions reuse any cached full-page prefix. Works
+        # unchanged under kv8 int8 pools (scales ride the same tables)
+        # and TP kv-head-sharded pools (the pool is host-side bookkeeping
+        # shared by every shard).
+        self.prefix_cache = (
+            PrefixCache(self.pool, record_events=record_cache_events)
+            if prefix_cache else None)
         self.scheduler = Scheduler(
             self.pool, max_batch=max_batch,
             max_pages=self.pool.pages_for(max_seq_len),
-            prefill_chunk=prefill_chunk)
+            prefill_chunk=prefill_chunk, prefix_cache=self.prefix_cache)
         self.max_seq_len = int(max_seq_len)
         if opts is None:
             opts = lm.ForwardOpts(decode_impl="paged", quant=quant)
@@ -324,7 +396,10 @@ class ServingEngine:
         sched = self.scheduler
         stats = StepStats()
         stats.retired = len(sched.retire_finished())
-        stats.admitted = len(sched.admit(now))
+        admitted = sched.admit(now)
+        stats.admitted = len(admitted)
+        stats.prefix_cached_tokens = sum(
+            sched.slots[b].cached_tokens for b in admitted)
 
         chunk = sched.next_prefill()
         if chunk is not None:
@@ -399,7 +474,7 @@ class ServingEngine:
         # Report on THIS call's requests only — scheduler.finished
         # accumulates across runs on a reused engine.
         gen = sum(len(r.tokens) for r in requests)
-        return {
+        out = {
             "requests": sum(r.done() for r in requests),
             "generated_tokens": gen,
             "steps": steps,
@@ -407,3 +482,6 @@ class ServingEngine:
             "tokens_per_s": gen / max(wall, 1e-9),
             "t0": t0,
         }
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.stats()
+        return out

@@ -13,7 +13,7 @@ except ImportError:          # container may lack hypothesis — skip properties
     from conftest import hypothesis_fallback
     given, settings, st = hypothesis_fallback()
 
-from repro.serving import PagePool, Request, Scheduler
+from repro.serving import PagePool, PrefixCache, Request, Scheduler
 from repro.serving.page_pool import SCRATCH_PAGE
 
 
@@ -69,14 +69,18 @@ def test_pool_pages_for():
 # ---------------------------------------------------------------------------
 
 def drive_trace(reqs, num_pages=16, page_size=8, max_batch=3,
-                prefill_chunk=4, check_every_step=True):
+                prefill_chunk=4, check_every_step=True,
+                prefix_cache=False):
     """Run a full admit/prefill/decode/retire trace without a model:
     generation is faked by appending dummy token ids. Returns the
-    scheduler after the trace drains."""
+    scheduler after the trace drains. With ``prefix_cache`` retirement
+    parks pages in a radix trie instead of freeing them."""
     pool = PagePool(num_pages, page_size)
     sched = Scheduler(pool, max_batch=max_batch,
                       max_pages=pool.pages_for(64),
-                      prefill_chunk=prefill_chunk)
+                      prefill_chunk=prefill_chunk,
+                      prefix_cache=PrefixCache(pool) if prefix_cache
+                      else None)
     for r in reqs:
         sched.submit(r)
     guard = 0
@@ -270,6 +274,120 @@ def test_scheduler_trace_with_shared_prefix_pages():
         pool.check_invariants()
     assert pool.num_allocated == 0
     assert pool.num_free == pool.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# Prefix-cached scheduler traces: marginal admission accounting, eviction
+# under pressure, and forks composing with cache hits (PR 5 share/free
+# machinery under the radix trie). Trie-level unit and shadow-model tests
+# live in tests/test_prefix_cache.py.
+# ---------------------------------------------------------------------------
+
+def test_cached_trace_prefill_accounting_is_exact():
+    """Every prompt token is either computed by a prefill chunk or served
+    from a cached page — never both, never neither: over a whole trace
+    ``total_prefill_tokens + total_cached_tokens == sum(prompt lens)``,
+    and only the parked pages survive the drain."""
+    specs = [([(5, 3), (12, 1), (1, 6), (20, 4), (7, 2), (3, 3)], 3),
+             ([(16, 2), (16, 2), (16, 2)], 1),     # identical, serialized
+             ([(24, 1), (8, 5), (24, 1), (9, 2)], 2)]
+    for spec, max_batch in specs:      # _mk_reqs prompts share prefixes
+        sched = drive_trace(_mk_reqs(spec), prefix_cache=True,
+                            max_batch=max_batch, page_size=4)
+        cache = sched.prefix_cache
+        assert len(sched.finished) == len(spec)
+        assert sched.total_prefill_tokens + sched.total_cached_tokens \
+            == sum(p for p, _ in spec)
+        assert sched.total_cached_tokens > 0       # sharing happened
+        assert sched.pool.num_allocated == cache.num_pages
+        cache.drop()
+        assert sched.pool.num_allocated == 0
+
+
+def test_cached_trace_marginal_admission_only():
+    """The second of two identical requests is charged only its marginal
+    pages: the free-list drop at admission is total-need minus the cached
+    full pages of its prompt."""
+    pool = PagePool(32, 8)
+    cache = PrefixCache(pool)
+    sched = Scheduler(pool, max_batch=1, max_pages=pool.pages_for(64),
+                      prefill_chunk=4, prefix_cache=cache)
+    prompt = np.arange(1, 25, dtype=np.int32)      # 24 tokens, 3 pages
+    for r in _mk_reqs([(24, 3)]):
+        sched.submit(r)
+    _drain_sched(sched)
+    free_before = pool.num_free
+    req = Request(rid=9, prompt=prompt, max_new_tokens=3)
+    sched.submit(req)
+    sched.admit()
+    seq = sched.slots[0]
+    # limit = 23 caps the hit at 2 full pages (16 tokens)
+    assert seq.cached_tokens == 16
+    need = pool.pages_for(sched.max_tokens(req))
+    assert free_before - pool.num_free == need - 2
+    _drain_sched(sched)
+
+
+def test_cached_trace_evicts_under_pressure():
+    """Disjoint-prefix requests through a pool that can't hold a request
+    plus the previous request's parked pages: admission must evict LRU
+    trie pages (never deadlock), with invariants held at every step."""
+    reqs = [Request(rid=i,
+                    prompt=np.arange(100 * i, 100 * i + 24,
+                                     dtype=np.int32),
+                    max_new_tokens=2) for i in range(4)]
+    pool = PagePool(6, 8)              # 5 usable; each request needs 4
+    cache = PrefixCache(pool)
+    sched = Scheduler(pool, max_batch=1, max_pages=pool.pages_for(64),
+                      prefill_chunk=4, prefix_cache=cache)
+    for r in reqs:
+        sched.submit(r)
+    _drain_sched(sched)
+    assert len(sched.finished) == 4
+    assert cache.stats()["evicted_pages"] >= 6     # 2 per later admission
+    assert pool.num_allocated == cache.num_pages
+
+
+def test_fork_after_hit_outlives_eviction():
+    """A fork taken on a cache hit (beam fork / a second live request)
+    pins the pages: the trie cannot evict them while the fork holds its
+    ownership, and they return to the free list only after BOTH the trie
+    and the fork let go."""
+    sched = drive_trace(_mk_reqs([(16, 2)]), prefix_cache=True)
+    cache, pool = sched.prefix_cache, sched.pool
+    assert cache.num_pages == 2                    # 17 resident tokens
+    pages, n = cache.match(np.arange(1, 17, dtype=np.int32))
+    assert n == 16
+    pool.share(pages)                              # fork after the hit
+    assert cache.drop() == 0                       # pinned: nothing evicts
+    assert cache.num_pages == 2
+    pool.free([pages[1]])                          # fork releases the tail
+    assert cache.drop() == 1                       # tail leaf now evicts
+    sched.check_invariants()
+    pool.free([pages[0]])
+    assert cache.drop() == 1
+    assert pool.num_allocated == 0
+    pool.check_invariants()
+
+
+def _drain_sched(sched):
+    guard = 0
+    while sched.has_work():
+        guard += 1
+        assert guard < 10_000, "trace did not drain"
+        sched.retire_finished()
+        sched.admit()
+        chunk = sched.next_prefill()
+        if chunk is not None:
+            b, tokens, start, valid = chunk
+            sched.mark_prefilled(b, valid)
+            if sched.slots[b].prompt_done:
+                sched.slots[b].req.tokens.append(1)
+        mask = sched.decode_mask()
+        for b in np.nonzero(mask)[0]:
+            sched.slots[int(b)].req.tokens.append(1)
+        sched.advance_decoded(mask)
+        sched.check_invariants()
 
 
 # ---------------------------------------------------------------------------

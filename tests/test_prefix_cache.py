@@ -1,0 +1,524 @@
+"""Cross-request prefix caching (repro/serving/prefix_cache.py): radix
+trie invariants driven by a shadow dict-of-prefixes model (property-based
+where hypothesis is available, seeded otherwise), scheduler integration
+(marginal admission, parking at retire, LRU eviction), the golden
+trace fixture (tests/fixtures/prefix_trace/), and the determinism
+contract — prefix-cached serving is token-for-token the no-cache paged
+path, including under kv8 int8 pools and forced-host TP=2."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # container may lack hypothesis — skip properties
+    from conftest import hypothesis_fallback
+    given, settings, st = hypothesis_fallback()
+
+from repro.serving import PagePool, PrefixCache, Request, Scheduler
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures",
+                        "prefix_trace")
+
+
+# ---------------------------------------------------------------------------
+# Trie unit tests: insert / match / evict round-trips
+# ---------------------------------------------------------------------------
+
+def _park(pool, cache, tokens, rid=None):
+    """Simulate a retiring request ceding freshly-prefilled pages for
+    ``tokens`` (must be page-aligned) to the cache."""
+    pages = pool.alloc(len(tokens) // pool.page_size)
+    assert pages is not None
+    return cache.insert(tokens, pages, rid=rid)
+
+
+def test_insert_match_roundtrip():
+    pool = PagePool(16, 4)
+    cache = PrefixCache(pool)
+    toks = list(range(10, 22))                     # 3 full pages
+    parked, deduped = _park(pool, cache, toks)
+    assert (parked, deduped) == (3, 0)
+    pages, n = cache.match(toks)
+    assert n == 12 and len(pages) == 3
+    # partial match: only full pages of the query's prefix count
+    pages, n = cache.match(toks[:7])
+    assert n == 4 and len(pages) == 1
+    # the limit caps matching (admission passes prompt_len - 1)
+    pages, n = cache.match(toks, limit=11)
+    assert n == 8 and len(pages) == 2
+    # diverging tokens stop the walk at the shared prefix
+    pages, n = cache.match(toks[:4] + [99, 99, 99, 99])
+    assert n == 4
+    assert cache.match([1, 2, 3, 4]) == ([], 0)
+    cache.check_invariants()
+
+
+def test_insert_dedupes_duplicate_prefill():
+    pool = PagePool(16, 4)
+    cache = PrefixCache(pool)
+    toks = list(range(8))
+    _park(pool, cache, toks)
+    free_before = pool.num_free
+    parked, deduped = _park(pool, cache, toks)     # same path again
+    assert (parked, deduped) == (0, 2)
+    assert pool.num_free == free_before            # duplicate pages freed
+    # a diverging suffix grafts onto the canonical shared prefix
+    parked, deduped = _park(pool, cache, toks[:4] + [50, 51, 52, 53])
+    assert (parked, deduped) == (1, 1)
+    assert len(cache.prefixes()) == 3
+    cache.check_invariants()
+
+
+def test_insert_rejects_ragged_tokens():
+    pool = PagePool(8, 4)
+    cache = PrefixCache(pool)
+    pages = pool.alloc(1)
+    with pytest.raises(ValueError, match="insert"):
+        cache.insert([1, 2, 3], pages)
+    pool.free(pages)
+
+
+def test_evict_lru_leaves_first():
+    pool = PagePool(16, 4)
+    cache = PrefixCache(pool)
+    _park(pool, cache, [1, 2, 3, 4, 5, 6, 7, 8])   # chain a: 2 pages
+    _park(pool, cache, [9, 10, 11, 12])            # chain b: 1 page
+    cache.match([1, 2, 3, 4, 5, 6, 7, 8])          # touch a -> b is LRU
+    assert cache.evict(1) == 1
+    assert ([], 0) == cache.match([9, 10, 11, 12])     # b evicted
+    assert cache.match([1, 2, 3, 4, 5, 6, 7, 8])[1] == 8
+    # evicting 2 more consumes chain a leaf-first (parent becomes leaf)
+    assert cache.evict(2) == 2
+    assert cache.num_pages == 0
+    assert pool.num_allocated == 0
+    cache.check_invariants()
+
+
+def test_evict_skips_pages_shared_with_live_requests():
+    pool = PagePool(16, 4)
+    cache = PrefixCache(pool)
+    toks = list(range(8))
+    _park(pool, cache, toks)
+    pages, n = cache.match(toks)
+    pool.share(pages)                              # live request co-owns
+    assert cache.evict(10) == 0                    # nothing evictable
+    assert cache.match(toks)[1] == 8
+    pool.free(pages)                               # request retires
+    assert cache.evict(10) == 2
+    assert pool.num_allocated == 0
+    cache.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Shadow dict-of-prefixes model: random insert/match/evict traces
+# ---------------------------------------------------------------------------
+
+def drive_shadow_trace(ops, num_pages=24, page_size=4):
+    """Interpret (op, a, b) steps against a PrefixCache and an
+    independent shadow model, asserting agreement after EVERY op:
+
+      ("park", seed, n_pages)  — a retiring request cedes pages for a
+                                 random token seq (biased to share
+                                 prefixes via a small token alphabet)
+      ("acquire", seed, _)     — match + share (a live request pins)
+      ("release", i, _)        — free acquired handle i (request ends)
+      ("evict", n, _)          — reclaim up to n pages
+
+    Shadow state: prefix-tuple -> page dict (insert/match agreement),
+    plus live handles (refcount agreement). Eviction is checked
+    structurally: only refcount-1 leaves leave the trie, exactly as many
+    as reported, never pinned pages."""
+    pool = PagePool(num_pages, page_size)
+    cache = PrefixCache(pool)
+    shadow = {}                    # prefix tuple -> page
+    handles = []                   # live acquired page lists
+
+    def tokens_for(seed, n_tokens):
+        rng = np.random.default_rng(seed)
+        return [int(t) for t in rng.integers(0, 3, n_tokens)]
+
+    def check():
+        cache.check_invariants()
+        assert cache.prefixes() == shadow
+        # refcount model: cache ownership + one per live handle
+        want = {}
+        for p in shadow.values():
+            want[p] = want.get(p, 0) + 1
+        for h in handles:
+            for p in h:
+                want[p] = want.get(p, 0) + 1
+        for p in range(1, num_pages):
+            assert pool.refcount(p) == want.get(p, 0), \
+                f"page {p}: pool {pool.refcount(p)} != shadow {want.get(p, 0)}"
+
+    for op, a, b in ops:
+        if op == "park":
+            n = 1 + b % 3
+            toks = tokens_for(a, n * page_size)
+            pages = pool.alloc(n)
+            if pages is None:
+                continue           # pool full: a real scheduler would evict
+            cache.insert(toks, pages)
+            node = ()
+            for i, page in zip(range(0, n * page_size, page_size), pages):
+                node = node + tuple(toks[i:i + page_size])
+                if node not in shadow:
+                    shadow[node] = page
+        elif op == "acquire":
+            toks = tokens_for(a, 3 * page_size)
+            pages, n = cache.match(toks)
+            # shadow agreement on the match result itself
+            want = []
+            node = ()
+            for i in range(0, len(toks), page_size):
+                node = node + tuple(toks[i:i + page_size])
+                if node not in shadow:
+                    break
+                want.append(shadow[node])
+            assert pages == want and n == len(want) * page_size
+            if pages:
+                pool.share(pages)
+                handles.append(list(pages))
+        elif op == "release" and handles:
+            pool.free(handles.pop(a % len(handles)))
+        elif op == "evict":
+            before = dict(shadow)
+            pinned = {p for h in handles for p in h}
+            freed = cache.evict(a % 4)
+            now = cache.prefixes()
+            removed = {k: v for k, v in before.items() if k not in now}
+            assert len(removed) == freed
+            assert now == {k: v for k, v in before.items() if k in now}
+            for k, page in removed.items():
+                assert page not in pinned, "evicted a pinned page"
+                # leaves-first: nothing remaining extends an evicted path
+                assert not any(n2[:len(k)] == k for n2 in now)
+            shadow = now
+        check()
+    return pool, cache, shadow, handles
+
+
+def _drain_shadow(pool, cache, shadow, handles):
+    while handles:
+        pool.free(handles.pop())
+    assert cache.evict(len(shadow)) == len(shadow)
+    assert cache.prefixes() == {}
+    pool.check_invariants()
+    assert pool.num_allocated == 0
+    assert pool.num_free == pool.num_pages - 1
+
+
+def test_shadow_trace_seeded():
+    rng = np.random.default_rng(11)
+    names = ("park", "acquire", "release", "evict")
+    for _ in range(25):
+        ops = [(names[int(rng.integers(0, 4))], int(rng.integers(0, 8)),
+                int(rng.integers(0, 8)))
+               for _ in range(int(rng.integers(1, 40)))]
+        pool, cache, shadow, handles = drive_shadow_trace(
+            ops, num_pages=int(rng.integers(6, 28)))
+        _drain_shadow(pool, cache, shadow, handles)
+
+
+@given(st.lists(st.tuples(st.sampled_from(["park", "acquire", "release",
+                                           "evict"]),
+                          st.integers(0, 8), st.integers(0, 8)),
+                min_size=1, max_size=50),
+       st.integers(6, 28))
+@settings(max_examples=50, deadline=None)
+def test_property_shadow_trace_agreement(ops, num_pages):
+    """Every interleaving of parks, pinned acquires, releases, and
+    evictions keeps the trie in exact agreement with the shadow
+    dict-of-prefixes and the pool leak-free (checked after every op)."""
+    pool, cache, shadow, handles = drive_shadow_trace(
+        ops, num_pages=num_pages)
+    _drain_shadow(pool, cache, shadow, handles)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler integration: host-only trace driver with a prefix cache
+# ---------------------------------------------------------------------------
+
+def drive_cached_trace(sched, *, log=None, step0=0):
+    """Drain a scheduler (prefix cache attached) without a model; fake
+    generation appends deterministic per-request token ids. Optionally
+    collects the cache's event log stamped with step indices."""
+    cache = sched.prefix_cache
+    guard, step = 0, step0
+    while sched.has_work():
+        guard += 1
+        assert guard < 10_000, "trace did not drain"
+        n_ev = len(cache.events) if cache is not None else 0
+        sched.retire_finished()
+        sched.admit()
+        chunk = sched.next_prefill()
+        if chunk is not None:
+            b, tokens, start, valid = chunk
+            sched.mark_prefilled(b, valid)
+            seq = sched.slots[b]
+            if seq.prompt_done:
+                seq.req.tokens.append(seq.req.rid % 5 + 1)
+        mask = sched.decode_mask()
+        for b in np.nonzero(mask)[0]:
+            seq = sched.slots[int(b)]
+            seq.req.tokens.append(seq.req.rid % 5 + 1)
+        sched.advance_decoded(mask)
+        sched.check_invariants()
+        if log is not None:
+            for ev in cache.events[n_ev:]:
+                log.append({"step": step, **ev})
+        step += 1
+    # The final retire always happens inside the loop: a finished seq
+    # keeps its slot (has_work() true) until the next iteration parks it.
+    sched.check_invariants()
+    return step
+
+
+def _cached_sched(num_pages=32, page_size=4, max_batch=2, chunk=4,
+                  record=False):
+    pool = PagePool(num_pages, page_size)
+    cache = PrefixCache(pool, record_events=record)
+    sched = Scheduler(pool, max_batch=max_batch,
+                      max_pages=pool.pages_for(64), prefill_chunk=chunk,
+                      prefix_cache=cache)
+    return pool, cache, sched
+
+
+def test_retired_prefix_hittable_by_next_request():
+    """Regression for the retire path: a retired request's prefix must be
+    parked (not freed) and hittable by the very next request."""
+    pool, cache, sched = _cached_sched()
+    prompt = np.arange(100, 112, dtype=np.int32)       # 3 full pages
+    sched.submit(Request(rid=0, prompt=prompt, max_new_tokens=2))
+    drive_cached_trace(sched)
+    assert cache.num_pages > 0, "retire freed pages instead of parking"
+    assert pool.num_allocated == cache.num_pages
+    sched.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=2))
+    drive_cached_trace(sched)
+    s = cache.stats()
+    assert s["hits"] == 1 and s["hit_tokens"] >= 8, s
+    assert sched.total_cached_tokens == s["hit_tokens"]
+
+
+def test_retire_parks_generated_tokens_too():
+    """The parked path covers prompt + generated tokens (all resident
+    tokens), so a follow-up whose prompt extends the full conversation
+    hits past the original prompt."""
+    pool, cache, sched = _cached_sched(page_size=4)
+    prompt = np.arange(50, 58, dtype=np.int32)          # 8 tokens
+    sched.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+    drive_cached_trace(sched)
+    # resident = 8 prompt + 4 generated (last token never written) = 3 pages
+    assert cache.num_pages == 3
+    gen = [0 % 5 + 1] * 4
+    follow = np.concatenate([prompt, np.asarray(gen, np.int32),
+                             np.arange(90, 94, dtype=np.int32)])
+    pages, n = cache.match(follow)
+    assert n == 12, "generated tokens not hittable"
+
+
+def test_fully_cached_prompt_still_prefills_last_token():
+    """A prompt whose every page is cached is capped at prompt_len - 1:
+    the last token must prefill to produce the first-token logits."""
+    pool, cache, sched = _cached_sched(page_size=4, chunk=4)
+    prompt = np.arange(10, 18, dtype=np.int32)          # exactly 2 pages
+    sched.submit(Request(rid=0, prompt=prompt, max_new_tokens=3))
+    drive_cached_trace(sched)
+    p0 = sched.total_prefill_tokens
+    sched.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=3))
+    drive_cached_trace(sched)
+    # only 1 of 2 pages may be reused; the 4-token tail chunk prefills
+    assert sched.total_cached_tokens == 4
+    assert sched.total_prefill_tokens - p0 == 4
+
+
+def test_eviction_under_pressure_makes_admission_succeed():
+    """A pool-sized request admits only after LRU eviction reclaims
+    refcount-1 parked pages."""
+    pool, cache, sched = _cached_sched(num_pages=9, page_size=4,
+                                       max_batch=1)
+    sched.submit(Request(rid=0, prompt=np.arange(1, 17, dtype=np.int32),
+                         max_new_tokens=2))
+    drive_cached_trace(sched)
+    parked = cache.num_pages
+    assert parked >= 4                                  # pool mostly parked
+    # A disjoint-prefix request needs more pages than are free: admission
+    # must evict parked pages rather than deadlock.
+    sched.submit(Request(rid=1,
+                         prompt=np.arange(60, 76, dtype=np.int32),
+                         max_new_tokens=2))
+    drive_cached_trace(sched)
+    assert len(sched.finished) == 2
+    assert cache.stats()["evicted_pages"] > 0
+    sched.check_invariants()
+
+
+def test_marginal_page_accounting_on_hit():
+    """Admission of a hitting request allocates ONLY the marginal pages:
+    the free-list drop equals total-need minus cached pages."""
+    pool, cache, sched = _cached_sched(num_pages=32, page_size=4,
+                                       max_batch=1, chunk=4)
+    prompt = np.arange(100, 112, dtype=np.int32)        # 12 tokens
+    sched.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+    drive_cached_trace(sched)
+    free_before = pool.num_free
+    req = Request(rid=1, prompt=prompt.copy(), max_new_tokens=5)
+    sched.submit(req)
+    sched.admit()
+    seq = sched.slots[0]
+    assert seq is not None and seq.cached_tokens == 8   # 2 full pages
+    total_need = pool.pages_for(sched.max_tokens(req))
+    assert free_before - pool.num_free == total_need - 2
+    assert seq.pages[:2] == cache.match(prompt, limit=8)[0]
+    drive_cached_trace(sched)
+
+
+# ---------------------------------------------------------------------------
+# Golden fixture: byte-for-byte pinned cache-hit/evict log
+# ---------------------------------------------------------------------------
+
+def _golden_log():
+    """Drive the committed trace deterministically and serialize the
+    per-step cache event log."""
+    with open(os.path.join(FIXTURES, "trace.json")) as f:
+        spec = json.load(f)
+    pool, cache, sched = _cached_sched(
+        num_pages=spec["num_pages"], page_size=spec["page_size"],
+        max_batch=spec["max_batch"], chunk=spec["prefill_chunk"],
+        record=True)
+    log, step = [], 0
+    for batch in spec["batches"]:
+        for r in batch:
+            sched.submit(Request(
+                rid=r["rid"], prompt=np.asarray(r["prompt"], np.int32),
+                max_new_tokens=r["gen"]))
+        step = drive_cached_trace(sched, log=log, step0=step)
+    log.append({"op": "final_stats", **cache.stats()})
+    return log
+
+
+def test_golden_prefix_trace_log():
+    """The shared-prefix request trace under tests/fixtures/prefix_trace/
+    must reproduce its committed per-step hit/insert/evict log exactly
+    (same pages, same steps, same stats) — any drift in admission order,
+    LRU policy, or dedupe behavior shows up as a diff here."""
+    got = _golden_log()
+    with open(os.path.join(FIXTURES, "expected_log.json")) as f:
+        want = json.load(f)
+    assert got == want, (
+        "prefix-trace event log drifted from the golden fixture;\n"
+        "if the change is intentional, regenerate with:\n"
+        "  PYTHONPATH=src:tests python -c 'import json, test_prefix_cache"
+        " as t; print(json.dumps(t._golden_log(), indent=1))'"
+        f"\ngot:\n{json.dumps(got, indent=1)}")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end determinism: cached == no-cache paged, incl. kv8 and TP=2
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="pfx-t", family="dense", n_layers=2,
+                       d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                       d_ff=64, vocab_size=128, dtype="float32")
+
+
+def _shared_prefix_reqs(rng, vocab, n=6, sys_len=12):
+    sysp = rng.integers(1, vocab, sys_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        sfx = rng.integers(1, vocab,
+                           int(rng.integers(1, 6))).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=np.concatenate([sysp, sfx]),
+                            max_new_tokens=int(rng.integers(1, 5))))
+    return reqs
+
+
+def _run_engines(quant=None):
+    import copy
+
+    import jax
+
+    from repro.models import lm
+    from repro.models.param import init_params
+    from repro.serving import ServingEngine
+
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    reqs = _shared_prefix_reqs(np.random.default_rng(3), cfg.vocab_size)
+    kw = dict(num_pages=40, page_size=4, max_batch=3, max_seq_len=32,
+              prefill_chunk=4, quant=quant)
+    base = ServingEngine(cfg, params, **kw)
+    base.run(copy.deepcopy(reqs))
+    cached = ServingEngine(cfg, params, prefix_cache=True, **kw)
+    cached.run(copy.deepcopy(reqs))
+    return base, cached
+
+
+@pytest.mark.parametrize("quant", [None, "kv8"])
+def test_trace_replay_cached_equals_nocache(quant):
+    """Seeded multi-request shared-prefix trace: the prefix-cached engine
+    generates token-for-token what the no-cache paged engine generates
+    (float32 pools and kv8 int8 pools), avoids real prefill work, and
+    leaks nothing beyond the parked pages."""
+    base, cached = _run_engines(quant=quant)
+    want = {r.rid: r.tokens for r in base.scheduler.finished}
+    got = {r.rid: r.tokens for r in cached.scheduler.finished}
+    assert got == want
+    s = cached.prefix_cache.stats()
+    assert s["hit_tokens"] > 0 and s["hits"] > 0, s
+    assert cached.scheduler.total_prefill_tokens \
+        < base.scheduler.total_prefill_tokens
+    cached.scheduler.check_invariants()
+    assert cached.pool.num_allocated == cached.prefix_cache.num_pages
+    assert base.pool.num_allocated == 0
+
+
+def test_trace_replay_tp2_cached_equals_single_device():
+    """TP=2 over forced host devices: the prefix-cached sharded engine
+    matches the single-device no-cache engine token-for-token (the pool
+    and trie are host-side and shard-oblivious; kv pages are
+    head-sharded)."""
+    from conftest import run_in_subprocess
+    out = run_in_subprocess("""
+import copy, os, tempfile
+os.environ["REPRO_TUNING_CACHE"] = tempfile.mkdtemp()
+import jax, numpy as np
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.param import init_params
+from repro.serving import Request, ServingEngine
+
+cfg = ModelConfig(name="pfx-tp", family="dense", n_layers=2, d_model=32,
+                  n_heads=8, n_kv_heads=4, head_dim=8, d_ff=64,
+                  vocab_size=128, dtype="float32")
+params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+rng = np.random.default_rng(3)
+sysp = rng.integers(1, cfg.vocab_size, 12).astype(np.int32)
+reqs = []
+for i in range(5):
+    sfx = rng.integers(1, cfg.vocab_size,
+                       int(rng.integers(1, 6))).astype(np.int32)
+    reqs.append(Request(rid=i, prompt=np.concatenate([sysp, sfx]),
+                        max_new_tokens=int(rng.integers(1, 5))))
+kw = dict(num_pages=40, page_size=4, max_batch=3, max_seq_len=32,
+          prefill_chunk=4)
+e1 = ServingEngine(cfg, params, **kw)
+e1.run(copy.deepcopy(reqs))
+want = {r.rid: r.tokens for r in e1.scheduler.finished}
+e2 = ServingEngine(cfg, params, tp=2, prefix_cache=True, **kw)
+e2.run(copy.deepcopy(reqs))
+got = {r.rid: r.tokens for r in e2.scheduler.finished}
+assert got == want, (got, want)
+s = e2.prefix_cache.stats()
+assert s["hit_tokens"] > 0, s
+e2.scheduler.check_invariants()
+assert e2.pool.num_allocated == e2.prefix_cache.num_pages
+print("OK", s["hit_tokens"])
+""", devices=2, timeout=900)
+    assert "OK" in out
