@@ -1,0 +1,198 @@
+"""Degraded-mode survival: serving a trace whose paged_decode kernel
+always fails.
+
+The fault-tolerance claim (DESIGN.md section 13): a kernel failure is a
+performance event, not a correctness event. This benchmark injects an
+always-raising fault into every ``paged_decode`` dispatch and serves the
+full trace anyway:
+
+  * every tuned config gets quarantined at dispatch (visible in the
+    tuner's stats and the persisted cache entry),
+  * dispatch degrades through the runner-up portfolio to the reference
+    oracle impl — the jitted steps compile against ``ref.paged_decode``,
+  * ZERO requests fail; 100% reach a terminal state — gated, not just
+    reported,
+  * tokens/s of the degraded run vs the healthy tuned run is the price
+    of survival (the reference impl gathers pages densely per step).
+
+A second section measures the preemption path under page-pool pressure:
+the same trace through an ample pool and through a pool tight enough to
+force decode-growth preemptions must generate IDENTICAL tokens
+(exact-resume), also gated.
+
+Run:  PYTHONPATH=src python benchmarks/fault_tolerance.py [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+RESULTS = os.path.join(os.path.dirname(__file__), os.pardir, "results")
+
+
+def make_trace(n, rng, *, vocab, p_lo=12, p_hi=32, g_lo=4, g_hi=12):
+    from repro.serving import Request
+    return [Request(rid=i,
+                    prompt=rng.integers(1, vocab,
+                                        int(rng.integers(p_lo, p_hi + 1))
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(g_lo, g_hi + 1)))
+            for i in range(n)]
+
+
+def run_once(cfg, params, reqs, *, num_pages, page_size, max_batch,
+             prefill_chunk, max_seq_len, plan=None):
+    from repro.serving import ServingEngine
+    from repro.serving import faults as fault_lib
+
+    reqs = copy.deepcopy(reqs)
+    try:
+        if plan is not None:
+            fault_lib.install(plan)
+        engine = ServingEngine(cfg, params, num_pages=num_pages,
+                               page_size=page_size, max_batch=max_batch,
+                               max_seq_len=max_seq_len,
+                               prefill_chunk=prefill_chunk)
+        t0 = time.perf_counter()
+        res = engine.run(reqs)
+        wall = time.perf_counter() - t0
+    finally:
+        if plan is not None:
+            fault_lib.install(None)
+    engine.scheduler.check_invariants()
+    assert engine.pool.num_allocated == 0, "page leak"
+    tokens = {r.rid: list(r.tokens) for r in engine.scheduler.finished}
+    return {
+        "tokens_per_s": round(res["generated_tokens"] / max(wall, 1e-9), 2),
+        "wall_s": round(wall, 3),
+        "generated_tokens": res["generated_tokens"],
+        "steps": res["steps"],
+        "preemptions": res["preemptions"],
+        "resumes": res["resumes"],
+        "failed_requests": res["failed_requests"],
+        "timed_out_requests": res["timed_out_requests"],
+        "terminal_requests": res["terminal_requests"],
+    }, tokens
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small trace + truncated search (CI smoke)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from serving_throughput import tune_paged_kernel
+
+    from repro.configs import get_config
+    from repro.core import tuner as tuner_lib
+    from repro.models import lm
+    from repro.models.param import init_params
+    from repro.serving import FaultEvent, FaultPlan
+
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    n = args.requests or (8 if args.fast else 16)
+    reqs = make_trace(n, np.random.default_rng(0), vocab=cfg.vocab_size)
+
+    page_size, chunk = 16, 16
+    pmax = max(r.prompt_len for r in reqs)
+    gmax = max(r.max_new_tokens for r in reqs)
+    # Worst resident view per request: chunk-padded prefill, chunk-padded
+    # resume view (prompt + all-but-last generated), final length — the
+    # same bound Scheduler.max_tokens enforces.
+    max_seq_len = max(
+        max(-(-r.prompt_len // chunk) * chunk,
+            -(-(r.prompt_len + r.max_new_tokens - 1) // chunk) * chunk,
+            r.prompt_len + r.max_new_tokens)
+        for r in reqs)
+    pages_per_seq = -(-max_seq_len // page_size)
+    ample = 1 + args.max_batch * pages_per_seq
+    # Tight: any one sequence fits end-to-end (no capacity rejects), but
+    # concurrent decode growth must exhaust the pool and preempt.
+    tight = 1 + pages_per_seq + 1
+
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    bench_tuner, old_tuner, tuning = tune_paged_kernel(
+        cfg, args.max_batch, page_size, max_seq_len, args.fast)
+    kw = dict(page_size=page_size, max_batch=args.max_batch,
+              prefill_chunk=chunk, max_seq_len=max_seq_len)
+    try:
+        print(f"[fault_tolerance] paged_decode tuned: {tuning['config']} "
+              f"({tuning['n_evaluated']} evals)")
+        healthy, healthy_tokens = run_once(cfg, params, reqs,
+                                           num_pages=ample, **kw)
+
+        q0 = bench_tuner.stats()["quarantines"]
+        # Every paged_decode dispatch raises: the tuned config, every
+        # runner-up, and the heuristic default all get quarantined; the
+        # jitted steps compile against the reference oracle impl.
+        plan = FaultPlan([FaultEvent(kind="kernel_exception",
+                                     kernel="paged_decode",
+                                     times=10**6)])
+        degraded, degraded_tokens = run_once(cfg, params, reqs,
+                                             num_pages=ample, plan=plan,
+                                             **kw)
+        dstats = bench_tuner.stats()
+        quarantines = dstats["quarantines"] - q0
+
+        preempt, preempt_tokens = run_once(cfg, params, reqs,
+                                           num_pages=tight, **kw)
+    finally:
+        tuner_lib.set_default_tuner(old_tuner)
+
+    # -- gates: survival is correctness, not best-effort -------------------
+    assert degraded["failed_requests"] == 0, \
+        "degraded mode dropped requests"
+    assert degraded["terminal_requests"] == n, \
+        "degraded mode left non-terminal requests"
+    assert quarantines >= 1, "no config was quarantined"
+    assert len(plan.log) >= 1, "no fault ever fired"
+    assert preempt["preemptions"] > 0, \
+        f"tight pool ({tight} pages) never preempted"
+    assert preempt_tokens == healthy_tokens, \
+        "exact-resume violated: preempted trace diverged"
+
+    ratio = degraded["tokens_per_s"] / max(healthy["tokens_per_s"], 1e-9)
+    report = {
+        "arch": cfg.name,
+        "trace": {"requests": n, "prompt_max": pmax, "gen_max": gmax,
+                  "max_batch": args.max_batch, "page_size": page_size,
+                  "prefill_chunk": chunk, "max_seq_len": max_seq_len,
+                  "pool_pages_ample": ample, "pool_pages_tight": tight},
+        "healthy": healthy,
+        "degraded": degraded,
+        "degraded_quarantines": quarantines,
+        "degraded_faults_fired": len(plan.log),
+        "degraded_over_healthy_tokens_per_s": round(ratio, 3),
+        "degraded_tokens_identical_to_healthy":
+            degraded_tokens == healthy_tokens,
+        "preemption_tight_pool": preempt,
+        "preempt_tokens_identical_to_ample": True,
+        "paged_decode_tuning": tuning,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "BENCH_fault_tolerance.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(json.dumps(report, indent=1))
+    print(f"[fault_tolerance] degraded mode survived: 0/{n} failed, "
+          f"{quarantines} configs quarantined, "
+          f"{ratio:.2f}x healthy tokens/s; "
+          f"{preempt['preemptions']} preemptions / "
+          f"{preempt['resumes']} resumes token-identical -> {out}")
+
+
+if __name__ == "__main__":
+    main()

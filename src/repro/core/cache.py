@@ -47,6 +47,12 @@ def env_fingerprint(backend_name: str, chip_name: str) -> Dict[str, str]:
     }
 
 
+def config_key(config: Config) -> str:
+    """Canonical identity of a config for quarantine / runner-up
+    comparisons (order-insensitive, JSON-stable)."""
+    return json.dumps(dict(config), sort_keys=True, default=repr)
+
+
 @dataclasses.dataclass
 class CacheEntry:
     config: Config
@@ -57,11 +63,22 @@ class CacheEntry:
     timestamp: float
     compile_s: float = 0.0   # total lower+compile seconds spent tuning
     measure_s: float = 0.0   # total device-timing seconds spent tuning
+    # The "A Few Fit Most" fallback portfolio: the next-best finite trials
+    # from the winning search ([{"config": ..., "metric": ...}, ...]), the
+    # degraded-mode candidates when the winner is quarantined at runtime.
+    runners_up: list = dataclasses.field(default_factory=list)
+    # Configs that raised or produced non-finite output at serve time —
+    # never served again (survives re-tunes; the search skips them).
+    quarantined: list = dataclasses.field(default_factory=list)
 
     def failed(self) -> bool:
         """True for entries recording an unsuccessful search (metric=inf).
         Kept for visibility, never to be served as a tuned config."""
         return not math.isfinite(self.metric)
+
+    def is_quarantined(self, config: Config) -> bool:
+        key = config_key(config)
+        return any(config_key(c) == key for c in self.quarantined)
 
     def to_json(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -77,6 +94,8 @@ class CacheEntry:
             timestamp=float(d.get("timestamp", 0.0)),
             compile_s=float(d.get("compile_s", 0.0)),
             measure_s=float(d.get("measure_s", 0.0)),
+            runners_up=[dict(r) for r in d.get("runners_up", [])],
+            quarantined=[dict(c) for c in d.get("quarantined", [])],
         )
 
 
@@ -164,6 +183,19 @@ class TuningCache:
         if not space.is_valid(entry.config, ctx):
             return None
         return entry
+
+    def get_raw(self, kernel_name: str, kernel_version: int,
+                space: ConfigSpace, ctx: TuningContext
+                ) -> Optional[CacheEntry]:
+        """The stored entry with *no* validity filtering — failed markers,
+        stale fingerprints and constraint-invalidated configs included.
+        The quarantine path uses this to preserve an entry's quarantine
+        list even when ``get`` would treat it as a miss."""
+        key = cache_key(kernel_name, kernel_version, space, ctx)
+        with self._lock:
+            self._load()
+            raw = self._db.get(key) or self._overlay.get(key)
+        return CacheEntry.from_json(raw) if raw is not None else None
 
     def put(self, kernel_name: str, kernel_version: int, space: ConfigSpace,
             ctx: TuningContext, entry: CacheEntry) -> None:

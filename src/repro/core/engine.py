@@ -146,8 +146,14 @@ class TuningEngine:
                     if prep.call is None:
                         metric, measure_s = math.inf, 0.0
                     else:
-                        metric, measure_s = self.backend.time_prepared(
-                            prep, fidelity=fid)
+                        try:
+                            metric, measure_s = self.backend.time_prepared(
+                                prep, fidelity=fid)
+                        except Exception:
+                            # A config that compiles but blows up when run
+                            # (hostile shapes, runtime asserts) is a failed
+                            # trial, never a failed batch.
+                            metric, measure_s = math.inf, 0.0
                     by_hash[hkey] = metric
                     trials.append(Trial(p.config, metric, fidelity=fid,
                                         compile_s=p.lower_s + prep.compile_s,

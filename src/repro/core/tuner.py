@@ -47,9 +47,11 @@ from __future__ import annotations
 import copy
 import dataclasses
 import logging
+import math
 import os
 import threading
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeoutError
 from typing import Callable, Dict, Iterable, List, Optional, Tuple, Union
 
 from repro.core import cache as cache_lib
@@ -150,9 +152,15 @@ class Autotuner:
             pool=(measure_lib.CompilePool(compile_workers)
                   if compile_workers else None))
         self._stats = {"hits": 0, "misses": 0, "tunes": 0, "heuristic_uses": 0,
-                       "background_tunes": 0, "failed_retunes": 0}
+                       "background_tunes": 0, "failed_retunes": 0,
+                       "quarantines": 0, "fallback_serves": 0}
         self._per_kernel: Dict[str, Dict[str, int]] = {}
         self._stats_lock = threading.Lock()
+        # Last (ctx, config) served per kernel name: the serving engine's
+        # non-finite guard quarantines through this — under jit the
+        # dispatch happened at trace time, long before NaNs surface.
+        self._last_dispatch: Dict[
+            str, Tuple[TuningContext, Config]] = {}
         self._bg_thread: Optional[threading.Thread] = None
         self._bg_stop = threading.Event()
 
@@ -209,7 +217,13 @@ class Autotuner:
             result = strat.run(kernel.space, ctx,
                                self.backend.evaluator(kernel, ctx))
         self._bump("tunes", kernel=kernel.name)
-        if result.best is None:
+        # Quarantined configs survive re-tunes: a config that failed at
+        # serve time must never win again just because it *measures* fine.
+        prior = self.cache.get_raw(kernel.name, kernel.version,
+                                   kernel.space, ctx)
+        quarantined = list(prior.quarantined) if prior is not None else []
+        winner, winner_metric, runners_up = _select_clean(result, quarantined)
+        if winner is None:
             # Nothing measurable — fall back to the structural default but
             # record the failure so it is visible, not silent.
             cfg = kernel.default_config(ctx)
@@ -220,9 +234,11 @@ class Autotuner:
                 compile_s=result.compile_s, measure_s=result.measure_s)
         else:
             entry = cache_lib.make_entry(
-                result.best, result.best_metric, result.evaluations,
+                winner, winner_metric, result.evaluations,
                 strat.name, self.backend.name, _chip_name(self.backend),
                 compile_s=result.compile_s, measure_s=result.measure_s)
+            entry.runners_up = runners_up
+        entry.quarantined = quarantined
         self.cache.put(kernel.name, kernel.version, kernel.space, ctx, entry)
         log.info("tuned %s ctx=%s -> %s (%.3g s/call, %d evals, "
                  "compile %.2fs / measure %.2fs)",
@@ -233,7 +249,9 @@ class Autotuner:
     def tune_many(self, items: Iterable[Tuple[KernelRef, TuningContext]],
                   strategy: Optional[search_lib.SearchStrategy] = None,
                   max_workers: Optional[int] = None,
-                  return_exceptions: bool = False
+                  return_exceptions: bool = False,
+                  timeout_s: Optional[float] = None,
+                  retries: int = 0
                   ) -> List[Union[cache_lib.CacheEntry, BaseException]]:
         """Tune independent (kernel, ctx) pairs concurrently.
 
@@ -242,6 +260,14 @@ class Autotuner:
         fairly under the process-wide device lock; cache writes are
         serialized by the TuningCache lock. With ``return_exceptions`` a
         failing pair yields its exception instead of aborting the batch.
+
+        A hostile config can never kill the batch: a pair that keeps
+        raising after ``retries`` extra attempts records a failed
+        (metric=inf) cache entry — visible, never served — and the rest of
+        the batch completes. ``timeout_s`` is a *soft* per-pair deadline:
+        a pair still tuning after it yields ``TimeoutError`` (and the
+        failed marker) while its worker thread is left to finish in the
+        background — Python threads cannot be killed.
         """
         pairs = [(self.resolve(k), ctx) for k, ctx in items]
         if not pairs:
@@ -251,16 +277,41 @@ class Autotuner:
         workers = max_workers or min(len(pairs),
                                      max(1, (os.cpu_count() or 2) // 2))
 
+        def mark_failed(pair, label):
+            kernel, ctx = pair
+            entry = cache_lib.make_entry(
+                kernel.default_config(ctx), float("inf"), 0, label,
+                self.backend.name, _chip_name(self.backend))
+            self.cache.put(kernel.name, kernel.version, kernel.space, ctx,
+                           entry)
+
         def one(pair):
-            return self.tune(pair[0], pair[1], strategy)
+            last: Optional[BaseException] = None
+            for _ in range(max(1, retries + 1)):
+                try:
+                    return self.tune(pair[0], pair[1], strategy)
+                except Exception as e:      # noqa: BLE001 — isolate pairs
+                    last = e
+                    log.warning("tune_many: %s failed (%s), %s",
+                                pair[0].name, e,
+                                "retrying" if retries else "giving up")
+            mark_failed(pair, "error")
+            raise last
 
         out: List[Union[cache_lib.CacheEntry, BaseException]] = []
         with ThreadPoolExecutor(max_workers=workers,
                                 thread_name_prefix="repro-tune") as ex:
             futures = [ex.submit(one, p) for p in pairs]
-            for f in futures:
+            for f, pair in zip(futures, pairs):
                 try:
-                    out.append(f.result())
+                    out.append(f.result(timeout=timeout_s))
+                except FuturesTimeoutError:
+                    mark_failed(pair, "timeout")
+                    e = TimeoutError(
+                        f"tuning {pair[0].name} exceeded {timeout_s}s")
+                    if not return_exceptions:
+                        raise e from None
+                    out.append(e)
                 except Exception as e:
                     if not return_exceptions:
                         raise
@@ -277,6 +328,17 @@ class Autotuner:
             # fall through to the miss path (never serve it).
             self._bump("failed_retunes", kernel=kernel.name)
             entry = None
+        if entry is not None and entry.is_quarantined(entry.config):
+            # The winner failed at serve time: degrade to the best
+            # runner-up still standing rather than go down (the "A Few
+            # Fit Most" portfolio as a fault-tolerance mechanism).
+            for ru in entry.runners_up:
+                cfg = dict(ru["config"])
+                if (not entry.is_quarantined(cfg)
+                        and kernel.space.is_valid(cfg, ctx)):
+                    self._bump("fallback_serves", kernel=kernel.name)
+                    return cfg
+            entry = None              # nothing clean left: treat as miss
         if entry is not None:
             self._bump("hits", kernel=kernel.name)
             return dict(entry.config)
@@ -286,10 +348,93 @@ class Autotuner:
         if self.on_miss == "heuristic":
             self.queue.add(kernel, ctx)
             self._bump("heuristic_uses", kernel=kernel.name)
-            return kernel.default_config(ctx)
+            cfg = kernel.default_config(ctx)
+            raw = self.cache.get_raw(kernel.name, kernel.version,
+                                     kernel.space, ctx)
+            if raw is not None and raw.is_quarantined(cfg):
+                # The heuristic itself failed at serve time: degrade to
+                # the first clean fallback rather than re-serve it.
+                for alt in self.fallback_configs(kernel, ctx, exclude=[cfg]):
+                    self._bump("fallback_serves", kernel=kernel.name)
+                    return alt
+            return cfg
         raise LookupError(
             f"no tuned config for kernel {kernel.name!r} ctx {ctx.signature()} "
             f"and on_miss='error'")
+
+    # -- serve-time failure handling ----------------------------------------
+    def record_dispatch(self, name: str, ctx: TuningContext,
+                        config: Config) -> None:
+        """Note the config a kernel entry point is about to launch with
+        (called by ops.py on the tuner path) so non-finite output detected
+        later — possibly outside jit — can be attributed and quarantined."""
+        with self._stats_lock:
+            self._last_dispatch[name] = (ctx, dict(config))
+
+    def last_dispatch(self, name: str
+                      ) -> Optional[Tuple[TuningContext, Config]]:
+        with self._stats_lock:
+            return self._last_dispatch.get(name)
+
+    def quarantine(self, kernel: KernelRef, ctx: TuningContext,
+                   config: Config) -> bool:
+        """Mark ``config`` as failed-at-serve-time for (kernel, ctx): it
+        is never served again (the marker survives re-tunes), and a
+        background re-tune is enqueued so the scenario converges back to
+        a measured winner. Returns True if newly quarantined."""
+        kernel = self.resolve(kernel)
+        entry = self.cache.get_raw(kernel.name, kernel.version,
+                                   kernel.space, ctx)
+        if entry is None:
+            # No entry yet (e.g. heuristic default failed): record a
+            # failed marker carrying the quarantine so tune() preserves it.
+            entry = cache_lib.make_entry(
+                dict(config), float("inf"), 0, "quarantine",
+                self.backend.name, _chip_name(self.backend))
+        if entry.is_quarantined(config):
+            self.queue.add(kernel, ctx)
+            return False
+        entry.quarantined.append(dict(config))
+        self.cache.put(kernel.name, kernel.version, kernel.space, ctx, entry)
+        self._bump("quarantines", kernel=kernel.name)
+        self.queue.add(kernel, ctx)
+        log.warning("quarantined %s config %s (ctx=%s)", kernel.name,
+                    config, ctx.signature())
+        return True
+
+    def quarantine_last(self, name: str) -> bool:
+        """Quarantine the most recently dispatched config of kernel
+        ``name`` (the engine's non-finite guard: by the time NaNs surface
+        from a jitted step, the dispatch is long gone)."""
+        item = self.last_dispatch(name)
+        if item is None:
+            return False
+        ctx, config = item
+        return self.quarantine(name, ctx, config)
+
+    def fallback_configs(self, kernel: KernelRef, ctx: TuningContext,
+                         exclude: Iterable[Config] = ()) -> List[Config]:
+        """Degraded-mode candidates for (kernel, ctx), best first: cached
+        runners-up, then the heuristic default — minus anything
+        quarantined or excluded. The reference oracle impl is the caller's
+        last resort after these."""
+        kernel = self.resolve(kernel)
+        bad = {cache_lib.config_key(c) for c in exclude}
+        entry = self.cache.get_raw(kernel.name, kernel.version,
+                                   kernel.space, ctx)
+        out: List[Config] = []
+        if entry is not None:
+            bad |= {cache_lib.config_key(c) for c in entry.quarantined}
+            for ru in entry.runners_up:
+                cfg = dict(ru["config"])
+                key = cache_lib.config_key(cfg)
+                if key not in bad and kernel.space.is_valid(cfg, ctx):
+                    out.append(cfg)
+                    bad.add(key)
+        default = kernel.default_config(ctx)
+        if cache_lib.config_key(default) not in bad:
+            out.append(default)
+        return out
 
     # -- off-critical-path tuning (Q4.4) -----------------------------------
     def flush_tuning_queue(self) -> int:
@@ -349,6 +494,30 @@ class Autotuner:
         short-lived tuners in tests/benchmarks do."""
         self.stop_background_tuning()
         self.engine.close()
+
+
+def _select_clean(result: search_lib.SearchResult,
+                  quarantined: List[Config]
+                  ) -> Tuple[Optional[Config], float, List[Dict]]:
+    """Pick the best non-quarantined finite trial as the winner and the
+    next-best distinct configs (up to 3) as the runner-up portfolio."""
+    bad = {cache_lib.config_key(c) for c in quarantined}
+    ranked: List[Tuple[str, Config, float]] = []
+    seen = set()
+    for t in sorted(result.trials, key=lambda t: t.metric):
+        if not math.isfinite(t.metric):
+            continue
+        key = cache_lib.config_key(t.config)
+        if key in bad or key in seen:
+            continue
+        seen.add(key)
+        ranked.append((key, dict(t.config), float(t.metric)))
+    if not ranked:
+        return None, math.inf, []
+    _, winner, winner_metric = ranked[0]
+    runners_up = [{"config": cfg, "metric": m}
+                  for _, cfg, m in ranked[1:4]]
+    return winner, winner_metric, runners_up
 
 
 def _chip_name(backend: measure_lib.MeasureBackend) -> str:

@@ -31,9 +31,11 @@ from __future__ import annotations
 
 import collections
 import functools
+import logging
 import math
+import os
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +47,83 @@ from repro.core import (
 from repro.core.config_space import dtype_bytes, vmem_fits
 
 LANES = 128
+
+log = logging.getLogger("repro.ops")
+
+
+# ---------------------------------------------------------------------------
+# Serve-time kernel guard (fault tolerance; docs/serving.md).
+#
+# A tuned config that measured fine can still fail in production — raise at
+# trace/compile time, or return non-finite output. The guard wraps the
+# tuner-dispatch path of serving-critical entry points: a failing config is
+# quarantined in the tuning cache (Autotuner.quarantine, which also enqueues
+# a background re-tune), the dispatch falls back to the next-best runner-up
+# from the winning search, then the heuristic default, and as a last resort
+# the ref.py oracle impl — the engine degrades instead of going down.
+#
+# Active when a FaultPlan is installed (serving/faults.py) or under
+# REPRO_KERNEL_GUARD=1; off by default so unit tests exercising kernels
+# directly surface real bugs instead of silently passing through the oracle.
+# ---------------------------------------------------------------------------
+
+def _guard_active() -> bool:
+    from repro.serving import faults as fault_lib
+    return (fault_lib.get_active() is not None
+            or os.environ.get("REPRO_KERNEL_GUARD", "0") == "1")
+
+
+def _guarded_dispatch(kernel: TunableKernel, ctx: Optional[TuningContext],
+                      config: Config, run: Callable[[Config], Any],
+                      ref_run: Callable[[], Any],
+                      tuner: Optional[Autotuner]):
+    """Run ``run(config)`` with quarantine-and-fallback semantics; consult
+    the active FaultPlan for injected dispatch faults. Under jit this
+    executes at trace time — exactly where a hostile config's exceptions
+    surface; the eager non-finite check only fires on concrete outputs
+    (the jitted serving path is covered by the engine's logits guard)."""
+    from repro.serving import faults as fault_lib
+    plan = fault_lib.get_active()
+
+    def attempt(cfg):
+        kind = plan.take_dispatch(kernel.name) if plan is not None else None
+        if kind == "kernel_exception":
+            raise fault_lib.InjectedKernelError(
+                f"injected kernel failure in {kernel.name}")
+        if kind == "compile_failure":
+            raise fault_lib.InjectedCompileError(
+                f"injected compile failure in {kernel.name}")
+        out = run(cfg)
+        if kind == "nan_output" and jnp.issubdtype(out.dtype, jnp.floating):
+            out = out * jnp.asarray(float("nan"), out.dtype)
+        return out
+
+    def quarantine(cfg):
+        if tuner is not None and ctx is not None:
+            tuner.quarantine(kernel, ctx, cfg)
+
+    candidates = [config]
+    if tuner is not None and ctx is not None:
+        candidates += tuner.fallback_configs(kernel, ctx, exclude=[config])
+    for cfg in candidates:
+        try:
+            out = attempt(cfg)
+        except Exception as e:       # noqa: BLE001 — degrade, don't die
+            quarantine(cfg)
+            log.warning("%s raised under config %s (%s); falling back",
+                        kernel.name, cfg, e)
+            continue
+        if (not isinstance(out, jax.core.Tracer)
+                and jnp.issubdtype(out.dtype, jnp.floating)
+                and not bool(jnp.isfinite(out).all())):
+            quarantine(cfg)
+            log.warning("%s returned non-finite output under config %s; "
+                        "falling back", kernel.name, cfg)
+            continue
+        return out
+    log.warning("%s: every tuned config failed; serving the reference "
+                "oracle impl (degraded mode)", kernel.name)
+    return ref_run()
 
 
 def _ctx(tuner: Autotuner, shapes: Dict[str, Tuple[int, ...]], dtype: str,
@@ -712,15 +791,23 @@ def paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
     The pool layout pins ``page_size``, so the runtime lookup context
     carries it in ``extra`` and only matching configs are explored; the
     remaining tunables (block_kv, pack_gqa) dispatch to the kernel.
+
+    This is the serving hot path, so the tuner-dispatch route (no explicit
+    ``config=``) runs under the kernel guard when active: a config that
+    raises or yields non-finite output is quarantined and the call degrades
+    through the runner-up portfolio down to the ``ref.py`` oracle.
     """
     from repro.kernels.paged_decode import paged_decode as paged_kernel
     ps = k_pages.shape[2]
+    guarded = config is None
+    ctx = None
     _ps_values = next(p.values for p in PAGED_DECODE.space.params
                       if p.name == "page_size")
     if config is None and ps not in _ps_values:
         # Pool laid out with an off-space page size (tiny test pools):
         # nothing to tune — one page per step, packed heads.
         config = {"block_kv": ps, "pack_gqa": True}
+        tuner = None
     if config is None:
         tuner = tuner or default_tuner()
         B, Hq, D = q.shape
@@ -729,11 +816,25 @@ def paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
         ctx = _ctx(tuner, {"q": (B, Hq, D), "k": (B, Hkv, T, D)},
                    str(k_pages.dtype), page_size=ps)
         config = tuner.best_config(PAGED_DECODE, ctx)
-    cfg = dict(config)
-    cfg.pop("page_size", None)
-    return paged_kernel(q, k_pages, v_pages, block_tables, kv_len,
-                        k_scales=k_scales, v_scales=v_scales,
-                        scale=scale, interpret=interpret, **cfg)
+        if tuner is not None:
+            tuner.record_dispatch(PAGED_DECODE.name, ctx, config)
+
+    def run(cfg):
+        c = dict(cfg)
+        c.pop("page_size", None)
+        return paged_kernel(q, k_pages, v_pages, block_tables, kv_len,
+                            k_scales=k_scales, v_scales=v_scales,
+                            scale=scale, interpret=interpret, **c)
+
+    if guarded and _guard_active():
+        def ref_run():
+            from repro.kernels import ref
+            return ref.paged_decode(q, k_pages, v_pages, block_tables,
+                                    kv_len, k_scales=k_scales,
+                                    v_scales=v_scales, scale=scale)
+        return _guarded_dispatch(PAGED_DECODE, ctx, config, run, ref_run,
+                                 tuner)
+    return run(config)
 
 
 # ===========================================================================

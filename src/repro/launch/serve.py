@@ -122,6 +122,14 @@ def serve_paged(args, cfg, tuner):
         prefill_chunk=args.prefill_chunk,
         quant=None if args.quant == "none" else args.quant, tp=args.tp,
         prefix_cache=args.prefix_cache)
+    plan = None
+    if args.inject_faults:
+        from repro.serving import FaultPlan, faults as fault_lib
+        plan = FaultPlan.parse_spec(args.inject_faults)
+        fault_lib.install(plan)
+        print(f"fault injection: {args.inject_faults!r} "
+              f"({len(plan.events)} events)")
+
     reqs = []
     # A shared system prompt heads every request when prefix caching is
     # on — the chat-traffic shape the radix tree exists for. Without the
@@ -147,10 +155,29 @@ def serve_paged(args, cfg, tuner):
                                   dtype=np.int64).astype(np.int32)
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=G))
     t0 = time.perf_counter()
-    res = engine.run(reqs)
+    try:
+        res = engine.run(reqs)
+    finally:
+        if plan is not None:
+            from repro.serving import faults as fault_lib
+            fault_lib.install(None)
     print(f"served {res['requests']} requests / "
           f"{res['generated_tokens']} tokens in {res['wall_s']*1e3:.0f} ms "
           f"({res['tokens_per_s']:.1f} tok/s, {res['steps']} steps)")
+    print(f"lifecycle: {res['preemptions']} preemptions, "
+          f"{res['resumes']} resumes, {res['failed_requests']} failed, "
+          f"{res['timed_out_requests']} timed out")
+    # Every submitted request must land in a terminal state — the smoke
+    # gate for the faults-smoke CI job: faults degrade requests, they
+    # never wedge or crash the engine.
+    assert res["terminal_requests"] == len(reqs), \
+        f"non-terminal requests after drain: {res}"
+    if plan is not None:
+        from repro.core.tuner import default_tuner
+        st = default_tuner().stats()
+        print(f"kernel guard: {st.get('quarantines', 0)} quarantines, "
+              f"{st.get('fallback_serves', 0)} fallback serves; "
+              f"{len(plan.log)} fault events fired")
     engine.scheduler.check_invariants()
     if engine.prefix_cache is not None:
         stats = engine.prefix_cache.stats()
@@ -263,6 +290,14 @@ def main(argv=None):
                          "prefixes (docs/serving.md)")
     ap.add_argument("--max-batch", type=int, default=4,
                     help="concurrent sequences (paged only)")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="deterministic fault injection (paged only): "
+                         "comma-separated events — kexc@N[:kernel], "
+                         "compile@N[:kernel], nan@N[:kernel], "
+                         "logits@STEP[:slot], pool@STEP:PAGES[:HOLD], "
+                         "random@SEED[:N] (serving/faults.py). The run "
+                         "asserts every request still reaches a terminal "
+                         "state.")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="chunked-prefill width (paged only)")
     ap.add_argument("--on-miss", choices=("tune", "heuristic", "error"),
@@ -272,6 +307,9 @@ def main(argv=None):
                          "background worker converge the cache")
     args = ap.parse_args(argv)
 
+    if args.inject_faults and args.decode_impl != "paged":
+        raise SystemExit("--inject-faults requires --decode-impl paged "
+                         "(the fault harness drives the paged scheduler)")
     os.environ["REPRO_ON_MISS"] = args.on_miss
     cfg = get_config(args.arch, smoke=not args.full_config)
     if args.decode_impl != "full":

@@ -12,18 +12,26 @@ registry kernel over the scheduler's block tables.
                  the scratch page inactive slots write into)
     PrefixCache — radix tree over token prefixes -> shared KV pages
                  (cross-request prefix caching, RadixAttention-style)
-    Request    — one inference request (prompt + generation budget)
+    Request    — one inference request (prompt + generation budget +
+                 lifecycle state machine, deadline, cancellation)
     Scheduler  — admission / chunked prefill / decode / retirement loop
+                 with optimistic admission and exact-resume preemption
     ServingEngine — binds a model to the scheduler and runs the jitted
-                 prefill_paged / decode_step_paged steps
+                 prefill_paged / decode_step_paged steps (with a
+                 non-finite logits guard)
+    FaultPlan  — deterministic fault-injection schedule (faults.py)
 
 See docs/serving.md for the design, benchmarks/serving_throughput.py
 for the dense-vs-paged throughput comparison, and
 benchmarks/prefix_caching.py for the shared-prefix trace benchmark.
 """
 
+from repro.serving.faults import (  # noqa: F401
+    FaultEvent, FaultPlan, InjectedCompileError, InjectedKernelError,
+)
 from repro.serving.page_pool import PagePool  # noqa: F401
 from repro.serving.prefix_cache import PrefixCache  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
-    Request, Scheduler, ServingEngine, StepStats,
+    Request, RequestState, Scheduler, ServingEngine, StepStats,
+    TERMINAL_STATES,
 )

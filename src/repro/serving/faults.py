@@ -1,0 +1,253 @@
+"""Deterministic fault injection for the serving + tuning stack.
+
+Fault tolerance is only as good as its tests, and the failures that
+matter — a Pallas kernel raising under a hostile config, NaN logits, a
+compile failure, a page-pool exhaustion burst — are exactly the ones a
+healthy CI host never produces on its own. This module makes them
+reproducible: a ``FaultPlan`` is a *seeded, inspectable schedule* of
+faults that the dispatch layer (``kernels/ops.py``) and the serving step
+loop (``ServingEngine.step``) consult at well-defined points. The same
+plan always injects the same faults at the same steps, so trace tests can
+assert exact recovery behavior (and the golden event log stays stable).
+
+Two fault families:
+
+  * **dispatch faults** — consumed when a guarded kernel entry point
+    resolves a tuned config: ``kernel_exception`` raises
+    ``InjectedKernelError`` from inside the kernel call (trace time under
+    jit — exactly where a real bad config blows up), ``compile_failure``
+    raises ``InjectedCompileError``, ``nan_output`` multiplies the kernel
+    output by NaN so the non-finite guards downstream must catch it.
+    Counted per kernel name: "fail the next N dispatches of paged_decode".
+  * **step faults** — keyed on the scheduler step counter:
+    ``nan_logits`` poisons the decode logits of chosen slots through the
+    engine's jit-compatible scale operand, ``pool_hog`` allocates pages
+    out from under the scheduler for a bounded number of steps, forcing
+    preemptions at a chosen moment.
+
+Activation is a module-level plan (``install`` / ``active``): the ops
+dispatch layer and the engine read ``get_active()`` so no call-site
+plumbing is needed. Everything applied is recorded in ``plan.log`` for
+assertions and the golden fixture.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+DISPATCH_KINDS = ("kernel_exception", "nan_output", "compile_failure")
+STEP_KINDS = ("nan_logits", "pool_hog")
+
+
+class InjectedKernelError(RuntimeError):
+    """Stands in for a kernel that raises under its tuned config."""
+
+
+class InjectedCompileError(RuntimeError):
+    """Stands in for a config that fails to lower/compile."""
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One scheduled fault.
+
+    Dispatch kinds use ``kernel``/``times`` (fail the next ``times``
+    dispatches of that kernel); step kinds use ``step`` plus ``slot``
+    (nan_logits, -1 = every active slot) or ``pages``/``hold``
+    (pool_hog: grab up to ``pages`` pages for ``hold`` steps).
+    """
+
+    kind: str
+    kernel: str = "paged_decode"
+    times: int = 1
+    step: int = -1
+    slot: int = -1
+    pages: int = 0
+    hold: int = 1
+
+    def __post_init__(self):
+        if self.kind not in DISPATCH_KINDS + STEP_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+class FaultPlan:
+    """A deterministic schedule of injected faults."""
+
+    def __init__(self, events: Optional[List[FaultEvent]] = None,
+                 seed: Optional[int] = None):
+        self.events: List[FaultEvent] = list(events or [])
+        self.seed = seed
+        self.log: List[Dict[str, Any]] = []
+        # Mutable consumption state (reset() restores the schedule).
+        self._dispatch_left: Dict[Tuple[str, str], int] = {}
+        self._hogs: List[Tuple[int, List[int]]] = []   # (release_step, pages)
+        self.reset()
+
+    def reset(self) -> None:
+        self._dispatch_left = {}
+        for ev in self.events:
+            if ev.kind in DISPATCH_KINDS:
+                key = (ev.kernel, ev.kind)
+                self._dispatch_left[key] = (
+                    self._dispatch_left.get(key, 0) + ev.times)
+        self._hogs = []
+        self.log = []
+
+    # -- dispatch faults (ops.py guard) ------------------------------------
+    def take_dispatch(self, kernel: str) -> Optional[str]:
+        """Consume one dispatch fault for ``kernel`` (exception first, then
+        compile failure, then NaN poisoning) or None."""
+        for kind in ("kernel_exception", "compile_failure", "nan_output"):
+            left = self._dispatch_left.get((kernel, kind), 0)
+            if left > 0:
+                self._dispatch_left[(kernel, kind)] = left - 1
+                self.log.append({"fault": kind, "kernel": kernel})
+                return kind
+        return None
+
+    # -- step faults (engine loop) -----------------------------------------
+    def on_step(self, step: int, pool) -> None:
+        """Apply/release pool hogs due at ``step``."""
+        still = []
+        for release, pages in self._hogs:
+            if step >= release:
+                pool.free(pages)
+                self.log.append({"fault": "pool_release", "step": step,
+                                 "pages": len(pages)})
+            else:
+                still.append((release, pages))
+        self._hogs = still
+        for ev in self.events:
+            if ev.kind == "pool_hog" and ev.step == step and ev.pages > 0:
+                n = min(ev.pages, pool.num_free)
+                pages = pool.alloc(n) if n > 0 else None
+                if pages:
+                    self._hogs.append((step + max(1, ev.hold), pages))
+                    self.log.append({"fault": "pool_hog", "step": step,
+                                     "pages": len(pages)})
+
+    def logit_poison(self, step: int, active_slots: List[int]) -> List[int]:
+        """Slots whose decode logits are poisoned to NaN at ``step``."""
+        out: List[int] = []
+        for ev in self.events:
+            if ev.kind != "nan_logits" or ev.step != step:
+                continue
+            if ev.slot < 0:
+                out.extend(active_slots)
+            elif ev.slot in active_slots:
+                out.append(ev.slot)
+            elif active_slots:            # target idle: poison first active
+                out.append(active_slots[0])
+        if out:
+            self.log.append({"fault": "nan_logits", "step": step,
+                             "slots": sorted(set(out))})
+        return sorted(set(out))
+
+    # -- lifecycle ---------------------------------------------------------
+    def pending(self) -> bool:
+        """True while held pages remain to be released — the engine's
+        stall detector must keep stepping rather than declare deadlock."""
+        return bool(self._hogs)
+
+    def release_all(self, pool) -> None:
+        for _, pages in self._hogs:
+            pool.free(pages)
+        self._hogs = []
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def random(cls, seed: int, steps: int, *,
+               kernels: Tuple[str, ...] = ("paged_decode",),
+               n_faults: int = 4) -> "FaultPlan":
+        """A seeded random mix of all fault kinds over ``steps`` steps."""
+        rng = np.random.default_rng(seed)
+        events: List[FaultEvent] = []
+        kinds = DISPATCH_KINDS + STEP_KINDS
+        for _ in range(n_faults):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            if kind in DISPATCH_KINDS:
+                events.append(FaultEvent(
+                    kind=kind, kernel=kernels[int(rng.integers(len(kernels)))],
+                    times=int(rng.integers(1, 3))))
+            elif kind == "nan_logits":
+                events.append(FaultEvent(
+                    kind=kind, step=int(rng.integers(1, max(2, steps))),
+                    slot=int(rng.integers(-1, 3))))
+            else:
+                events.append(FaultEvent(
+                    kind=kind, step=int(rng.integers(1, max(2, steps))),
+                    pages=int(rng.integers(1, 5)),
+                    hold=int(rng.integers(1, 6))))
+        return cls(events, seed=seed)
+
+    @classmethod
+    def parse_spec(cls, spec: str) -> "FaultPlan":
+        """Parse the launcher's ``--inject-faults`` mini-grammar: a comma
+        list of ``kexc@N[:kernel]``, ``compile@N[:kernel]``,
+        ``nan@N[:kernel]`` (dispatch faults, N times), ``logits@S[:slot]``
+        (NaN decode logits at step S), ``pool@S:P[:H]`` (hog P pages for H
+        steps starting at step S), or ``random@SEED[:N]``."""
+        events: List[FaultEvent] = []
+        seed = None
+        for tok in spec.split(","):
+            tok = tok.strip()
+            if not tok:
+                continue
+            name, _, rest = tok.partition("@")
+            parts = rest.split(":") if rest else []
+            if name == "random":
+                seed = int(parts[0])
+                n = int(parts[1]) if len(parts) > 1 else 4
+                events.extend(cls.random(seed, steps=32, n_faults=n).events)
+            elif name in ("kexc", "compile", "nan"):
+                kind = {"kexc": "kernel_exception",
+                        "compile": "compile_failure",
+                        "nan": "nan_output"}[name]
+                times = int(parts[0]) if parts else 1
+                kernel = parts[1] if len(parts) > 1 else "paged_decode"
+                events.append(FaultEvent(kind=kind, kernel=kernel,
+                                         times=times))
+            elif name == "logits":
+                step = int(parts[0])
+                slot = int(parts[1]) if len(parts) > 1 else -1
+                events.append(FaultEvent(kind="nan_logits", step=step,
+                                         slot=slot))
+            elif name == "pool":
+                step = int(parts[0])
+                pages = int(parts[1]) if len(parts) > 1 else 2
+                hold = int(parts[2]) if len(parts) > 2 else 2
+                events.append(FaultEvent(kind="pool_hog", step=step,
+                                         pages=pages, hold=hold))
+            else:
+                raise ValueError(f"bad fault spec token {tok!r}")
+        return cls(events, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Active-plan registry: ops.py and ServingEngine consult this, so fault
+# injection needs no parameter plumbing through model code.
+# ---------------------------------------------------------------------------
+_ACTIVE: Optional[FaultPlan] = None
+
+
+def install(plan: Optional[FaultPlan]) -> None:
+    global _ACTIVE
+    _ACTIVE = plan
+
+
+def get_active() -> Optional[FaultPlan]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def active(plan: FaultPlan):
+    prev = get_active()
+    install(plan)
+    try:
+        yield plan
+    finally:
+        install(prev)

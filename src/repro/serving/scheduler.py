@@ -4,37 +4,75 @@ Every scheduler step:
 
   1. **retire**  — sequences that hit their generation budget free their
                    pages back to the pool (recycled for waiting requests),
-  2. **admit**   — waiting requests (arrival time reached) claim a free
-                   batch slot if the pool can reserve their worst-case
-                   page count — admission control at page granularity,
+  2. **admit**   — the lifecycle sweep fails cancelled/expired requests,
+                   then waiting requests claim free batch slots under
+                   *optimistic* admission: only the prompt's pages are
+                   reserved, never the worst-case generation length,
   3. **prefill** — ONE pending sequence runs one fixed-width prompt chunk
                    (chunked prefill: long prompts never monopolize a step),
   4. **decode**  — every prefilled, unfinished sequence decodes one token
-                   through the autotuned ``paged_decode`` kernel.
+                   through the autotuned ``paged_decode`` kernel; a slot
+                   that outgrows its pages allocates one more, and on pool
+                   exhaustion a victim (latest arrival first) is preempted
+                   and re-queued.
 
-Prefill interleaves with decode instead of blocking it, so time-to-first-
-token of new arrivals and inter-token latency of running sequences degrade
-gracefully together — the continuous-batching property the throughput
-benchmark measures.
+Optimistic admission is what makes the pool a real resource: admission no
+longer reserves ``prompt + max_new_tokens`` pages up front, so many more
+requests run concurrently, and the price is that the pool can exhaust
+mid-flight. Preemption pays that price deterministically: the victim's
+resident pages are parked in the ``PrefixCache`` trie (when one is
+attached) or freed, the request re-queues with bounded backoff, and on
+resume it re-prefills ``prompt + tokens[:-1]`` — exactly the KV it had
+resident (the last generated token was never written) — so a resumed
+request produces **token-for-token the same output** as an uninterrupted
+run under greedy sampling.
+
+Every ``Request`` carries a lifecycle state machine (QUEUED → RUNNING ⇄
+PREEMPTED → FINISHED / FAILED / TIMED_OUT): oversized submissions become
+FAILED results instead of exceptions, deadlines and cancellation are
+enforced in the step loop, and a request preempted more than
+``max_retries`` times fails rather than thrash forever.
 
 The ``Scheduler`` is pure host-side bookkeeping over a ``PagePool`` (no
 jax imports): block tables and lengths are numpy arrays the property tests
-can drive with random admit/finish traces. ``ServingEngine`` binds a model
-to it and runs the jitted ``lm.prefill_paged`` / ``lm.decode_step_paged``
-steps with greedy sampling.
+can drive with random admit/finish/preempt traces. ``ServingEngine`` binds
+a model to it and runs the jitted ``lm.prefill_paged`` /
+``lm.decode_step_paged`` steps with greedy sampling, plus a non-finite
+guard on the decode logits (NaN logits fail the request and quarantine the
+active ``paged_decode`` config instead of emitting garbage argmax tokens).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import enum
+import math
 import time
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving import faults as fault_lib
 from repro.serving.page_pool import SCRATCH_PAGE, PagePool
 from repro.serving.prefix_cache import PrefixCache
+
+
+class RequestState(str, enum.Enum):
+    """Request lifecycle. QUEUED → RUNNING ⇄ PREEMPTED, terminating in
+    FINISHED (budget reached), FAILED (rejected / cancelled / non-finite
+    logits / retry budget exhausted) or TIMED_OUT (deadline passed)."""
+
+    QUEUED = "QUEUED"
+    RUNNING = "RUNNING"
+    PREEMPTED = "PREEMPTED"
+    FINISHED = "FINISHED"
+    FAILED = "FAILED"
+    TIMED_OUT = "TIMED_OUT"
+
+
+TERMINAL_STATES = (RequestState.FINISHED, RequestState.FAILED,
+                   RequestState.TIMED_OUT)
 
 
 @dataclasses.dataclass
@@ -45,9 +83,17 @@ class Request:
     prompt: np.ndarray                 # (P,) int32 token ids
     max_new_tokens: int
     arrival: float = 0.0               # seconds since trace start
+    deadline: Optional[float] = None   # absolute trace-clock deadline
+    max_retries: int = 8               # preemption/resume budget
     # filled in by the engine:
     tokens: List[int] = dataclasses.field(default_factory=list)
     token_times: List[float] = dataclasses.field(default_factory=list)
+    state: RequestState = RequestState.QUEUED
+    failure_reason: Optional[str] = None
+    retries: int = 0                   # times preempted so far
+    cancelled: bool = False
+    wait_steps: int = 0                # admission aging (head-of-line cap)
+    not_before_step: int = 0           # backoff: earliest re-admission step
 
     @property
     def prompt_len(self) -> int:
@@ -56,6 +102,13 @@ class Request:
     def done(self) -> bool:
         return len(self.tokens) >= self.max_new_tokens
 
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+    def cancel(self) -> None:
+        """Mark for cancellation; the next lifecycle sweep fails it."""
+        self.cancelled = True
+
 
 @dataclasses.dataclass
 class _Seq:
@@ -63,6 +116,8 @@ class _Seq:
 
     req: Request
     pages: List[int]
+    view: np.ndarray                   # tokens to prefill (prompt, or on
+    #                                    resume prompt + generated[:-1])
     pos: int = 0                       # resident (written) valid tokens
     prompt_done: bool = False
     cached_tokens: int = 0             # prefix served from the cache
@@ -75,6 +130,14 @@ class StepStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     prefix_cached_tokens: int = 0      # prefill tokens avoided this step
+    preempted: int = 0                 # sequences preempted this step
+    failed: int = 0                    # requests failed this step
+    timed_out: int = 0                 # requests expired this step
+
+    def progressed(self) -> bool:
+        return bool(self.admitted or self.retired or self.prefill_tokens
+                    or self.decode_tokens or self.preempted or self.failed
+                    or self.timed_out)
 
 
 class Scheduler:
@@ -83,11 +146,18 @@ class Scheduler:
     ``max_batch`` concurrent sequences; each owns up to ``max_pages``
     block-table entries (table width). Unused entries map to the scratch
     page so device-side index maps never branch.
+
+    ``lookahead`` bounds how far past a blocked queue head admission may
+    scan for a smaller request that fits (head-of-line fix); once the head
+    has been skipped ``aging_cap`` times the scan collapses back to strict
+    FIFO until the head admits, so big requests cannot starve.
     """
 
     def __init__(self, pool: PagePool, max_batch: int, max_pages: int,
                  prefill_chunk: int = 8,
-                 prefix_cache: Optional[PrefixCache] = None):
+                 prefix_cache: Optional[PrefixCache] = None,
+                 lookahead: int = 4, aging_cap: int = 64,
+                 record_events: bool = False):
         self.pool = pool
         self.max_batch = int(max_batch)
         self.max_pages = int(max_pages)
@@ -95,54 +165,106 @@ class Scheduler:
         self.prefix_cache = prefix_cache
         if prefix_cache is not None and prefix_cache.pool is not pool:
             raise ValueError("prefix cache must index the scheduler's pool")
+        self.lookahead = max(1, int(lookahead))
+        self.aging_cap = int(aging_cap)
         self.waiting: Deque[Request] = deque()
         self.slots: List[Optional[_Seq]] = [None] * self.max_batch
         self.finished: List[Request] = []
         self._tables = np.full((self.max_batch, self.max_pages),
                                SCRATCH_PAGE, np.int32)
         self._prefill_rr = 0           # round-robin cursor over slots
+        self._step = 0                 # admission calls (backoff clock)
         self.total_prefill_tokens = 0  # chunk tokens actually computed
         self.total_cached_tokens = 0   # prefill tokens the cache avoided
+        self.preemptions = 0
+        self.resumes = 0
+        self.failures = 0
+        self.timeouts = 0
+        self.record_events = bool(record_events)
+        self.events: List[Dict[str, Any]] = []
+
+    def _event(self, op: str, **kw) -> None:
+        if self.record_events:
+            self.events.append(dict(op=op, step=self._step, **kw))
 
     # -- request intake ----------------------------------------------------
     def max_tokens(self, req: Request) -> int:
-        """Worst-case resident tokens: the chunk-padded prompt or the full
-        prompt + generation, whichever is larger."""
+        """Worst-case resident tokens over the request's whole lifetime,
+        including the longest possible chunk-padded *resume* view
+        (prompt + max_new_tokens - 1 re-prefilled after a late
+        preemption) — the bound the oversized-rejection guard checks."""
         c = self.prefill_chunk
-        padded_prompt = -(-req.prompt_len // c) * c
-        return max(padded_prompt, req.prompt_len + req.max_new_tokens)
+        total = req.prompt_len + req.max_new_tokens
+        pad = lambda n: -(-n // c) * c          # noqa: E731
+        return max(pad(req.prompt_len), pad(total - 1), total)
+
+    def _prefill_view(self, req: Request) -> np.ndarray:
+        """Tokens to (re-)prefill: the prompt, or on resume the prompt
+        plus every generated token but the last — the last token was
+        produced but its KV never written, so it re-enters via decode."""
+        if req.tokens:
+            return np.concatenate(
+                [req.prompt,
+                 np.asarray(req.tokens[:-1], np.int32)]).astype(np.int32)
+        return np.asarray(req.prompt, np.int32)
+
+    def reject(self, req: Request, reason: str) -> None:
+        """Complete ``req`` as a FAILED result (never raises): one bad
+        request must not abort a whole trace replay."""
+        req.state = RequestState.FAILED
+        req.failure_reason = reason
+        self.failures += 1
+        self.finished.append(req)
+        self._event("reject", rid=req.rid, reason=reason)
 
     def submit(self, req: Request) -> None:
         if req.prompt_len < 1 or req.max_new_tokens < 1:
-            raise ValueError(f"request {req.rid}: empty prompt or budget")
+            return self.reject(req, "empty prompt or zero generation budget")
         need = self.pool.pages_for(self.max_tokens(req))
         if need > self.max_pages:
-            raise ValueError(
-                f"request {req.rid} needs {need} pages > table width "
-                f"{self.max_pages}")
+            return self.reject(
+                req, f"needs {need} pages > table width {self.max_pages}")
+        if need > self.pool.num_pages - 1:
+            return self.reject(
+                req, f"needs {need} pages > pool capacity "
+                     f"{self.pool.num_pages - 1}")
+        req.state = RequestState.QUEUED
         self.waiting.append(req)
+        self._event("submit", rid=req.rid)
 
     # -- the four phases ---------------------------------------------------
     def retire_finished(self) -> List[Request]:
         out = []
         for b, seq in enumerate(self.slots):
             if seq is not None and seq.prompt_done and seq.req.done():
-                if self.prefix_cache is None:
-                    self.pool.free(seq.pages)
-                else:
-                    self._park(seq)
-                self._tables[b, :] = SCRATCH_PAGE
-                self.slots[b] = None
+                self._release_slot(b, park=True)
+                seq.req.state = RequestState.FINISHED
                 self.finished.append(seq.req)
+                self._event("retire", rid=seq.req.rid,
+                            tokens=len(seq.req.tokens))
                 out.append(seq.req)
         return out
 
-    def _park(self, seq: _Seq) -> None:
-        """Retire through the prefix cache: the sequence's full resident
-        pages are parked in the trie under their token ids (prompt +
-        generated tokens — the last generated token was never written),
-        so the next request with this prefix hits instead of
-        re-prefilling; the ragged tail and unused reservation are freed."""
+    def _release_slot(self, b: int, park: bool) -> int:
+        """Free slot ``b``'s pages (or park the resident full pages in the
+        prefix trie) and clear the slot. Returns pages parked."""
+        seq = self.slots[b]
+        parked = 0
+        if park and self.prefix_cache is not None:
+            parked = self._park(seq)
+        else:
+            self.pool.free(seq.pages)
+        self._tables[b, :] = SCRATCH_PAGE
+        self.slots[b] = None
+        return parked
+
+    def _park(self, seq: _Seq) -> int:
+        """Retire/preempt through the prefix cache: the sequence's full
+        resident pages are parked in the trie under their token ids
+        (prompt + generated tokens — the last generated token was never
+        written), so the next request with this prefix (including this
+        request's own resume) hits instead of re-prefilling; the ragged
+        tail and unused reservation are freed."""
         ps = self.pool.page_size
         n_full = min(seq.pos // ps, len(seq.pages))
         resident = np.concatenate(
@@ -151,54 +273,243 @@ class Scheduler:
         self.prefix_cache.insert(resident, seq.pages[:n_full],
                                  rid=seq.req.rid)
         self.pool.free(seq.pages[n_full:])
+        return n_full
 
+    # -- lifecycle ---------------------------------------------------------
+    def _finish_abnormal(self, req: Request, state: RequestState,
+                         reason: str) -> None:
+        req.state = state
+        req.failure_reason = reason
+        if state is RequestState.TIMED_OUT:
+            self.timeouts += 1
+        else:
+            self.failures += 1
+        self.finished.append(req)
+        self._event("fail" if state is RequestState.FAILED else "timeout",
+                    rid=req.rid, reason=reason)
+
+    def fail_slot(self, b: int, reason: str) -> None:
+        """Abort a running sequence as FAILED (engine non-finite guard).
+        Its pages are freed, never parked — NaN KV must not enter the
+        prefix trie."""
+        seq = self.slots[b]
+        assert seq is not None
+        self._release_slot(b, park=False)
+        self._finish_abnormal(seq.req, RequestState.FAILED, reason)
+
+    def _expired(self, req: Request, now: float) -> Optional[str]:
+        if req.cancelled:
+            return "cancelled"
+        if (req.deadline is not None and math.isfinite(now)
+                and now > req.deadline):
+            return "deadline"
+        return None
+
+    def _sweep_lifecycle(self, now: float) -> None:
+        """Enforce cancellation and deadlines on waiting AND running
+        requests. ``now=inf`` (untimed replay) checks cancellation only."""
+        if self.waiting:
+            keep: Deque[Request] = deque()
+            for req in self.waiting:
+                why = self._expired(req, now)
+                if why == "cancelled":
+                    self._finish_abnormal(req, RequestState.FAILED,
+                                          "cancelled")
+                elif why == "deadline":
+                    self._finish_abnormal(req, RequestState.TIMED_OUT,
+                                          f"deadline {req.deadline} passed")
+                else:
+                    keep.append(req)
+            self.waiting = keep
+        for b, seq in enumerate(self.slots):
+            if seq is None:
+                continue
+            why = self._expired(seq.req, now)
+            if why is None:
+                continue
+            self._release_slot(b, park=False)
+            if why == "cancelled":
+                self._finish_abnormal(seq.req, RequestState.FAILED,
+                                      "cancelled")
+            else:
+                self._finish_abnormal(seq.req, RequestState.TIMED_OUT,
+                                      f"deadline {seq.req.deadline} passed")
+
+    # -- admission ---------------------------------------------------------
     def admit(self, now: float = float("inf")) -> List[int]:
-        """FIFO admission: a request enters when a slot is free AND its
-        worst-case page reservation fits. Head-of-line blocking is
-        deliberate (no starvation of big requests).
+        """Optimistic admission: a request enters when a slot is free AND
+        the pool covers its chunk-padded *prefill view* — never the
+        worst-case generation length (decode grows pages on demand and
+        preempts under exhaustion).
+
+        Head-of-line blocking fix: when the queue head doesn't fit, up to
+        ``lookahead - 1`` later arrivals are tried; after ``aging_cap``
+        skips the scan reverts to strict FIFO so the head can't starve.
 
         With a prefix cache, the cached full-page prefix is share()d
         (refcount bump pins it against eviction) and admission charges
         only the *marginal* pages; under pool pressure, LRU refcount-1
         trie pages are evicted before giving up."""
+        self._step += 1
+        self._sweep_lifecycle(now)
         admitted = []
+        head = self.waiting[0] if self.waiting else None
         for b in range(self.max_batch):
-            if not self.waiting or self.slots[b] is not None:
+            if self.slots[b] is not None:
                 continue
-            req = self.waiting[0]
-            if req.arrival > now:
+            if self._admit_into(b, now) is None:
                 break
-            need = self.pool.pages_for(self.max_tokens(req))
-            cached_pages: List[int] = []
-            cached_tokens = 0
-            if self.prefix_cache is not None:
-                # Cap the match at prompt_len - 1: at least one prompt
-                # token must prefill to produce the first-token logits.
-                cached_pages, cached_tokens = self.prefix_cache.match(
-                    req.prompt, limit=req.prompt_len - 1, rid=req.rid)
-                self.pool.share(cached_pages)   # pin before any eviction
-                need -= len(cached_pages)
-                deficit = need - self.pool.num_free
-                if deficit > 0:
-                    self.prefix_cache.evict(deficit)
-            pages = self.pool.alloc(need)
-            if pages is None:
-                if cached_pages:
-                    self.pool.free(cached_pages)   # unpin, retry later
-                break                  # pool pressure: wait for retirement
-            self.waiting.popleft()
-            all_pages = cached_pages + pages
-            self.slots[b] = _Seq(req=req, pages=all_pages,
-                                 pos=cached_tokens,
-                                 cached_tokens=cached_tokens)
-            self._tables[b, :] = SCRATCH_PAGE
-            self._tables[b, :len(all_pages)] = all_pages
-            self.total_cached_tokens += cached_tokens
             admitted.append(b)
+        if (self.waiting and self.waiting[0] is head and head is not None
+                and head.arrival <= now
+                and head.not_before_step <= self._step):
+            head.wait_steps += 1   # an eligible head sat out this step
         return admitted
 
+    def _admit_into(self, b: int, now: float) -> Optional[int]:
+        """Try to admit one waiting request into free slot ``b``; returns
+        the queue index admitted or None when nothing fits."""
+        if not self.waiting:
+            return None
+        head = self.waiting[0]
+        window = 1 if head.wait_steps > self.aging_cap else min(
+            self.lookahead, len(self.waiting))
+        for i in range(window):
+            req = self.waiting[i]
+            if req.arrival > now:
+                break                  # deque is arrival-ordered
+            if req.not_before_step > self._step:
+                continue               # preemption backoff
+            if self._try_place(b, i):
+                return i
+        return None
+
+    def _try_place(self, b: int, i: int) -> bool:
+        req = self.waiting[i]
+        view = self._prefill_view(req)
+        c = self.prefill_chunk
+        padded = -(-len(view) // c) * c
+        need = self.pool.pages_for(padded)
+        cached_pages: List[int] = []
+        cached_tokens = 0
+        if self.prefix_cache is not None:
+            # Fresh requests cap the match at prompt_len - 1: at least one
+            # prompt token must prefill to produce the first-token logits.
+            # Resumes may match the whole view — their next token re-enters
+            # through decode, no prefill logits needed.
+            limit = len(view) if req.tokens else req.prompt_len - 1
+            cached_pages, cached_tokens = self.prefix_cache.match(
+                view, limit=limit, rid=req.rid)
+            self.pool.share(cached_pages)   # pin before any eviction
+            need -= len(cached_pages)
+            deficit = need - self.pool.num_free
+            if deficit > 0:
+                self.prefix_cache.evict(deficit)
+        pages = self.pool.alloc(max(0, need))
+        if pages is None:
+            if cached_pages:
+                self.pool.free(cached_pages)   # unpin, retry later
+            return False               # pool pressure: wait / look ahead
+        del self.waiting[i]
+        resumed = req.state is RequestState.PREEMPTED
+        req.state = RequestState.RUNNING
+        req.wait_steps = 0
+        all_pages = cached_pages + pages
+        seq = _Seq(req=req, pages=all_pages, view=view,
+                   pos=cached_tokens, cached_tokens=cached_tokens)
+        if cached_tokens >= len(view):
+            # Whole resume view served from the trie: nothing to prefill,
+            # decode re-enters with the last generated token.
+            assert req.tokens, "fresh match is capped below prompt_len"
+            seq.prompt_done = True
+        self.slots[b] = seq
+        self._tables[b, :] = SCRATCH_PAGE
+        self._tables[b, :len(all_pages)] = all_pages
+        self.total_cached_tokens += cached_tokens
+        if resumed:
+            self.resumes += 1
+        self._event("admit", rid=req.rid, resumed=resumed,
+                    cached_tokens=cached_tokens, pages=len(all_pages))
+        return True
+
+    # -- preemption --------------------------------------------------------
+    def _reclaim_one(self) -> bool:
+        """Free pages by retiring a finished-but-unretired sequence, else
+        preempting the latest-arrival running sequence. False when no
+        sequence is left to take pages from."""
+        for b, seq in enumerate(self.slots):
+            if seq is not None and seq.prompt_done and seq.req.done():
+                self._release_slot(b, park=True)
+                seq.req.state = RequestState.FINISHED
+                self.finished.append(seq.req)
+                self._event("retire", rid=seq.req.rid,
+                            tokens=len(seq.req.tokens))
+                return True
+        victim = None
+        for b, seq in enumerate(self.slots):
+            if seq is None:
+                continue
+            if victim is None or ((seq.req.arrival, seq.req.rid)
+                                  > (self.slots[victim].req.arrival,
+                                     self.slots[victim].req.rid)):
+                victim = b
+        if victim is None:
+            return False
+        self.preempt(victim)
+        return True
+
+    def preempt(self, b: int, reason: str = "pool_exhausted") -> None:
+        """Evict sequence ``b`` mid-flight: park its resident full pages
+        in the prefix trie (restart is then mostly cache hits) or free
+        them, and re-queue the request in arrival order with exponential
+        step backoff. Exceeding ``max_retries`` preemptions fails the
+        request instead of thrashing forever."""
+        seq = self.slots[b]
+        assert seq is not None
+        req = seq.req
+        parked = self._release_slot(b, park=True)
+        req.state = RequestState.PREEMPTED
+        req.retries += 1
+        self.preemptions += 1
+        self._event("preempt", rid=req.rid, reason=reason,
+                    parked_pages=parked, generated=len(req.tokens))
+        if req.retries > req.max_retries:
+            self._finish_abnormal(
+                req, RequestState.FAILED,
+                f"preempted {req.retries} times > max_retries "
+                f"{req.max_retries}")
+            return
+        req.not_before_step = self._step + min(
+            1 << min(req.retries - 1, 4), 16)
+        items = list(self.waiting)
+        items.append(req)
+        items.sort(key=lambda r: (r.arrival, r.rid))
+        self.waiting = deque(items)
+
+    def _ensure_capacity(self, b: int) -> bool:
+        """Grow slot ``b``'s pages to cover its next decode write. On pool
+        exhaustion: evict LRU trie pages, then preempt victims (latest
+        arrival first — possibly ``b`` itself). False iff ``b`` was
+        preempted."""
+        seq = self.slots[b]
+        while self.pool.pages_for(seq.pos + 1) > len(seq.pages):
+            pg = self.pool.alloc(1)
+            if (pg is None and self.prefix_cache is not None
+                    and self.prefix_cache.evict(1)):
+                pg = self.pool.alloc(1)
+            if pg is None:
+                if not self._reclaim_one():
+                    return False       # defensive: nothing left to take
+                if self.slots[b] is not seq:
+                    return False       # b itself was the victim
+                continue
+            seq.pages.extend(pg)
+            self._tables[b, len(seq.pages) - 1] = pg[0]
+        return True
+
+    # -- prefill / decode --------------------------------------------------
     def next_prefill(self) -> Optional[Tuple[int, np.ndarray, int, int]]:
-        """Pick one sequence with pending prompt tokens (round-robin) and
+        """Pick one sequence with pending prefill tokens (round-robin) and
         cut its next chunk. Returns (slot, padded chunk (C,), start,
         n_valid) or None."""
         c = self.prefill_chunk
@@ -209,7 +520,7 @@ class Scheduler:
                 continue
             self._prefill_rr = (b + 1) % self.max_batch
             start = seq.pos
-            chunk = seq.req.prompt[start:start + c]
+            chunk = seq.view[start:start + c]
             valid = len(chunk)
             if valid < c:
                 chunk = np.concatenate(
@@ -222,12 +533,20 @@ class Scheduler:
         assert seq is not None and not seq.prompt_done
         seq.pos += n_valid
         self.total_prefill_tokens += n_valid
-        if seq.pos >= seq.req.prompt_len:
+        if seq.pos >= len(seq.view):
             seq.prompt_done = True
 
     def decode_mask(self) -> np.ndarray:
+        """Decode-ready slots, after growing every slot's pages to cover
+        this step's write (which may preempt victims — including slots
+        already scanned, so readiness is re-derived afterwards)."""
+        for b in range(self.max_batch):
+            seq = self.slots[b]
+            if seq is not None and seq.prompt_done and not seq.req.done():
+                self._ensure_capacity(b)
         return np.array(
             [s is not None and s.prompt_done and not s.req.done()
+             and self.pool.pages_for(s.pos + 1) <= len(s.pages)
              for s in self.slots], bool)
 
     def advance_decoded(self, mask: np.ndarray) -> None:
@@ -246,6 +565,11 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.waiting) or any(s is not None for s in self.slots)
 
+    def backoff_pending(self) -> bool:
+        """True when admission is only waiting out preemption backoff —
+        the engine's stall detector keeps stepping instead of raising."""
+        return any(r.not_before_step > self._step for r in self.waiting)
+
     def check_invariants(self) -> None:
         """Pool consistency + block tables consistent with ownership."""
         self.pool.check_invariants()
@@ -259,6 +583,7 @@ class Scheduler:
             assert (self._tables[b, n:] == SCRATCH_PAGE).all()
             assert seq.pos <= n * self.pool.page_size
             assert len(set(seq.pages)) == n, "page twice in one table"
+            assert seq.req.state is RequestState.RUNNING
             for p in seq.pages:
                 owners[p] = owners.get(p, 0) + 1
         if self.prefix_cache is None:
@@ -272,6 +597,9 @@ class Scheduler:
             # about (shared cache pages count each co-owner).
             assert self.pool.refcount(p) >= c, \
                 f"page {p}: {c} slot owners > refcount {self.pool.refcount(p)}"
+        for req in self.finished:
+            assert req.terminal(), \
+                f"request {req.rid} finished in state {req.state}"
 
 
 class ServingEngine:
@@ -280,7 +608,8 @@ class ServingEngine:
     Decode runs on every step for all ready slots; at most one prefill
     chunk runs per step. Greedy (argmax) sampling keeps runs deterministic
     so the paged pipeline can be checked token-for-token against the dense
-    reference path.
+    reference path — and so a preempted-and-resumed request reproduces its
+    uninterrupted output exactly.
 
     ``tp > 1`` serves tensor-parallel over a 1-D device mesh
     (distribution/tp.py): parameters are column/row-sharded, the page
@@ -290,12 +619,20 @@ class ServingEngine:
     sampling stays deterministic: logits are replicated after the
     per-layer psums, so TP output is token-for-token the single-device
     output.
+
+    Failure handling (docs/serving.md): both jitted steps return a
+    per-slot finite-logits flag; a non-finite decode step fails that
+    request, quarantines the active ``paged_decode`` config through the
+    default tuner, and re-jits so the post-quarantine fallback config
+    takes effect. An installed ``FaultPlan`` (serving/faults.py) can
+    poison logits and hog pool pages at chosen steps.
     """
 
     def __init__(self, cfg, params, *, num_pages: int, page_size: int,
                  max_batch: int, max_seq_len: int, prefill_chunk: int = 8,
                  opts=None, quant=None, tp: int = 1,
-                 prefix_cache: bool = False, record_cache_events: bool = False):
+                 prefix_cache: bool = False, record_cache_events: bool = False,
+                 record_events: bool = False):
         import jax
         import jax.numpy as jnp
 
@@ -304,19 +641,20 @@ class ServingEngine:
 
         self.cfg = cfg
         self.pool = PagePool(num_pages, page_size)
-        # Cross-request prefix caching (docs/serving.md): retired
-        # sequences park their pages in a radix tree instead of freeing
-        # them, and admissions reuse any cached full-page prefix. Works
-        # unchanged under kv8 int8 pools (scales ride the same tables)
-        # and TP kv-head-sharded pools (the pool is host-side bookkeeping
-        # shared by every shard).
+        # Cross-request prefix caching (docs/serving.md): retired (and
+        # preempted) sequences park their pages in a radix tree instead of
+        # freeing them, and admissions reuse any cached full-page prefix.
+        # Works unchanged under kv8 int8 pools (scales ride the same
+        # tables) and TP kv-head-sharded pools (the pool is host-side
+        # bookkeeping shared by every shard).
         self.prefix_cache = (
             PrefixCache(self.pool, record_events=record_cache_events)
             if prefix_cache else None)
         self.scheduler = Scheduler(
             self.pool, max_batch=max_batch,
             max_pages=self.pool.pages_for(max_seq_len),
-            prefill_chunk=prefill_chunk, prefix_cache=self.prefix_cache)
+            prefill_chunk=prefill_chunk, prefix_cache=self.prefix_cache,
+            record_events=record_events)
         self.max_seq_len = int(max_seq_len)
         if opts is None:
             opts = lm.ForwardOpts(decode_impl="paged", quant=quant)
@@ -333,6 +671,7 @@ class ServingEngine:
         kv_dtype = policy.kv_dtype if policy is not None else None
         self.cache = lm.init_paged_cache(cfg, num_pages, page_size,
                                          kv_dtype=kv_dtype)
+        self._jax = jax
         self._jnp = jnp
 
         self.tp = int(tp)
@@ -360,61 +699,100 @@ class ServingEngine:
                                             tables, lens, self.opts)
 
         # Greedy sampling runs inside the jitted step so only token ids
+        # (plus one finite-logits bit per slot — the non-finite guard)
         # cross the device boundary every iteration, never logits.
         def _prefill(params, tokens, cache, tables, start):
             logits, cache = step_prefill(params, tokens, cache, tables, start)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+            ok = jnp.isfinite(logits).all(-1)
+            return jnp.argmax(logits, -1).astype(jnp.int32), ok, cache
 
-        def _decode(params, token, cache, tables, lens):
+        # ``scale`` is the fault harness's jit-compatible poison operand:
+        # all-ones normally, NaN rows inject non-finite logits at chosen
+        # steps without retracing.
+        def _decode(params, token, cache, tables, lens, scale):
             logits, cache = step_decode(params, token, cache, tables, lens)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+            logits = logits * scale
+            ok = jnp.isfinite(logits).all(-1)
+            return jnp.argmax(logits, -1).astype(jnp.int32), ok, cache
 
+        self._prefill_raw = _prefill
+        self._decode_raw = _decode
         # Donate the cache on real accelerators: the previous pool buffers
         # are dead after every step, so donation avoids a full-pool copy
         # per token and 2x peak KV memory. On the CPU interpret-mode host
         # donation is unsupported (jax copies + warns and measurably slows
         # the step loop), so it is gated on the backend.
-        donate = (2,) if jax.default_backend() != "cpu" else ()
-        self._prefill_fn = jax.jit(_prefill, donate_argnums=donate)
-        self._decode_fn = jax.jit(_decode, donate_argnums=donate)
+        self._donate = (2,) if jax.default_backend() != "cpu" else ()
+        self._build_jits()
         # Block tables only change on admission / retirement / prefill
-        # completion — cache their device copies keyed on slot state so the
-        # steady decode loop does no host->device table uploads.
+        # completion / page growth — cache their device copies keyed on
+        # slot state so the steady decode loop does no host->device table
+        # uploads.
         self._dev_tables_key = None
         self._dev_tables = None
 
-    def _check(self, req: Request) -> None:
+    def _build_jits(self) -> None:
+        jax = self._jax
+        self._prefill_fn = jax.jit(self._prefill_raw,
+                                   donate_argnums=self._donate)
+        self._decode_fn = jax.jit(self._decode_raw,
+                                  donate_argnums=self._donate)
+
+    def _requarantine_and_rejit(self) -> bool:
+        """Non-finite decode logits: quarantine the paged_decode config
+        that traced into the current jit (if the dispatch is known) and
+        rebuild the jitted steps so the next trace re-resolves configs
+        post-quarantine."""
+        from repro.core.tuner import default_tuner
+        quarantined = default_tuner().quarantine_last("paged_decode")
+        self._build_jits()
+        self._dev_tables_key = None
+        self._dev_tables = None
+        return quarantined
+
+    def _check(self, req: Request) -> bool:
         if self.scheduler.max_tokens(req) > self.max_seq_len:
-            raise ValueError(
-                f"request {req.rid}: prompt {req.prompt_len} + gen "
-                f"{req.max_new_tokens} exceeds max_seq_len "
-                f"{self.max_seq_len}")
+            self.scheduler.reject(
+                req,
+                f"prompt {req.prompt_len} + gen {req.max_new_tokens} "
+                f"exceeds max_seq_len {self.max_seq_len}")
+            return False
+        return True
 
     def step(self, now: float = float("inf")) -> StepStats:
         """One scheduler iteration; returns what happened."""
         jnp = self._jnp
         sched = self.scheduler
+        plan = fault_lib.get_active()
         stats = StepStats()
+        pre = (sched.preemptions, sched.failures, sched.timeouts)
         stats.retired = len(sched.retire_finished())
         admitted = sched.admit(now)
         stats.admitted = len(admitted)
         stats.prefix_cached_tokens = sum(
             sched.slots[b].cached_tokens for b in admitted)
+        if plan is not None:
+            plan.on_step(sched._step, self.pool)
 
         chunk = sched.next_prefill()
         if chunk is not None:
             b, tokens, start, valid = chunk
             table = jnp.asarray(sched.block_tables()[b:b + 1])
-            ptoks, self.cache = self._prefill_fn(
+            ptoks, pok, self.cache = self._prefill_fn(
                 self.params, jnp.asarray(tokens[None]), self.cache, table,
                 jnp.asarray([start], jnp.int32))
             sched.mark_prefilled(b, valid)
             stats.prefill_tokens = valid
             seq = sched.slots[b]
-            if seq.prompt_done:
+            if seq.prompt_done and not seq.req.tokens:
                 # First generated token comes straight from prefill argmax.
-                seq.req.tokens.append(int(ptoks[0, valid - 1]))
-                seq.req.token_times.append(time.perf_counter())
+                # (A resumed sequence skips this: its next token is the
+                # last generated one, re-entering through decode below.)
+                if bool(np.asarray(pok)[0, valid - 1]):
+                    seq.req.tokens.append(int(ptoks[0, valid - 1]))
+                    seq.req.token_times.append(time.perf_counter())
+                else:
+                    sched.fail_slot(b, "non-finite prefill logits")
 
         mask = sched.decode_mask()
         if mask.any():
@@ -422,10 +800,17 @@ class ServingEngine:
             for b in np.nonzero(mask)[0]:
                 toks[b, 0] = sched.slots[int(b)].req.tokens[-1]
             lens = sched.lens() * mask            # inactive slots -> 0
-            # Key on (occupant, decode-ready) per slot: a recycled slot
-            # (same mask, new request) must re-upload its table row.
+            scale = np.ones((sched.max_batch, 1), np.float32)
+            if plan is not None:
+                active = [int(b) for b in np.nonzero(mask)[0]]
+                for s in plan.logit_poison(sched._step, active):
+                    scale[s] = float("nan")
+            # Key on (occupant, decode-ready, table length) per slot: a
+            # recycled slot (same mask, new request) or a slot that grew a
+            # page must re-upload its table row.
             key = tuple(
-                (s.req.rid if s is not None else -1, bool(m))
+                (s.req.rid if s is not None else -1, bool(m),
+                 0 if s is None else len(s.pages))
                 for s, m in zip(sched.slots, mask))
             if self._dev_tables is None or key != self._dev_tables_key:
                 # Inactive rows (idle or mid-prefill) must scatter their
@@ -435,45 +820,74 @@ class ServingEngine:
                 tables[~mask] = SCRATCH_PAGE
                 self._dev_tables = jnp.asarray(tables)
                 self._dev_tables_key = key
-            dtoks, self.cache = self._decode_fn(
+            dtoks, dok, self.cache = self._decode_fn(
                 self.params, jnp.asarray(toks), self.cache,
-                self._dev_tables, jnp.asarray(lens, jnp.int32))
+                self._dev_tables, jnp.asarray(lens, jnp.int32),
+                jnp.asarray(scale))
             next_tok = np.asarray(dtoks)
+            okh = np.asarray(dok).reshape(-1)
             t = time.perf_counter()
+            rejit = False
             for b in np.nonzero(mask)[0]:
                 seq = sched.slots[int(b)]
-                seq.req.tokens.append(int(next_tok[b]))
-                seq.req.token_times.append(t)
-            sched.advance_decoded(mask)
-            stats.decode_tokens = int(mask.sum())
+                if okh[b]:
+                    seq.req.tokens.append(int(next_tok[b]))
+                    seq.req.token_times.append(t)
+                else:
+                    # Garbage argmax tokens must never reach the caller:
+                    # fail the request and quarantine the decode config.
+                    sched.fail_slot(int(b), "non-finite decode logits")
+                    rejit = True
+            if rejit:
+                self._requarantine_and_rejit()
+            sched.advance_decoded(mask & okh)
+            stats.decode_tokens = int((mask & okh).sum())
+        stats.preempted = sched.preemptions - pre[0]
+        stats.failed = sched.failures - pre[1]
+        stats.timed_out = sched.timeouts - pre[2]
         return stats
 
     def run(self, requests: List[Request], *,
             real_time: bool = False) -> Dict[str, Any]:
-        """Serve ``requests`` to completion. With ``real_time`` arrivals
-        are honored against the wall clock; otherwise every request is
-        eligible immediately (arrival still orders admission)."""
+        """Serve ``requests`` until every one reaches a terminal state.
+        With ``real_time`` arrivals and deadlines are honored against the
+        wall clock; otherwise every request is eligible immediately
+        (arrival still orders admission, deadlines are not enforced)."""
         for req in sorted(requests, key=lambda r: (r.arrival, r.rid)):
-            self._check(req)
-            self.scheduler.submit(req)
+            if self._check(req):
+                self.scheduler.submit(req)
+        plan = fault_lib.get_active()
         t0 = time.perf_counter()
         steps = 0
+        stalls = 0
         while self.scheduler.has_work():
             now = (time.perf_counter() - t0) if real_time else float("inf")
             stats = self.step(now)
             steps += 1
-            if (stats.admitted == 0 and stats.retired == 0
-                    and stats.prefill_tokens == 0
-                    and stats.decode_tokens == 0):
-                if real_time and self.scheduler.waiting:
-                    time.sleep(1e-4)   # idle: wait for the next arrival
-                    continue
-                raise RuntimeError("scheduler made no progress")
+            if stats.progressed():
+                stalls = 0
+                continue
+            if real_time and self.scheduler.waiting:
+                time.sleep(1e-4)   # idle: wait for the next arrival
+                continue
+            if (self.scheduler.backoff_pending()
+                    or (plan is not None and plan.pending())):
+                # Preemption backoff / a fault hogging pages: the step
+                # clock advances every iteration, so these resolve.
+                stalls += 1
+                if stalls > 100_000:
+                    raise RuntimeError("scheduler made no progress "
+                                       "(stalled in backoff)")
+                continue
+            raise RuntimeError("scheduler made no progress")
         self.scheduler.retire_finished()
+        if plan is not None:
+            plan.release_all(self.pool)
         wall = time.perf_counter() - t0
         # Report on THIS call's requests only — scheduler.finished
         # accumulates across runs on a reused engine.
         gen = sum(len(r.tokens) for r in requests)
+        sched = self.scheduler
         out = {
             "requests": sum(r.done() for r in requests),
             "generated_tokens": gen,
@@ -481,6 +895,13 @@ class ServingEngine:
             "wall_s": wall,
             "tokens_per_s": gen / max(wall, 1e-9),
             "t0": t0,
+            "preemptions": sched.preemptions,
+            "resumes": sched.resumes,
+            "failed_requests": sum(
+                r.state is RequestState.FAILED for r in requests),
+            "timed_out_requests": sum(
+                r.state is RequestState.TIMED_OUT for r in requests),
+            "terminal_requests": sum(r.terminal() for r in requests),
         }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()

@@ -131,11 +131,18 @@ def test_admission_blocks_under_pool_pressure_then_recovers():
 
 
 def test_oversized_request_rejected():
+    # Oversized submissions complete as FAILED results, never exceptions:
+    # one bad request in a replayed trace must not abort the whole run.
+    from repro.serving import RequestState
+
     pool = PagePool(8, 8)
     sched = Scheduler(pool, max_batch=2, max_pages=2, prefill_chunk=4)
-    with pytest.raises(ValueError, match="pages > table width"):
-        sched.submit(Request(rid=0, prompt=np.ones(30, np.int32),
-                             max_new_tokens=8))
+    req = Request(rid=0, prompt=np.ones(30, np.int32), max_new_tokens=8)
+    sched.submit(req)
+    assert req.state is RequestState.FAILED
+    assert "pages > table width" in req.failure_reason
+    assert req in sched.finished
+    assert not sched.waiting and not sched.has_work()
 
 
 @given(st.lists(st.tuples(st.integers(1, 24), st.integers(1, 6)),
@@ -323,7 +330,9 @@ def test_cached_trace_marginal_admission_only():
     seq = sched.slots[0]
     # limit = 23 caps the hit at 2 full pages (16 tokens)
     assert seq.cached_tokens == 16
-    need = pool.pages_for(sched.max_tokens(req))
+    # Optimistic admission charges the chunk-padded PREFILL view only
+    # (decode grows pages on demand), minus the cached full pages.
+    need = pool.pages_for(-(-req.prompt_len // 4) * 4)
     assert free_before - pool.num_free == need - 2
     _drain_sched(sched)
 
