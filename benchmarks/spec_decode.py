@@ -1,0 +1,192 @@
+"""Speculative decoding: draft-and-verify vs plain paged decode.
+
+Speculative decoding trades one ``paged_verify`` launch scoring K
+positions for up to K one-token ``paged_decode`` launches. The benchmark
+asks the two questions that decide whether the trade pays:
+
+  acceptance — how many tokens does each verify step commit? The
+      self-speculative n-gram drafter (serving/drafter.py) proposes from
+      the sequence's own history, so it thrives exactly when generation
+      is locally repetitive. Gate: accepted-tokens/step must exceed 1.0,
+      i.e. drafts beyond the guaranteed first token are really landing.
+  throughput — useful tokens/s against the SAME trace served by the
+      plain engine. Gate: the speculative/plain ratio must be >= 1.0 —
+      the K-wide verify step costs more than a decode step, so this
+      only holds when acceptance covers that overhead.
+
+Both engines serve identical traces and the benchmark asserts the
+speculative output is token-for-token equal to plain greedy decode —
+the accept/rollback invariant that makes speculation a pure performance
+knob (docs/serving.md).
+
+The bench model is a deliberately tiny 1-layer LM with a small vocab:
+under greedy sampling it settles into short repetition loops, the
+self-drafting regime (code/boilerplate copying in real traffic) where
+n-gram drafts land. On this interpret-mode CPU host the verify step
+pays ~K× the model FLOPs of a decode step, so the throughput gate is a
+real bar: acceptance has to beat the compute overhead, not just 1.0.
+On a TPU the same trade is far more favorable — batch-1 decode is
+launch/bandwidth-bound, not FLOP-bound (EXPERIMENTS.md).
+
+Run:  PYTHONPATH=src python benchmarks/spec_decode.py [--fast] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), os.pardir, "results")
+
+PAGE_SIZE = 16
+MAX_BATCH = 6
+PREFILL_CHUNK = 16
+
+
+def bench_config():
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="spec-bench", family="dense", n_layers=1,
+                       d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                       d_ff=64, vocab_size=64, dtype="float32")
+
+
+def make_trace(cfg, n_requests, gen):
+    """Fresh Request objects every call (tokens are per-run state);
+    same seed, so every engine serves the identical trace."""
+    from repro.serving import Request
+    rng = np.random.default_rng(0)
+    return [
+        Request(rid=i,
+                prompt=rng.integers(1, cfg.vocab_size,
+                                    int(rng.integers(6, 14))).astype(np.int32),
+                max_new_tokens=gen)
+        for i in range(n_requests)
+    ]
+
+
+def _median_rep(candidates):
+    ranked = sorted(candidates, key=lambda c: c["tokens_per_s"])
+    out = dict(ranked[len(ranked) // 2])
+    out["tokens_per_s_reps"] = [c["tokens_per_s"] for c in candidates]
+    return out
+
+
+def run_engine(cfg, params, trace_fn, *, speculative, max_seq_len, reps):
+    """Serve the trace ``reps`` times on a warm engine; median ships.
+    Returns (median rep, per-request token streams of the last rep)."""
+    from repro.serving import ServingEngine
+
+    pool = 1 + MAX_BATCH * (-(-max_seq_len // PAGE_SIZE))
+    engine = ServingEngine(cfg, params, num_pages=pool, page_size=PAGE_SIZE,
+                           max_batch=MAX_BATCH, max_seq_len=max_seq_len,
+                           prefill_chunk=PREFILL_CHUNK,
+                           speculative=speculative)
+    warm = trace_fn()
+    engine.run(warm)
+    assert engine.pool.num_allocated == 0
+    engine.scheduler.finished.clear()
+
+    candidates = []
+    tokens = None
+    for _ in range(reps):
+        reqs = trace_fn()
+        res = engine.run(reqs)
+        engine.scheduler.check_invariants()
+        assert engine.pool.num_allocated == 0
+        assert res["requests"] == len(reqs), f"requests failed: {res}"
+        c = {"tokens_per_s": round(res["tokens_per_s"], 2),
+             "useful_tokens": res["generated_tokens"],
+             "wall_s": round(res["wall_s"], 4), "steps": res["steps"]}
+        if "speculative" in res:
+            sp = res["speculative"]
+            c["accepted_per_step"] = round(sp["accepted_per_step"], 3)
+            c["verify_steps"] = sp["verify_steps"]
+            c["draft_k"] = sp["draft_k"]
+            assert not sp["degraded"], "verify degraded without faults"
+        tokens = {r.rid: list(r.tokens) for r in reqs}
+        engine.scheduler.finished.clear()
+        candidates.append(c)
+    return _median_rep(candidates), tokens
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small trace (CI smoke)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--gen", type=int, default=None,
+                    help="generation budget per request")
+    ap.add_argument("--draft-k", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=5,
+                    help="timed repetitions; median ships")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless accepted/step > 1.0 and "
+                         "speculative/plain tokens/s ratio >= 1.0")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.models import lm
+    from repro.models.param import init_params
+
+    cfg = bench_config()
+    n = args.requests or (8 if args.fast else 12)
+    gen = args.gen or (32 if args.fast else 48)
+    pmax = 13
+    max_seq_len = -(-(pmax + gen + PREFILL_CHUNK) // PAGE_SIZE) * PAGE_SIZE
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+
+    def trace_fn():
+        return make_trace(cfg, n, gen)
+
+    t0 = time.perf_counter()
+    plain, plain_toks = run_engine(cfg, params, trace_fn, speculative=0,
+                                   max_seq_len=max_seq_len, reps=args.reps)
+    spec, spec_toks = run_engine(cfg, params, trace_fn,
+                                 speculative=args.draft_k,
+                                 max_seq_len=max_seq_len, reps=args.reps)
+
+    # The correctness invariant the whole design rests on: speculation
+    # must change throughput only, never a single token.
+    assert spec_toks.keys() == plain_toks.keys()
+    for rid in plain_toks:
+        assert spec_toks[rid] == plain_toks[rid], \
+            f"rid {rid}: speculative output diverged from plain decode"
+
+    ratio = spec["tokens_per_s"] / max(plain["tokens_per_s"], 1e-9)
+    acceptance = spec["accepted_per_step"]
+    report = {
+        "arch": cfg.name,
+        "trace": {"requests": n, "gen": gen, "max_batch": MAX_BATCH,
+                  "page_size": PAGE_SIZE, "prefill_chunk": PREFILL_CHUNK,
+                  "max_seq_len": max_seq_len, "draft_k": args.draft_k},
+        "plain_paged": plain,
+        "speculative": spec,
+        "accepted_tokens_per_step": acceptance,
+        "speculative_over_plain_tokens_per_s": round(ratio, 3),
+        "token_identical": True,
+        "wall_total_s": round(time.perf_counter() - t0, 2),
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "BENCH_spec_decode.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(json.dumps(report, indent=1))
+    print(f"[spec_decode] acceptance {acceptance:.2f} tokens/step, "
+          f"speculative {spec['tokens_per_s']} tok/s vs plain "
+          f"{plain['tokens_per_s']} tok/s ({ratio:.2f}x) -> {out}")
+    if args.check:
+        if acceptance <= 1.0:
+            raise SystemExit(
+                f"accepted/step {acceptance:.3f} <= 1.0: drafts never land")
+        if ratio < 1.0:
+            raise SystemExit(
+                f"speculative/plain ratio {ratio:.3f} < 1.0")
+
+
+if __name__ == "__main__":
+    main()

@@ -99,6 +99,13 @@ def scenarios():
         # winning layouts differ with the halved KV traffic.
         yield ("paged_decode", paged_deployment_shapes(cfg), {})
         yield ("paged_decode", paged_deployment_shapes(cfg), {}, "int8")
+        # Deployment-level paged_verify (speculative decoding): page_size
+        # AND draft_k left free — the winner recommends the speculation
+        # depth alongside the block layout, and serve.py --speculative
+        # reads this entry to pick a default draft width. Shipped for
+        # float and int8 pools like paged_decode.
+        yield ("paged_verify", paged_deployment_shapes(cfg), {})
+        yield ("paged_verify", paged_deployment_shapes(cfg), {}, "int8")
         # Tensor-parallel serving deployments: each shard decodes its local
         # heads, so the scenario is (local shapes, mesh signature) — tuned
         # per shard, keyed per mesh. Mesh-keyed entries are only reachable
@@ -117,6 +124,8 @@ def scenarios():
             yield ("gqa_decode_kv8", local, {}, "int8", sig)
             yield ("paged_decode", local, {}, None, sig)
             yield ("paged_decode", local, {}, "int8", sig)
+            yield ("paged_verify", local, {}, None, sig)
+            yield ("paged_verify", local, {}, "int8", sig)
         if cfg.mla is not None:
             m = cfg.mla
             yield ("mla_decode",

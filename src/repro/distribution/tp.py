@@ -280,3 +280,21 @@ def make_tp_decode_paged(cfg: ModelConfig, mesh: Mesh, *, opts):
     return _wrap(cfg, mesh, body_of,
                  in_specs=(param_partition_specs(cfg), P(), cspecs, P(), P()),
                  out_specs=(P(), cspecs))
+
+
+def make_tp_verify_paged(cfg: ModelConfig, mesh: Mesh, *, opts):
+    """fn(params, tokens, cache, tables, lens) → (logits (B, K, vocab),
+    cache) — the speculative verify step; tokens (B, K) per-slot draft
+    blocks. KV-head-sharded pools and the paged_verify kernel run per
+    shard against local shapes, like the decode path."""
+    from repro.models import lm
+    cspecs = _paged_cache_specs(cfg, opts)
+
+    def body_of(lcfg):
+        return lambda params, tokens, cache, tables, lens: \
+            lm.verify_step_paged(params, lcfg, tokens, cache, tables, lens,
+                                 opts)
+
+    return _wrap(cfg, mesh, body_of,
+                 in_specs=(param_partition_specs(cfg), P(), cspecs, P(), P()),
+                 out_specs=(P(), cspecs))

@@ -25,9 +25,9 @@ against ref.py in tests/); on a TPU host the same calls lower via Mosaic.
 from repro.kernels import ops, ref, registry  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
     DECODE_ATTENTION, FLASH_ATTENTION, FLASH_ATTENTION_BWD,
-    GQA_DECODE_RAGGED, MATMUL, MLA_DECODE, PAGED_DECODE, RMS_NORM,
-    attention, decode, latent_decode, matmul, paged_decode, ragged_decode,
-    rmsnorm,
+    GQA_DECODE_RAGGED, MATMUL, MLA_DECODE, PAGED_DECODE, PAGED_VERIFY,
+    RMS_NORM, attention, decode, latent_decode, matmul, paged_decode,
+    paged_verify, ragged_decode, rmsnorm,
 )
 from repro.kernels.registry import (  # noqa: F401
     BenchCase, KernelSpec, get_kernel, kernel_names, list_kernels, register,

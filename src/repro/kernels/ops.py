@@ -838,6 +838,226 @@ def paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
 
 
 # ===========================================================================
+# Paged verify (speculative decoding: score K draft positions per sequence
+# in one launch — a ragged kv_len+K variant of paged_decode)
+# ===========================================================================
+
+def _paged_verify_vmem(cfg: Config, ctx: TuningContext) -> int:
+    B, Hq, D = ctx.shape("q")
+    Hkv = ctx.shape("k")[1]
+    g = max(1, Hq // Hkv) if cfg.get("pack_gqa", True) else 1
+    n = cfg["draft_k"] * g               # sublane rows per grid step
+    ib = dtype_bytes(ctx.dtype)
+    ps = cfg["page_size"]
+    qb = 4 if "int8" in ctx.dtype else ib
+    buf = 2 * (2 * ps * D * ib + n * D * qb)
+    if "int8" in ctx.dtype:
+        buf += 2 * 2 * ps * 4            # per-token dequant scale blocks
+    scratch = n * D * 4 + 2 * n * LANES * 4
+    out = 2 * n * D * 4
+    return buf + scratch + out
+
+
+def paged_verify_space() -> ConfigSpace:
+    sp = ConfigSpace(
+        "paged_verify",
+        [
+            Param("draft_k", (2, 3, 4, 6, 8)),
+            Param("page_size", (8, 16, 32, 64, 128, 256)),
+            Param("block_kv", (8, 16, 32, 64, 128, 256, 512)),
+            Param("pack_gqa", (True, False)),
+        ],
+        version=1,
+    )
+    sp.constrain("vmem", vmem_fits(_paged_verify_vmem))
+    sp.constrain("block_kv%page_size",
+                 lambda c, x: c["block_kv"] % c["page_size"] == 0)
+    sp.constrain(
+        "block_kv<=capacity",
+        lambda c, x: c["block_kv"] <= _rup(x.shape("k")[2], c["page_size"]))
+    # Layout pins, as in paged_decode: a deployed pool fixes page_size and
+    # the engine's speculation depth fixes draft_k (extra); offline tuning
+    # (no extra) sweeps both so the shipped DB covers the depth portfolio.
+    sp.constrain(
+        "page_size==pool",
+        lambda c, x: ("page_size" not in x.extra
+                      or c["page_size"] == x.extra["page_size"]))
+    sp.constrain(
+        "draft_k==request",
+        lambda c, x: ("draft_k" not in x.extra
+                      or c["draft_k"] == x.extra["draft_k"]))
+    return sp
+
+
+def _paged_verify_workload(cfg: Config, ctx: TuningContext) -> KernelWorkload:
+    B, Hq, D = ctx.shape("q")
+    _, Hkv, T, _ = ctx.shape("k")
+    group = max(1, Hq // Hkv)
+    pack = cfg.get("pack_gqa", True)
+    g = group if pack else 1
+    K = cfg["draft_k"]
+    rows = B * Hkv if pack else B * Hq
+    fill = float(ctx.extra.get("fill", 1.0))
+    ib = dtype_bytes(ctx.dtype)
+    ps = cfg["page_size"]
+    bk = min(cfg["block_kv"], _rup(T, ps))
+    pages = _cdiv(_rup(T, ps), ps)
+    run_rows = max(1.0, _rup(max(1, int(T * fill)), bk))
+    # K query positions amortize the same KV stream: K× the flops of
+    # paged_decode, identical page traffic.
+    flops = 4.0 * B * Hq * T * D * fill * K
+    quantized = "int8" in ctx.dtype
+    bytes_kv = 2.0 * rows * run_rows * D * ib
+    if quantized:
+        bytes_kv += 2.0 * rows * run_rows * 4
+    bytes_q = rows * K * g * D * (4 if quantized else ib)
+    bytes_tbl = rows * pages * 4 + B * 4
+    bytes_o = rows * K * g * D * 4
+    return KernelWorkload(
+        flops=flops,
+        hbm_bytes=bytes_kv + bytes_q + bytes_tbl + bytes_o,
+        grid_steps=int(rows * max(1, round(pages * fill))),
+        vmem_bytes=_paged_verify_vmem(cfg, ctx),
+        matmuls=[MatmulShape(K * g, D, ps), MatmulShape(K * g, ps, D)],
+        vector_flops=(6.0 * B * Hq * T * K
+                      + (4.0 * rows * run_rows * D if quantized else 0.0))
+        * fill,
+        dtype="bfloat16" if quantized else ctx.dtype,
+        parallel_grid=rows,
+    )
+
+
+def _paged_verify_heuristic(ctx: TuningContext) -> Config:
+    ps = int(ctx.extra.get("page_size", 16))
+    return {"draft_k": int(ctx.extra.get("draft_k", 4)),
+            "page_size": ps, "block_kv": ps, "pack_gqa": True}
+
+
+def _paged_verify_canonical(cfg: Config, ctx: TuningContext) -> Config:
+    c = dict(cfg)
+    c["block_kv"] = min(c["block_kv"],
+                        _rup(ctx.shape("k")[2], c["page_size"]))
+    return c
+
+
+def _paged_verify_operands(ctx: TuningContext, cfg: Optional[Config] = None):
+    """Pool + block tables as in ``_paged_operands``, plus a K-position
+    query block; lengths are ragged but >= K (the engine always scatters
+    the K draft positions before verifying them)."""
+    B, Hq, D = ctx.shape("q")
+    _, Hkv, T, _ = ctx.shape("k")
+    quantized = "int8" in ctx.dtype
+    dtype = jnp.float32 if quantized else jnp.dtype(ctx.dtype)
+    ps = int((cfg or {}).get("page_size",
+                             ctx.extra.get("page_size", 16)))
+    K = int((cfg or {}).get("draft_k",
+                            ctx.extra.get("draft_k", 4)))
+    pages_per_seq = _cdiv(T, ps)
+    n_pages = 1 + B * pages_per_seq
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(keys[0], (B, K, Hq, D), dtype)
+    kp = _rand(keys[1], (Hkv, n_pages, ps, D), dtype)
+    vp = _rand(keys[2], (Hkv, n_pages, ps, D), dtype)
+    tbl = _memo_operand(
+        ("pagetbl", B, pages_per_seq),
+        lambda: jnp.arange(1, 1 + B * pages_per_seq, dtype=jnp.int32)
+        .reshape(B, pages_per_seq))
+    fill = float(ctx.extra.get("fill", 1.0))
+    hi = max(K + 1, int(T * fill)) + 1
+    lens = _memo_operand(
+        ("randint", 11, K, B, hi),
+        lambda: jax.random.randint(jax.random.PRNGKey(11), (B,), K, hi))
+    if not quantized:
+        return (q, kp, vp, tbl, lens), {}
+    kq, ks, vq, vs = _memo_operand(
+        ("int8pool", (Hkv, n_pages, ps, D)),
+        lambda: _quantize_kv_pair(kp, vp))
+    return (q, kq, vq, tbl, lens), {"k_scales": ks, "v_scales": vs}
+
+
+def _paged_verify_runner(cfg: Config, ctx: TuningContext):
+    from repro.kernels.paged_verify import paged_verify as verify_kernel
+    args, kwargs = _paged_verify_operands(ctx, cfg)
+    fn = jax.jit(functools.partial(verify_kernel, block_kv=cfg["block_kv"],
+                                   pack_gqa=cfg["pack_gqa"]))
+    return KernelRunner(fn, *args, **kwargs)
+
+
+PAGED_VERIFY = TunableKernel(
+    name="paged_verify",
+    space=paged_verify_space(),
+    version=1,
+    workload_fn=_paged_verify_workload,
+    make_runner=_paged_verify_runner,
+    heuristic=_paged_verify_heuristic,
+    canonicalize=_paged_verify_canonical,
+)
+
+
+def paged_verify(q, k_pages, v_pages, block_tables, kv_len, *,
+                 k_scales=None, v_scales=None,
+                 scale: Optional[float] = None,
+                 config: Optional[Config] = None,
+                 tuner: Optional[Autotuner] = None, interpret: bool = True):
+    """Autotuned speculative verify. q (B,K,Hq,D) — K consecutive query
+    positions per sequence; k/v_pages (Hkv,P,page_size,D);
+    block_tables (B,max_pages) int32; kv_len (B,) int32 valid tokens
+    **including** the K scattered draft positions. Int8 pools (kv8) pass
+    ``k_scales``/``v_scales`` as in ``paged_decode``.
+
+    Both layout pins ride ``extra``: the pool fixes ``page_size`` and the
+    engine's speculation depth fixes ``draft_k``, so the tuner explores
+    only matching verify block layouts — and K is part of the cache
+    signature, making every draft width its own tuning scenario.
+
+    Serving hot path: the tuner-dispatch route runs under the kernel
+    guard when a fault plan is active, degrading through runner-up
+    configs down to the ``src/repro/kernels/ref.py`` oracle.
+    """
+    from repro.kernels.paged_verify import paged_verify as verify_kernel
+    ps = k_pages.shape[2]
+    B, K, Hq, D = q.shape
+    guarded = config is None
+    ctx = None
+    _ps_values = next(p.values for p in PAGED_VERIFY.space.params
+                      if p.name == "page_size")
+    _dk_values = next(p.values for p in PAGED_VERIFY.space.params
+                      if p.name == "draft_k")
+    if config is None and (ps not in _ps_values or K not in _dk_values):
+        # Off-space pool layout or draft width (tiny test pools): nothing
+        # to tune — one page per step, packed heads.
+        config = {"block_kv": ps, "pack_gqa": True}
+        tuner = None
+    if config is None:
+        tuner = tuner or default_tuner()
+        Hkv = k_pages.shape[0]
+        T = block_tables.shape[1] * ps
+        ctx = _ctx(tuner, {"q": (B, Hq, D), "k": (B, Hkv, T, D)},
+                   str(k_pages.dtype), page_size=ps, draft_k=K)
+        config = tuner.best_config(PAGED_VERIFY, ctx)
+        if tuner is not None:
+            tuner.record_dispatch(PAGED_VERIFY.name, ctx, config)
+
+    def run(cfg):
+        c = dict(cfg)
+        c.pop("page_size", None)
+        c.pop("draft_k", None)
+        return verify_kernel(q, k_pages, v_pages, block_tables, kv_len,
+                             k_scales=k_scales, v_scales=v_scales,
+                             scale=scale, interpret=interpret, **c)
+
+    if guarded and _guard_active():
+        def ref_run():
+            from repro.kernels import ref
+            return ref.paged_verify(q, k_pages, v_pages, block_tables,
+                                    kv_len, k_scales=k_scales,
+                                    v_scales=v_scales, scale=scale)
+        return _guarded_dispatch(PAGED_VERIFY, ctx, config, run, ref_run,
+                                 tuner)
+    return run(config)
+
+
+# ===========================================================================
 # MLA decode (absorbed latent attention over the compressed KV cache)
 # ===========================================================================
 
@@ -1539,6 +1759,28 @@ def _register_builtin_kernels() -> None:
             BenchCase("pool32k_kv8",
                       {"q": (16, 32, 128), "k": (16, 8, 32768, 128)},
                       dtype="int8", extra={"fill": 0.5}, scale="paper"),
+        ),
+    ))
+    register(KernelSpec(
+        tunable=PAGED_VERIFY,
+        scenarios=("decode", "gqa", "ragged", "serving", "paged", "quant",
+                   "speculative"),
+        reference=ref.paged_verify,
+        entry_point=paged_verify,
+        operands=_paged_verify_operands,
+        description="Speculative batched verify: K draft positions per "
+                    "sequence in one launch over the paged-KV pool "
+                    "(ragged kv_len+K causal tails; int8 pages under kv8)",
+        bench_cases=(
+            BenchCase("v1024", {"q": (2, 8, 128), "k": (2, 2, 1024, 128)},
+                      extra={"fill": 0.5, "draft_k": 4}),
+            BenchCase("v1024_kv8",
+                      {"q": (2, 8, 128), "k": (2, 2, 1024, 128)},
+                      dtype="int8", extra={"fill": 0.5, "draft_k": 4}),
+            BenchCase("vpool32k",
+                      {"q": (16, 32, 128), "k": (16, 8, 32768, 128)},
+                      dtype="bfloat16", extra={"fill": 0.5, "draft_k": 4},
+                      scale="paper"),
         ),
     ))
     register(KernelSpec(

@@ -114,6 +114,49 @@ def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     return jnp.where((lens > 0)[:, None, None], o, 0.0).astype(q.dtype)
 
 
+def paged_verify(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                 block_tables: jnp.ndarray, kv_len: jnp.ndarray, *,
+                 k_scales: Optional[jnp.ndarray] = None,
+                 v_scales: Optional[jnp.ndarray] = None,
+                 scale: Optional[float] = None) -> jnp.ndarray:
+    """Speculative-verify oracle: gather each sequence's pages dense, then
+    score K consecutive query positions with a per-sequence causal tail.
+
+    q (B, K, Hq, D); ``kv_len`` (B,) counts valid tokens *including* the K
+    scattered draft positions, so query t (absolute position
+    ``kv_len - K + t``) attends ``k_pos <= kv_len - K + t``. Query rows
+    with an empty causal window (inactive slots, ``kv_len < K`` tails)
+    return zeros, matching the kernel.
+    """
+    if k_scales is not None:
+        k_pages = k_pages.astype(jnp.float32) * \
+            k_scales.astype(jnp.float32)[..., None]
+        v_pages = v_pages.astype(jnp.float32) * \
+            v_scales.astype(jnp.float32)[..., None]
+    B, K, Hq, D = q.shape
+    k = gather_pages(k_pages, block_tables)     # (B, Hkv, T, D)
+    v = gather_pages(v_pages, block_tables)
+    Hkv, T = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    qh = jnp.moveaxis(q, 1, 2)                  # (B, Hq, K, D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qh.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    lens = jnp.minimum(kv_len, T)
+    q_pos = lens[:, None] - K + jnp.arange(K)[None, :]        # (B, K)
+    mask = jnp.arange(T)[None, None, :] <= q_pos[:, :, None]  # (B, K, T)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask[:, None], jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    safe_l = jnp.where(l == 0.0, 1.0, l)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p / safe_l, vq.astype(jnp.float32))
+    return jnp.moveaxis(o, 2, 1).astype(q.dtype)
+
+
 def mla_decode(q_abs: jnp.ndarray, q_rope: jnp.ndarray, ckv: jnp.ndarray,
                krope: jnp.ndarray, *, kv_len: Optional[jnp.ndarray] = None,
                scale: float = 1.0) -> jnp.ndarray:

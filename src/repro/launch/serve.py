@@ -101,6 +101,16 @@ def serve_paged(args, cfg, tuner):
         dtype="int8" if kv8 else SHIP_DTYPE,
         mesh=tp_mesh_signature(args.tp))
     deploy_cfg = tuner.best_config("paged_decode", ctx)
+    # Speculative decoding (--speculative): the paged_verify deployment
+    # entry is tuned with draft_k free, so its winner doubles as the
+    # recommended draft width when the flag gives no explicit K.
+    spec_k = 0
+    if args.speculative is not None:
+        verify_cfg = tuner.best_config("paged_verify", ctx)
+        spec_k = (args.speculative if args.speculative >= 2
+                  else int(verify_cfg["draft_k"]))
+        print(f"speculative decoding: deployment config {verify_cfg} "
+              f"-> draft_k {spec_k}")
     # Clamp to the largest tunable page size that a single sequence can
     # still fill (tiny smoke traces would otherwise waste a whole page).
     from repro.kernels.ops import PAGED_DECODE
@@ -121,7 +131,7 @@ def serve_paged(args, cfg, tuner):
         max_seq_len=max_seq_len + args.prefill_chunk,
         prefill_chunk=args.prefill_chunk,
         quant=None if args.quant == "none" else args.quant, tp=args.tp,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache, speculative=spec_k)
     plan = None
     if args.inject_faults:
         from repro.serving import FaultPlan, faults as fault_lib
@@ -167,6 +177,13 @@ def serve_paged(args, cfg, tuner):
     print(f"lifecycle: {res['preemptions']} preemptions, "
           f"{res['resumes']} resumes, {res['failed_requests']} failed, "
           f"{res['timed_out_requests']} timed out")
+    if "speculative" in res:
+        sp = res["speculative"]
+        print(f"speculative: draft_k {sp['draft_k']}, "
+              f"{sp['committed_tokens']} tokens over {sp['verify_steps']} "
+              f"verify steps ({sp['accepted_per_step']:.2f} accepted/step, "
+              f"{sp['fallbacks']} fallbacks"
+              + (", degraded to plain decode)" if sp["degraded"] else ")"))
     # Every submitted request must land in a terminal state — the smoke
     # gate for the faults-smoke CI job: faults degrade requests, they
     # never wedge or crash the engine.
@@ -283,6 +300,15 @@ def main(argv=None):
                          "shard_map serving). Needs >= N jax devices: on a "
                          "CPU host, launch with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--speculative", type=int, nargs="?", const=0,
+                    default=None, metavar="K",
+                    help="speculative decoding (paged only): draft-and-"
+                         "verify with K draft positions per step through "
+                         "the paged_verify kernel (serving/drafter.py "
+                         "n-gram drafts, greedy accept/rollback — output "
+                         "is token-identical to plain decode). Bare "
+                         "--speculative takes K from the tuned "
+                         "paged_verify deployment entry")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="cross-request prefix caching (paged only): "
                          "retired sequences park their pages in a radix "
@@ -310,6 +336,9 @@ def main(argv=None):
     if args.inject_faults and args.decode_impl != "paged":
         raise SystemExit("--inject-faults requires --decode-impl paged "
                          "(the fault harness drives the paged scheduler)")
+    if args.speculative is not None and args.decode_impl != "paged":
+        raise SystemExit("--speculative requires --decode-impl paged "
+                         "(draft-and-verify runs on the paged engine)")
     os.environ["REPRO_ON_MISS"] = args.on_miss
     cfg = get_config(args.arch, smoke=not args.full_config)
     if args.decode_impl != "full":

@@ -558,6 +558,42 @@ def attn_decode_paged(p, x, cfg: ModelConfig, cache, block_tables, lens):
     return _proj_out(p, o[:, None], cfg), new
 
 
+def attn_verify_paged(p, x, cfg: ModelConfig, cache, block_tables, lens):
+    """Speculative verify: score K consecutive positions in one pass.
+
+    x (B, K, d) — the last committed token plus K-1 drafted continuations;
+    lens (B,) int32 tokens already resident (the K inputs land at
+    positions [lens, lens+K)). Writes all K positions' KV into the pool —
+    rejected drafts leave stale entries past the accepted prefix, which is
+    harmless: the scheduler rewinds ``pos`` and later scatters overwrite.
+
+    Dispatches the autotuned ``paged_verify`` registry kernel: query t
+    attends the resident prefix plus drafts 0..t (kv_len = lens + K with
+    in-kernel causal tails), so accepted outputs are exactly what K
+    sequential ``attn_decode_paged`` calls would have produced.
+    """
+    assert cfg.mla is None and cfg.window is None, \
+        "paged serving supports dense RoPE attention (no MLA/SWA yet)"
+    from repro.kernels import ops as kops
+    B, K, _ = x.shape
+    positions = lens[:, None] + jnp.arange(K)[None, :]          # (B, K)
+    q, k, v = _qkv(p, x, cfg, positions)
+    new = dict(cache)
+    scales = {}
+    if "k_scales" in cache:                 # int8 pools (kv8 policy)
+        k, ks, v, vs = _quant_kv_token(k, v)
+        new["k_scales"] = _scatter_pages(cache["k_scales"], ks,
+                                         block_tables, lens)
+        new["v_scales"] = _scatter_pages(cache["v_scales"], vs,
+                                         block_tables, lens)
+        scales = {"k_scales": new["k_scales"], "v_scales": new["v_scales"]}
+    kp = _scatter_pages(cache["k_pages"], k, block_tables, lens)
+    vp = _scatter_pages(cache["v_pages"], v, block_tables, lens)
+    new["k_pages"], new["v_pages"] = kp, vp
+    o = kops.paged_verify(q, kp, vp, block_tables, lens + K, **scales)
+    return _proj_out(p, o, cfg), new
+
+
 # --- cross attention (whisper decoder) ----------------------------------------
 
 def cross_specs(cfg: ModelConfig):

@@ -442,21 +442,24 @@ def _apply_ffn(p, h, ffn, cfg: ModelConfig, opts: ForwardOpts):
     return h
 
 
-def _block_paged(p, h, kind, cfg, opts, cache, tables, start, *, decode):
+_PAGED_ATTN = {
+    "prefill": lambda *a: ATT.attn_prefill_paged(*a),
+    "decode": lambda *a: ATT.attn_decode_paged(*a),
+    "verify": lambda *a: ATT.attn_verify_paged(*a),
+}
+
+
+def _block_paged(p, h, kind, cfg, opts, cache, tables, start, *, mode):
     mixer, ffn = kind.split("_")
     assert mixer == "attn", f"paged serving: unsupported mixer {mixer!r}"
     hn = apply_norm(p["ln1"], h, cfg, impl=opts.norm_impl)
-    if decode:
-        mix, c = ATT.attn_decode_paged(p["mix"], hn, cfg, cache["self"],
-                                       tables, start)
-    else:
-        mix, c = ATT.attn_prefill_paged(p["mix"], hn, cfg, cache["self"],
-                                        tables, start)
+    mix, c = _PAGED_ATTN[mode](p["mix"], hn, cfg, cache["self"],
+                               tables, start)
     h = _apply_ffn(p, h + mix, ffn, cfg, opts)
     return h, {"self": c}
 
 
-def _run_units_paged(params, h, cfg, opts, cache, tables, start, *, decode):
+def _run_units_paged(params, h, cfg, opts, cache, tables, start, *, mode):
     new_cache = {}
     for ui, (unit, reps) in enumerate(cfg.scan_plan()):
         pu = params[f"u{ui}"]
@@ -469,7 +472,7 @@ def _run_units_paged(params, h, cfg, opts, cache, tables, start, *, decode):
             for i, kind in enumerate(unit):
                 hh, nc = _block_paged(pl[f"l{i}"], hh, kind, cfg, opts,
                                       cl[f"l{i}"], tables, start,
-                                      decode=decode)
+                                      mode=mode)
                 ncs[f"l{i}"] = nc
             return hh, ncs
 
@@ -491,7 +494,7 @@ def prefill_paged(params, cfg: ModelConfig, tokens, cache, block_tables,
     _check_paged(cfg)
     h = embed_tokens(params["embed"], tokens, cfg)
     h, new_cache = _run_units_paged(params, h, cfg, opts, cache,
-                                    block_tables, start, decode=False)
+                                    block_tables, start, mode="prefill")
     h = apply_norm(params["final_ln"], h, cfg, impl=opts.norm_impl)
     logits = logits_out(params["embed"], h, cfg)
     return logits, new_cache
@@ -505,10 +508,28 @@ def decode_step_paged(params, cfg: ModelConfig, token, cache, block_tables,
     _check_paged(cfg)
     h = embed_tokens(params["embed"], token, cfg)
     h, new_cache = _run_units_paged(params, h, cfg, opts, cache,
-                                    block_tables, lens, decode=True)
+                                    block_tables, lens, mode="decode")
     h = apply_norm(params["final_ln"], h, cfg, impl=opts.norm_impl)
     logits = logits_out(params["embed"], h, cfg)
     return logits[:, 0], new_cache
+
+
+def verify_step_paged(params, cfg: ModelConfig, tokens, cache, block_tables,
+                      lens, opts: ForwardOpts = ForwardOpts()):
+    """Speculative verify across the continuous batch: score K consecutive
+    positions per sequence in one pass. tokens (B, K) — the last committed
+    token plus K-1 drafts, landing at positions lens[b]..lens[b]+K-1;
+    lens (B,) int32 resident lengths (0 = inactive slot). Returns
+    (logits (B, K, vocab), new cache): logits[:, t] predicts the token
+    after draft position t, exactly what K sequential ``decode_step_paged``
+    calls would produce when every draft matches."""
+    _check_paged(cfg)
+    h = embed_tokens(params["embed"], tokens, cfg)
+    h, new_cache = _run_units_paged(params, h, cfg, opts, cache,
+                                    block_tables, lens, mode="verify")
+    h = apply_norm(params["final_ln"], h, cfg, impl=opts.norm_impl)
+    logits = logits_out(params["embed"], h, cfg)
+    return logits, new_cache
 
 
 def paged_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,

@@ -18,7 +18,9 @@ registry kernel over the scheduler's block tables.
                  with optimistic admission and exact-resume preemption
     ServingEngine — binds a model to the scheduler and runs the jitted
                  prefill_paged / decode_step_paged steps (with a
-                 non-finite logits guard)
+                 non-finite logits guard); ``speculative=K`` swaps decode
+                 for draft-and-verify over the ``paged_verify`` kernel
+    NgramDrafter — self-speculative n-gram proposer (drafter.py)
     FaultPlan  — deterministic fault-injection schedule (faults.py)
 
 See docs/serving.md for the design, benchmarks/serving_throughput.py
@@ -26,6 +28,7 @@ for the dense-vs-paged throughput comparison, and
 benchmarks/prefix_caching.py for the shared-prefix trace benchmark.
 """
 
+from repro.serving.drafter import NgramDrafter  # noqa: F401
 from repro.serving.faults import (  # noqa: F401
     FaultEvent, FaultPlan, InjectedCompileError, InjectedKernelError,
 )

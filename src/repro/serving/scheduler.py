@@ -40,6 +40,15 @@ a model to it and runs the jitted ``lm.prefill_paged`` /
 ``lm.decode_step_paged`` steps with greedy sampling, plus a non-finite
 guard on the decode logits (NaN logits fail the request and quarantine the
 active ``paged_decode`` config instead of emitting garbage argmax tokens).
+
+With ``speculative=K`` the engine swaps the one-token decode step for
+draft-and-verify: a per-request n-gram drafter (serving/drafter.py)
+proposes K-1 continuation tokens, ``lm.verify_step_paged`` scores all K
+positions in one autotuned ``paged_verify`` launch, and the scheduler
+commits the greedily-matched prefix (1..K tokens per step), rolling back
+pages reserved for the rejected tail. Greedy accept/rollback keeps output
+token-for-token identical to plain decode; verify faults degrade the
+engine to non-speculative decode instead of failing requests.
 """
 
 from __future__ import annotations
@@ -133,11 +142,15 @@ class StepStats:
     preempted: int = 0                 # sequences preempted this step
     failed: int = 0                    # requests failed this step
     timed_out: int = 0                 # requests expired this step
+    degraded: int = 0                  # speculative→plain fallbacks this step
 
     def progressed(self) -> bool:
+        # ``degraded`` counts: a poisoned verify burst commits nothing,
+        # but flipping the engine to plain decode IS forward progress —
+        # the same positions re-score next step.
         return bool(self.admitted or self.retired or self.prefill_tokens
                     or self.decode_tokens or self.preempted or self.failed
-                    or self.timed_out)
+                    or self.timed_out or self.degraded)
 
 
 class Scheduler:
@@ -157,11 +170,15 @@ class Scheduler:
                  prefill_chunk: int = 8,
                  prefix_cache: Optional[PrefixCache] = None,
                  lookahead: int = 4, aging_cap: int = 64,
-                 record_events: bool = False):
+                 record_events: bool = False, spec_k: int = 1):
         self.pool = pool
         self.max_batch = int(max_batch)
         self.max_pages = int(max_pages)
         self.prefill_chunk = int(prefill_chunk)
+        # Speculative verify width: each decode step may scatter up to
+        # spec_k draft tokens before any of them is accepted, so capacity
+        # checks and the oversized-rejection bound must charge the burst.
+        self.spec_k = max(1, int(spec_k))
         self.prefix_cache = prefix_cache
         if prefix_cache is not None and prefix_cache.pool is not pool:
             raise ValueError("prefix cache must index the scheduler's pool")
@@ -192,11 +209,18 @@ class Scheduler:
         """Worst-case resident tokens over the request's whole lifetime,
         including the longest possible chunk-padded *resume* view
         (prompt + max_new_tokens - 1 re-prefilled after a late
-        preemption) — the bound the oversized-rejection guard checks."""
+        preemption) — the bound the oversized-rejection guard checks.
+
+        Under speculative decoding the burst is charged up front: the
+        deepest verify step starts from pos = total - 2 (one committed
+        token short of the budget) and scatters spec_k draft positions,
+        so total - 2 + spec_k tokens may be resident at once even though
+        at most one of those drafts is ever kept."""
         c = self.prefill_chunk
         total = req.prompt_len + req.max_new_tokens
         pad = lambda n: -(-n // c) * c          # noqa: E731
-        return max(pad(req.prompt_len), pad(total - 1), total)
+        burst = total - 2 + self.spec_k if self.spec_k > 1 else 0
+        return max(pad(req.prompt_len), pad(total - 1), total, burst)
 
     def _prefill_view(self, req: Request) -> np.ndarray:
         """Tokens to (re-)prefill: the prompt, or on resume the prompt
@@ -264,12 +288,24 @@ class Scheduler:
         (prompt + generated tokens — the last generated token was never
         written), so the next request with this prefix (including this
         request's own resume) hits instead of re-prefilling; the ragged
-        tail and unused reservation are freed."""
+        tail and unused reservation are freed.
+
+        Page-boundary accounting: during decode ``pos`` always equals
+        ``len(prompt) + len(tokens) - 1`` (mid-prefill it is <= the view
+        length), so the resident stream is at least ``pos`` tokens long
+        and the ``n_full * ps`` slice below is exact — including when
+        ``pos`` lands exactly on a page boundary, where the last
+        allocated page holds no valid token yet and is freed, not
+        parked. Speculative rollback keeps this true: rejected draft KV
+        only ever lives at positions >= pos, i.e. outside every full
+        page counted by ``n_full``."""
         ps = self.pool.page_size
         n_full = min(seq.pos // ps, len(seq.pages))
         resident = np.concatenate(
             [seq.req.prompt,
              np.asarray(seq.req.tokens[:-1], np.int32)])[:n_full * ps]
+        assert len(resident) == n_full * ps, \
+            f"parked slice {len(resident)} != {n_full} full pages of {ps}"
         self.prefix_cache.insert(resident, seq.pages[:n_full],
                                  rid=seq.req.rid)
         self.pool.free(seq.pages[n_full:])
@@ -486,13 +522,13 @@ class Scheduler:
         items.sort(key=lambda r: (r.arrival, r.rid))
         self.waiting = deque(items)
 
-    def _ensure_capacity(self, b: int) -> bool:
-        """Grow slot ``b``'s pages to cover its next decode write. On pool
-        exhaustion: evict LRU trie pages, then preempt victims (latest
-        arrival first — possibly ``b`` itself). False iff ``b`` was
-        preempted."""
+    def _ensure_capacity(self, b: int, n: int = 1) -> bool:
+        """Grow slot ``b``'s pages to cover its next ``n`` decode writes
+        (n = spec_k for a speculative verify burst). On pool exhaustion:
+        evict LRU trie pages, then preempt victims (latest arrival first
+        — possibly ``b`` itself). False iff ``b`` was preempted."""
         seq = self.slots[b]
-        while self.pool.pages_for(seq.pos + 1) > len(seq.pages):
+        while self.pool.pages_for(seq.pos + n) > len(seq.pages):
             pg = self.pool.alloc(1)
             if (pg is None and self.prefix_cache is not None
                     and self.prefix_cache.evict(1)):
@@ -536,22 +572,43 @@ class Scheduler:
         if seq.pos >= len(seq.view):
             seq.prompt_done = True
 
-    def decode_mask(self) -> np.ndarray:
+    def decode_mask(self, lookahead: int = 1) -> np.ndarray:
         """Decode-ready slots, after growing every slot's pages to cover
-        this step's write (which may preempt victims — including slots
+        this step's write — ``lookahead`` tokens of it for a speculative
+        verify burst (which may preempt victims — including slots
         already scanned, so readiness is re-derived afterwards)."""
+        n = max(1, int(lookahead))
         for b in range(self.max_batch):
             seq = self.slots[b]
             if seq is not None and seq.prompt_done and not seq.req.done():
-                self._ensure_capacity(b)
+                self._ensure_capacity(b, n)
         return np.array(
             [s is not None and s.prompt_done and not s.req.done()
-             and self.pool.pages_for(s.pos + 1) <= len(s.pages)
+             and self.pool.pages_for(s.pos + n) <= len(s.pages)
              for s in self.slots], bool)
 
     def advance_decoded(self, mask: np.ndarray) -> None:
         for b in np.nonzero(mask)[0]:
             self.slots[int(b)].pos += 1
+
+    def commit_verify(self, b: int, accepted: int) -> None:
+        """Commit a speculative verify step for slot ``b``: ``accepted``
+        tokens (1..spec_k) were appended to the request, so ``pos``
+        advances by that many. The rejected tail's pages are NOT freed:
+        they are needed again for the very next burst, and — the bug
+        this guards against — a slot's page list must only ever grow
+        while it is occupied. The engine caches device block tables
+        keyed on (rid, ready, len(pages)); a free-then-regrow can hand
+        the page to another slot while the stale device table still
+        maps it here, so the next scatter would corrupt that slot's KV.
+        The reservation is already charged by ``max_tokens``'s burst
+        bound; preemption and retirement release it like any other
+        page. Stale draft KV past ``pos`` is harmless: the next scatter
+        overwrites it, attention never reads past ``kv_len``, and
+        ``_park`` only parks full pages below ``pos``."""
+        seq = self.slots[b]
+        assert seq is not None and 1 <= accepted <= self.spec_k
+        seq.pos += accepted
 
     # -- device-facing state ----------------------------------------------
     def block_tables(self) -> np.ndarray:
@@ -569,6 +626,22 @@ class Scheduler:
         """True when admission is only waiting out preemption backoff —
         the engine's stall detector keeps stepping instead of raising."""
         return any(r.not_before_step > self._step for r in self.waiting)
+
+    def fast_forward_backoff(self) -> bool:
+        """Jump the step clock to just before the earliest pending
+        ``not_before_step`` so a fully-backed-off queue drains in O(1)
+        steps instead of one idle step per backoff tick. Only safe when
+        backoff is the *only* pending work (no active slots, no fault
+        plan holding pages against a release step) — the engine's run
+        loop checks that before calling. Returns True if it jumped."""
+        pending = [r.not_before_step for r in self.waiting
+                   if r.not_before_step > self._step]
+        if not pending:
+            return False
+        # admit() increments _step before the eligibility check, so
+        # landing at (earliest - 1) makes the next admission eligible.
+        self._step = min(pending) - 1
+        return True
 
     def check_invariants(self) -> None:
         """Pool consistency + block tables consistent with ownership."""
@@ -632,7 +705,7 @@ class ServingEngine:
                  max_batch: int, max_seq_len: int, prefill_chunk: int = 8,
                  opts=None, quant=None, tp: int = 1,
                  prefix_cache: bool = False, record_cache_events: bool = False,
-                 record_events: bool = False):
+                 record_events: bool = False, speculative: int = 0):
         import jax
         import jax.numpy as jnp
 
@@ -640,6 +713,19 @@ class ServingEngine:
         from repro.quant import get_policy, quantize_params
 
         self.cfg = cfg
+        # Draft-and-verify speculative decoding (docs/serving.md): with
+        # speculative = K >= 2, decode steps score K positions per
+        # sequence through the ``paged_verify`` kernel — one committed
+        # token plus K-1 self-speculative n-gram drafts — and commit the
+        # greedily-matched prefix. Greedy accept/rollback makes output
+        # token-for-token identical to plain decode; only throughput
+        # changes. K < 2 is plain one-token decode.
+        self.spec_k = int(speculative) if int(speculative) >= 2 else 1
+        self._spec_disabled = False    # degrade switch: verify faults
+        self._drafters: Dict[int, Any] = {}     # rid -> NgramDrafter
+        self.spec_steps = 0            # per-slot verify dispatches
+        self.spec_committed = 0        # tokens committed by those
+        self.spec_fallbacks = 0        # verify faults degraded to decode
         self.pool = PagePool(num_pages, page_size)
         # Cross-request prefix caching (docs/serving.md): retired (and
         # preempted) sequences park their pages in a radix tree instead of
@@ -654,7 +740,7 @@ class ServingEngine:
             self.pool, max_batch=max_batch,
             max_pages=self.pool.pages_for(max_seq_len),
             prefill_chunk=prefill_chunk, prefix_cache=self.prefix_cache,
-            record_events=record_events)
+            record_events=record_events, spec_k=self.spec_k)
         self.max_seq_len = int(max_seq_len)
         if opts is None:
             opts = lm.ForwardOpts(decode_impl="paged", quant=quant)
@@ -689,6 +775,9 @@ class ServingEngine:
                                                         opts=self.opts)
             step_decode = tp_lib.make_tp_decode_paged(cfg, self.mesh,
                                                       opts=self.opts)
+            step_verify = (tp_lib.make_tp_verify_paged(cfg, self.mesh,
+                                                       opts=self.opts)
+                           if self.spec_k > 1 else None)
         else:
             def step_prefill(params, tokens, cache, tables, start):
                 return lm.prefill_paged(params, cfg, tokens, cache,
@@ -696,6 +785,10 @@ class ServingEngine:
 
             def step_decode(params, token, cache, tables, lens):
                 return lm.decode_step_paged(params, cfg, token, cache,
+                                            tables, lens, self.opts)
+
+            def step_verify(params, tokens, cache, tables, lens):
+                return lm.verify_step_paged(params, cfg, tokens, cache,
                                             tables, lens, self.opts)
 
         # Greedy sampling runs inside the jitted step so only token ids
@@ -715,8 +808,19 @@ class ServingEngine:
             ok = jnp.isfinite(logits).all(-1)
             return jnp.argmax(logits, -1).astype(jnp.int32), ok, cache
 
+        # Verify: greedy argmax at each of the K draft positions; one
+        # finite bit per slot covers all K (any non-finite position
+        # invalidates the whole burst). ``scale`` is the same (B, 1)
+        # poison operand, broadcast over K.
+        def _verify(params, tokens, cache, tables, lens, scale):
+            logits, cache = step_verify(params, tokens, cache, tables, lens)
+            logits = logits * scale[:, :, None]
+            ok = jnp.isfinite(logits).all(-1).all(-1)
+            return jnp.argmax(logits, -1).astype(jnp.int32), ok, cache
+
         self._prefill_raw = _prefill
         self._decode_raw = _decode
+        self._verify_raw = _verify if self.spec_k > 1 else None
         # Donate the cache on real accelerators: the previous pool buffers
         # are dead after every step, so donation avoids a full-pool copy
         # per token and 2x peak KV memory. On the CPU interpret-mode host
@@ -737,18 +841,33 @@ class ServingEngine:
                                    donate_argnums=self._donate)
         self._decode_fn = jax.jit(self._decode_raw,
                                   donate_argnums=self._donate)
+        self._verify_fn = (jax.jit(self._verify_raw,
+                                   donate_argnums=self._donate)
+                           if self._verify_raw is not None else None)
 
-    def _requarantine_and_rejit(self) -> bool:
-        """Non-finite decode logits: quarantine the paged_decode config
+    def _requarantine_and_rejit(self, kernel: str = "paged_decode") -> bool:
+        """Non-finite step logits: quarantine the named kernel's config
         that traced into the current jit (if the dispatch is known) and
         rebuild the jitted steps so the next trace re-resolves configs
         post-quarantine."""
         from repro.core.tuner import default_tuner
-        quarantined = default_tuner().quarantine_last("paged_decode")
+        quarantined = default_tuner().quarantine_last(kernel)
         self._build_jits()
         self._dev_tables_key = None
         self._dev_tables = None
         return quarantined
+
+    def _drafter(self, req: Request):
+        """Per-request self-speculative drafter, fed the committed
+        stream lazily (prompt + accepted tokens only — rejected drafts
+        never enter, so the stream is append-only across rollbacks)."""
+        from repro.serving.drafter import NgramDrafter
+        d = self._drafters.get(req.rid)
+        if d is None:
+            d = self._drafters[req.rid] = NgramDrafter()
+        stream = list(map(int, req.prompt)) + req.tokens
+        d.observe(stream)
+        return d
 
     def _check(self, req: Request) -> bool:
         if self.scheduler.max_tokens(req) > self.max_seq_len:
@@ -759,6 +878,108 @@ class ServingEngine:
             return False
         return True
 
+    def _dev_tables_for(self, mask: np.ndarray):
+        """Device block tables for this step, cached keyed on (occupant,
+        decode-ready, table length) per slot: a recycled slot (same
+        mask, new request) or a slot that grew a page must re-upload
+        its table row. Soundness rests on a slot's page list only ever
+        growing while occupied (``commit_verify`` deliberately keeps
+        the rejected-burst reservation for exactly this reason) — same
+        rid at the same length always means the same page ids."""
+        sched = self.scheduler
+        key = tuple(
+            (s.req.rid if s is not None else -1, bool(m),
+             0 if s is None else len(s.pages))
+            for s, m in zip(sched.slots, mask))
+        if self._dev_tables is None or key != self._dev_tables_key:
+            # Inactive rows (idle or mid-prefill) must scatter their
+            # dummy token into the scratch page, not through their
+            # real tables.
+            tables = sched.block_tables()
+            tables[~mask] = SCRATCH_PAGE
+            self._dev_tables = self._jnp.asarray(tables)
+            self._dev_tables_key = key
+        return self._dev_tables
+
+    def _step_verify(self, mask: np.ndarray, plan, stats: StepStats) -> None:
+        """One speculative decode step for every ready slot: scatter the
+        last committed token plus K-1 n-gram drafts, score all K
+        positions in one ``paged_verify`` launch, and commit the
+        greedily-accepted prefix (1..K tokens) with page rollback for
+        the rejected tail.
+
+        Output equals plain greedy decode token-for-token: position t's
+        argmax is exactly what sequential decode would produce after
+        x_0..x_t, and commits stop at the first draft that diverges.
+
+        Fault degrade: a fault consumed by a ``paged_verify`` dispatch
+        during trace (quarantine + ref fallback keep the traced step
+        correct), or a non-finite verify burst at runtime, flips the
+        engine to plain non-speculative decode. Non-finite bursts are
+        *not* failed like decode steps — nothing is committed, the
+        config is quarantined, and the same tokens are re-scored by
+        plain decode next step, so the request still finishes
+        token-identically."""
+        jnp = self._jnp
+        sched = self.scheduler
+        K = self.spec_k
+        toks = np.zeros((sched.max_batch, K), np.int32)
+        for b in np.nonzero(mask)[0]:
+            seq = sched.slots[int(b)]
+            toks[b, 0] = seq.req.tokens[-1]
+            toks[b, 1:] = self._drafter(seq.req).propose(K - 1)
+        lens = sched.lens() * mask                # inactive slots -> 0
+        scale = np.ones((sched.max_batch, 1), np.float32)
+        if plan is not None:
+            active = [int(b) for b in np.nonzero(mask)[0]]
+            for s in plan.logit_poison(sched._step, active):
+                scale[s] = float("nan")
+        log_n = len(plan.log) if plan is not None else 0
+        vtoks, vok, self.cache = self._verify_fn(
+            self.params, jnp.asarray(toks), self.cache,
+            self._dev_tables_for(mask), jnp.asarray(lens, jnp.int32),
+            jnp.asarray(scale))
+        if plan is not None and any(
+                e.get("kernel") == "paged_verify"
+                for e in plan.log[log_n:]):
+            # A verify dispatch consumed an injected fault while tracing.
+            # The guarded dispatch already quarantined it and traced a
+            # correct fallback, so this step's outputs are still good —
+            # but the kernel is suspect: degrade to plain decode.
+            self._spec_disabled = True
+            self.spec_fallbacks += 1
+        outs = np.asarray(vtoks)                  # (B, K) greedy argmax
+        okh = np.asarray(vok).reshape(-1)
+        t = time.perf_counter()
+        committed = 0
+        for b in np.nonzero(mask)[0]:
+            b = int(b)
+            if not okh[b]:
+                continue
+            seq = sched.slots[b]
+            req = seq.req
+            # Longest accepted prefix: position t's output is committed
+            # while every draft before it matched the model's choice.
+            a = 0
+            while a < K - 1 and toks[b, a + 1] == outs[b, a]:
+                a += 1
+            take = min(a + 1, req.max_new_tokens - len(req.tokens))
+            req.tokens.extend(int(x) for x in outs[b, :take])
+            req.token_times.extend([t] * take)
+            sched.commit_verify(b, take)
+            committed += take
+            self.spec_steps += 1
+        if not okh[mask].all():
+            # Non-finite verify logits: commit nothing for those slots,
+            # quarantine the verify config, and fall back to plain
+            # decode — the request survives and re-scores next step.
+            self._spec_disabled = True
+            self.spec_fallbacks += 1
+            stats.degraded += 1
+            self._requarantine_and_rejit("paged_verify")
+        self.spec_committed += committed
+        stats.decode_tokens = committed
+
     def step(self, now: float = float("inf")) -> StepStats:
         """One scheduler iteration; returns what happened."""
         jnp = self._jnp
@@ -766,7 +987,10 @@ class ServingEngine:
         plan = fault_lib.get_active()
         stats = StepStats()
         pre = (sched.preemptions, sched.failures, sched.timeouts)
-        stats.retired = len(sched.retire_finished())
+        retired = sched.retire_finished()
+        stats.retired = len(retired)
+        for req in retired:
+            self._drafters.pop(req.rid, None)
         admitted = sched.admit(now)
         stats.admitted = len(admitted)
         stats.prefix_cached_tokens = sum(
@@ -794,8 +1018,11 @@ class ServingEngine:
                 else:
                     sched.fail_slot(b, "non-finite prefill logits")
 
-        mask = sched.decode_mask()
-        if mask.any():
+        speculate = self.spec_k > 1 and not self._spec_disabled
+        mask = sched.decode_mask(lookahead=self.spec_k if speculate else 1)
+        if mask.any() and speculate:
+            self._step_verify(mask, plan, stats)
+        elif mask.any():
             toks = np.zeros((sched.max_batch, 1), np.int32)
             for b in np.nonzero(mask)[0]:
                 toks[b, 0] = sched.slots[int(b)].req.tokens[-1]
@@ -805,24 +1032,9 @@ class ServingEngine:
                 active = [int(b) for b in np.nonzero(mask)[0]]
                 for s in plan.logit_poison(sched._step, active):
                     scale[s] = float("nan")
-            # Key on (occupant, decode-ready, table length) per slot: a
-            # recycled slot (same mask, new request) or a slot that grew a
-            # page must re-upload its table row.
-            key = tuple(
-                (s.req.rid if s is not None else -1, bool(m),
-                 0 if s is None else len(s.pages))
-                for s, m in zip(sched.slots, mask))
-            if self._dev_tables is None or key != self._dev_tables_key:
-                # Inactive rows (idle or mid-prefill) must scatter their
-                # dummy token into the scratch page, not through their
-                # real tables.
-                tables = sched.block_tables()
-                tables[~mask] = SCRATCH_PAGE
-                self._dev_tables = jnp.asarray(tables)
-                self._dev_tables_key = key
             dtoks, dok, self.cache = self._decode_fn(
                 self.params, jnp.asarray(toks), self.cache,
-                self._dev_tables, jnp.asarray(lens, jnp.int32),
+                self._dev_tables_for(mask), jnp.asarray(lens, jnp.int32),
                 jnp.asarray(scale))
             next_tok = np.asarray(dtoks)
             okh = np.asarray(dok).reshape(-1)
@@ -874,6 +1086,15 @@ class ServingEngine:
                     or (plan is not None and plan.pending())):
                 # Preemption backoff / a fault hogging pages: the step
                 # clock advances every iteration, so these resolve.
+                if (not real_time
+                        and not any(s is not None
+                                    for s in self.scheduler.slots)
+                        and (plan is None or not plan.pending())):
+                    # Nothing is running and the only pending work is
+                    # waiting out backoff: jump the virtual step clock
+                    # to the earliest re-admission instead of burning
+                    # one idle device-free step per backoff tick.
+                    self.scheduler.fast_forward_backoff()
                 stalls += 1
                 if stalls > 100_000:
                     raise RuntimeError("scheduler made no progress "
@@ -881,6 +1102,8 @@ class ServingEngine:
                 continue
             raise RuntimeError("scheduler made no progress")
         self.scheduler.retire_finished()
+        for req in requests:
+            self._drafters.pop(req.rid, None)
         if plan is not None:
             plan.release_all(self.pool)
         wall = time.perf_counter() - t0
@@ -903,6 +1126,16 @@ class ServingEngine:
                 r.state is RequestState.TIMED_OUT for r in requests),
             "terminal_requests": sum(r.terminal() for r in requests),
         }
+        if self.spec_k > 1:
+            out["speculative"] = {
+                "draft_k": self.spec_k,
+                "verify_steps": self.spec_steps,
+                "committed_tokens": self.spec_committed,
+                "accepted_per_step": (
+                    self.spec_committed / max(1, self.spec_steps)),
+                "fallbacks": self.spec_fallbacks,
+                "degraded": self._spec_disabled,
+            }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()
         return out

@@ -907,3 +907,98 @@ def test_engine_rejects_oversized_as_failed_result():
     assert too_long.state is RequestState.FAILED
     assert "max_seq_len" in too_long.failure_reason
     assert res["terminal_requests"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Faults inside a speculative verify step: quarantine degrades the engine
+# to plain non-speculative decode and the request finishes token-identical.
+# ---------------------------------------------------------------------------
+
+def _spec_fault_reqs(vocab, n=3, gen=6):
+    rng = np.random.default_rng(2)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, vocab, 8).astype(np.int32),
+                    max_new_tokens=gen, arrival=float(i))
+            for i in range(n)]
+
+
+def test_verify_dispatch_fault_degrades_to_plain_decode(
+        fresh_default_tuner):
+    """``kexc@2:paged_verify`` (the --inject-faults grammar) poisons the
+    verify kernel's dispatch while the jit traces: the guarded dispatch
+    quarantines the failing configs and traces the reference fallback —
+    that step's outputs are still committed — then the engine flips to
+    plain decode for the rest of the run. Output stays token-identical
+    to a fault-free plain engine."""
+    import jax
+
+    from repro.models import lm
+    from repro.models.param import init_params
+    from repro.serving import ServingEngine
+
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    kw = dict(num_pages=16, page_size=8, max_batch=2, max_seq_len=32,
+              prefill_chunk=8)
+    plain = ServingEngine(cfg, params, **kw)
+    p_reqs = _spec_fault_reqs(cfg.vocab_size)
+    plain.run(p_reqs)
+
+    engine = ServingEngine(cfg, params, **kw, speculative=4)
+    reqs = _spec_fault_reqs(cfg.vocab_size)
+    plan = FaultPlan.parse_spec("kexc@2:paged_verify")
+    with fault_lib.active(plan):
+        res = engine.run(reqs)
+    assert [r.tokens for r in reqs] == [r.tokens for r in p_reqs]
+    assert res["terminal_requests"] == 3 and res["failed_requests"] == 0
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    assert engine._spec_disabled
+    sp = res["speculative"]
+    assert sp["degraded"] and sp["fallbacks"] >= 1
+    # The injected fault was consumed by a paged_verify dispatch and its
+    # config quarantined before the ref fallback traced in.
+    assert any(e.get("kernel") == "paged_verify" for e in plan.log)
+    assert fresh_default_tuner.stats()["quarantines"] >= 1
+    engine.scheduler.check_invariants()
+    assert engine.pool.num_allocated == 0
+
+
+def test_nan_verify_logits_degrades_without_failing_request(
+        fresh_default_tuner):
+    """Non-finite logits inside a verify burst must NOT fail the request
+    (unlike plain decode, nothing has been argmax-committed yet): the
+    step commits nothing, the verify config is quarantined, and the same
+    positions are re-scored by plain decode — every request finishes
+    with exactly the fault-free token stream."""
+    import jax
+
+    from repro.models import lm
+    from repro.models.param import init_params
+    from repro.serving import ServingEngine
+
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    kw = dict(num_pages=16, page_size=8, max_batch=2, max_seq_len=32,
+              prefill_chunk=8)
+    plain = ServingEngine(cfg, params, **kw)
+    p_reqs = _spec_fault_reqs(cfg.vocab_size)
+    plain.run(p_reqs)
+
+    engine = ServingEngine(cfg, params, **kw, speculative=4)
+    reqs = _spec_fault_reqs(cfg.vocab_size)
+    # Prompts are exactly one prefill chunk, so step 3 is a verify step
+    # for the first admitted slots; slot=-1 poisons every active slot.
+    plan = FaultPlan([FaultEvent(kind="nan_logits", step=3, slot=-1)])
+    with fault_lib.active(plan):
+        res = engine.run(reqs)
+    assert [r.tokens for r in reqs] == [r.tokens for r in p_reqs]
+    assert res["failed_requests"] == 0
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    assert all(len(r.tokens) == r.max_new_tokens for r in reqs)
+    assert engine._spec_disabled
+    sp = res["speculative"]
+    assert sp["degraded"] and sp["fallbacks"] >= 1
+    assert any(e["fault"] == "nan_logits" for e in plan.log)
+    assert fresh_default_tuner.stats()["quarantines"] >= 1
+    engine.scheduler.check_invariants()
+    assert engine.pool.num_allocated == 0

@@ -1,0 +1,371 @@
+"""Speculative decoding on the paged engine: token equality, acceptance,
+rollback accounting, and the serving-edge-case regression sweep.
+
+The design invariant under test everywhere: with greedy accept/rollback,
+``speculative=K`` changes throughput only — every request's token stream
+is byte-identical to the plain one-token-per-step engine, across kv8
+int8 pools, slot reuse, preemption, and tensor parallelism.
+
+Also home to the PR's bugfix regressions:
+  * device-table staleness — rollback must never free-and-regrow a
+    slot's pages (the page can migrate to another slot under a stale
+    device table; ``Scheduler.commit_verify`` keeps the reservation)
+  * ``_park`` page-boundary accounting at exact page-multiple positions
+  * ``max_tokens`` charging the K-token verify burst up front, and a
+    clean preempt when the pool exhausts mid-burst
+  * the run loop fast-forwarding virtual time over preemption backoff
+    instead of hot-looping one step per backoff tick
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.serving import (
+    NgramDrafter, Request, RequestState, Scheduler, ServingEngine,
+)
+from repro.serving.page_pool import PagePool
+
+
+# ---------------------------------------------------------------------------
+# Drafter unit behavior
+# ---------------------------------------------------------------------------
+
+def test_drafter_learns_repetition():
+    d = NgramDrafter(min_n=1, max_n=3)
+    d.observe([5, 1, 2, 3, 1, 2, 3, 1, 2, 3])
+    # Suffix ...1,2,3 -> the most recent continuation of (2,3) is 1.
+    assert d.propose(3) == [1, 2, 3]
+
+
+def test_drafter_fallback_is_fixed_width():
+    d = NgramDrafter()
+    assert d.propose(4) == [0, 0, 0, 0]       # nothing observed yet
+    d.observe([7])
+    out = d.propose(4)
+    assert len(out) == 4                       # always exactly k drafts
+    assert out[0] == 7                         # repeat-last fallback
+
+
+def test_drafter_observe_is_incremental():
+    d = NgramDrafter()
+    d.observe([1, 2, 3])
+    d.observe([1, 2, 3, 4, 5])                 # append-only extension
+    assert d.observed == 5
+    with pytest.raises(AssertionError):
+        d.observe([1, 2])                      # streams never shrink
+
+
+def test_drafter_latest_occurrence_wins():
+    d = NgramDrafter(min_n=1, max_n=2)
+    d.observe([1, 2, 9, 1, 2, 7, 1, 2])
+    assert d.propose(1) == [7]                 # latest (1,2) -> 7, not 9
+
+
+# ---------------------------------------------------------------------------
+# Engine token equality: speculation is a pure performance knob
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(vocab=128, n_layers=2):
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="spec-t", family="dense", n_layers=n_layers,
+                       d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                       d_ff=64, vocab_size=vocab, dtype="float32")
+
+
+def _params(cfg):
+    import jax
+
+    from repro.models import lm
+    from repro.models.param import init_params
+    return init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+
+
+def _reqs(cfg, n=6, gen=12, seed=7):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        int(rng.integers(6, 14))
+                                        ).astype(np.int32),
+                    max_new_tokens=gen, arrival=float(i))
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("quant", [None, "kv8"])
+@pytest.mark.parametrize("spec_k", [2, 4])
+def test_spec_token_equality(quant, spec_k):
+    """Speculative output == plain greedy output, float32 and kv8 pools.
+    More requests than slots, so retirement recycles pages into new
+    sequences mid-trace — the regression surface of the device-table
+    staleness bug (a rolled-back page re-allocated to another slot)."""
+    cfg = _tiny_cfg()
+    params = _params(cfg)
+    kw = dict(num_pages=1 + 4 * 6, page_size=8, max_batch=4,
+              max_seq_len=40, prefill_chunk=8, quant=quant)
+    plain = ServingEngine(cfg, params, **kw)
+    p_reqs = _reqs(cfg, n=6)
+    plain.run(p_reqs)
+    spec = ServingEngine(cfg, params, **kw, speculative=spec_k)
+    s_reqs = _reqs(cfg, n=6)
+    res = spec.run(s_reqs)
+    assert [r.tokens for r in s_reqs] == [r.tokens for r in p_reqs]
+    assert all(len(r.tokens) == r.max_new_tokens for r in s_reqs)
+    sp = res["speculative"]
+    assert sp["draft_k"] == spec_k and not sp["degraded"]
+    # Every decode-phase token goes through verify; each request's first
+    # token comes out of the final prefill chunk instead.
+    assert sp["committed_tokens"] == res["generated_tokens"] - len(s_reqs)
+    spec.scheduler.check_invariants()
+    assert spec.pool.num_allocated == 0
+
+
+def test_spec_acceptance_exceeds_one():
+    """On a repetition-prone model (1 layer, small vocab) the n-gram
+    drafter lands real drafts: > 1 accepted token per verify step.
+    Acceptance is deterministic — greedy model, fixed seeds."""
+    cfg = _tiny_cfg(vocab=64, n_layers=1)
+    params = _params(cfg)
+    engine = ServingEngine(cfg, params, num_pages=1 + 4 * 6, page_size=8,
+                           max_batch=4, max_seq_len=48, prefill_chunk=8,
+                           speculative=4)
+    res = engine.run(_reqs(cfg, n=6, gen=24))
+    sp = res["speculative"]
+    assert sp["accepted_per_step"] > 1.0, sp
+    assert sp["verify_steps"] > 0
+    assert res["terminal_requests"] == 6
+
+
+def test_spec_token_equality_under_preemption():
+    """Satellite: pool exhaustion DURING speculative serving — the
+    K-token burst makes slots grow pages_for(pos + K), so a tight pool
+    preempts mid-burst. The preempt must be clean (no refcount
+    corruption, invariants hold) and resumed requests still match the
+    uninterrupted plain run token-for-token."""
+    cfg = _tiny_cfg()
+    params = _params(cfg)
+    kw = dict(page_size=4, max_batch=2, max_seq_len=36, prefill_chunk=4)
+    big = ServingEngine(cfg, params, num_pages=64, **kw)
+    p_reqs = _reqs(cfg, n=4, gen=8, seed=5)
+    big.run(p_reqs)
+    assert big.scheduler.preemptions == 0
+
+    tight = ServingEngine(cfg, params, num_pages=9, **kw, speculative=4)
+    s_reqs = _reqs(cfg, n=4, gen=8, seed=5)
+    res = tight.run(s_reqs)
+    assert tight.scheduler.preemptions > 0, "pool never exhausted"
+    assert tight.scheduler.resumes > 0
+    assert [r.tokens for r in s_reqs] == [r.tokens for r in p_reqs]
+    assert res["terminal_requests"] == 4
+    tight.scheduler.check_invariants()
+    assert tight.pool.num_allocated == 0
+
+
+def test_spec_token_equality_tp2():
+    """TP=2 sharded speculative serving (forced host devices) matches
+    the single-device plain engine token-for-token: the tp verify step
+    runs paged_verify on per-shard local shapes inside shard_map."""
+    from conftest import run_in_subprocess
+    out = run_in_subprocess("""
+import copy, os, tempfile
+os.environ["REPRO_TUNING_CACHE"] = tempfile.mkdtemp()
+import jax, numpy as np
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.param import init_params
+from repro.serving import Request, ServingEngine
+
+cfg = ModelConfig(name="spec-tp", family="dense", n_layers=2, d_model=32,
+                  n_heads=8, n_kv_heads=4, head_dim=8, d_ff=64,
+                  vocab_size=128, dtype="float32")
+params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+def reqs():
+    rng = np.random.default_rng(5)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        int(rng.integers(9, 13))
+                                        ).astype(np.int32),
+                    max_new_tokens=8, arrival=float(i)) for i in range(4)]
+kw = dict(page_size=8, max_batch=2, max_seq_len=40, prefill_chunk=8)
+plain = ServingEngine(cfg, params, num_pages=64, **kw)
+p = reqs(); plain.run(p)
+spec = ServingEngine(cfg, params, num_pages=64, tp=2, **kw, speculative=4)
+s = reqs(); res = spec.run(s)
+assert [r.tokens for r in s] == [r.tokens for r in p], (s, p)
+assert res["speculative"]["committed_tokens"] == res["generated_tokens"] - len(s)
+spec.scheduler.check_invariants()
+assert spec.pool.num_allocated == 0
+print("OK", res["speculative"]["accepted_per_step"])
+""", devices=2, timeout=900)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Rollback page accounting
+# ---------------------------------------------------------------------------
+
+def test_commit_verify_keeps_burst_reservation():
+    """Rollback must NOT free the rejected tail's pages: a slot's page
+    list only ever grows while occupied — the engine's device-table
+    cache keys on (rid, ready, len(pages)) and a free-then-regrow can
+    silently remap the slot onto a page another slot now owns."""
+    pool = PagePool(16, 4)
+    sched = Scheduler(pool, max_batch=1, max_pages=8, prefill_chunk=4,
+                      spec_k=4)
+    req = Request(rid=0, prompt=np.arange(1, 8, dtype=np.int32),
+                  max_new_tokens=8)
+    sched.submit(req)
+    sched.admit()
+    seq = sched.slots[0]
+    seq.pos = 7
+    seq.prompt_done = True
+    req.tokens = [9]
+    assert sched.decode_mask(lookahead=4).all()
+    pages_before = list(seq.pages)      # covers pos + 4 = 11 -> 3 pages
+    assert len(pages_before) == 3
+    req.tokens.extend([1])
+    sched.commit_verify(0, 1)           # 1 of 4 drafts accepted
+    assert seq.pos == 8
+    assert seq.pages == pages_before, "rollback must not shrink pages"
+    sched.check_invariants()
+
+
+def test_max_tokens_charges_verify_burst():
+    """Satellite: admission must charge the K-token scatter up front —
+    the deepest verify step holds total - 2 + K resident tokens."""
+    pool = PagePool(64, 4)
+    plain = Scheduler(pool, max_batch=1, max_pages=16)
+    spec = Scheduler(pool, max_batch=1, max_pages=16, spec_k=6)
+    req = Request(rid=0, prompt=np.ones(9, np.int32), max_new_tokens=8)
+    assert plain.max_tokens(req) == 17          # prompt + gen
+    assert spec.max_tokens(req) == 9 + 8 - 2 + 6
+    # A request that fits plain but whose burst overflows the table
+    # width must be rejected at submit, not corrupt the pool mid-burst.
+    tiny = Scheduler(PagePool(64, 4), max_batch=1, max_pages=5, spec_k=6)
+    big = Request(rid=1, prompt=np.ones(9, np.int32), max_new_tokens=8)
+    tiny.submit(big)
+    assert big.state is RequestState.FAILED
+    assert "table width" in big.failure_reason
+
+
+# ---------------------------------------------------------------------------
+# Satellite: _park page-boundary accounting
+# ---------------------------------------------------------------------------
+
+def _boundary_engine(cfg, params, **over):
+    kw = dict(num_pages=64, page_size=4, max_batch=1, max_seq_len=32,
+              prefill_chunk=4, prefix_cache=True)
+    kw.update(over)
+    return ServingEngine(cfg, params, **kw)
+
+
+@pytest.mark.parametrize("gen", [8, 6])
+def test_park_boundary_preempt_resume(gen):
+    """Preempt exactly at a page-multiple position (gen=8: pos = 9 +
+    8 - 1 = 16 = 4 pages) and mid-page (gen=6: pos = 14), resume
+    through the prefix trie, and finish — output must equal the
+    uninterrupted run either way. At the boundary the parked slice
+    must cover exactly pos tokens (the whole resident stream) and the
+    growth page holding no valid token must be freed, not parked."""
+    cfg = _tiny_cfg()
+    params = _params(cfg)
+    prompt = np.arange(1, 10, dtype=np.int32)      # prompt_len 9
+
+    plain = _boundary_engine(cfg, params, prefix_cache=False)
+    p_req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=gen)
+    plain.run([p_req])
+
+    engine = _boundary_engine(cfg, params)
+    req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=gen)
+    engine._check(req)
+    engine.scheduler.submit(req)
+    target = 9 + gen - 1 - 1                       # one short of retiring
+    ps = engine.pool.page_size
+    for _ in range(200):
+        engine.step()
+        seq = engine.scheduler.slots[0]
+        if seq is not None and seq.prompt_done and seq.pos >= target:
+            break
+    seq = engine.scheduler.slots[0]
+    assert seq is not None and seq.pos == target
+    if gen == 8:
+        assert seq.pos % ps != 0       # mid-run; boundary comes at park
+    engine.scheduler.preempt(0)
+    engine.scheduler.check_invariants()
+    # Parked pages cover exactly the full pages below pos; at an exact
+    # boundary that is every resident token.
+    parked = engine.prefix_cache.num_pages
+    assert parked == (target // ps)
+    for _ in range(200):
+        engine.step()
+        if req.terminal():
+            break
+    assert req.state is RequestState.FINISHED
+    assert req.tokens == p_req.tokens
+    # Resume re-prefilled only the post-cache suffix: the trie served
+    # the parked prefix (cached tokens strictly positive).
+    assert engine.scheduler.total_cached_tokens > 0
+    engine.scheduler.retire_finished()
+    engine.scheduler.check_invariants()
+
+
+def test_park_boundary_retire_exact_page_multiple():
+    """Retire with pos on an exact page boundary (prompt 9 + gen 8 - 1
+    = 16 = 4*4): every resident token parks, the last growth page is
+    freed, and a follow-up request with the same prompt hits the trie
+    and still matches plain output."""
+    cfg = _tiny_cfg()
+    params = _params(cfg)
+    prompt = np.arange(1, 10, dtype=np.int32)
+
+    plain = _boundary_engine(cfg, params, prefix_cache=False)
+    p1 = Request(rid=0, prompt=prompt.copy(), max_new_tokens=8)
+    plain.run([p1])
+
+    engine = _boundary_engine(cfg, params)
+    r1 = Request(rid=0, prompt=prompt.copy(), max_new_tokens=8)
+    engine.run([r1])
+    ps = engine.pool.page_size
+    assert (9 + 8 - 1) % ps == 0                   # the boundary case
+    assert engine.prefix_cache.num_pages == (9 + 8 - 1) // ps
+    assert r1.tokens == p1.tokens
+    # Second pass: same prompt, served from the parked pages.
+    r2 = Request(rid=1, prompt=prompt.copy(), max_new_tokens=8)
+    engine.run([r2])
+    assert r2.tokens == p1.tokens
+    stats = engine.prefix_cache.stats()
+    assert stats["hits"] >= 1 and stats["hit_tokens"] > 0
+    engine.scheduler.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: backoff fast-forward (engine idle-spin)
+# ---------------------------------------------------------------------------
+
+def test_backed_off_queue_drains_in_bounded_steps():
+    """A fully-backed-off queue (no active slots, no fault plan) must
+    drain by jumping the virtual step clock, not by spinning one step
+    per backoff tick — 50k ticks of backoff in a handful of steps."""
+    cfg = _tiny_cfg()
+    params = _params(cfg)
+    engine = ServingEngine(cfg, params, num_pages=16, page_size=8,
+                           max_batch=2, max_seq_len=32, prefill_chunk=8)
+    req = Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                  max_new_tokens=4)
+    req.not_before_step = 50_000      # as if deep in preemption backoff
+    res = engine.run([req])
+    assert req.state is RequestState.FINISHED
+    assert res["steps"] < 50, res["steps"]
+
+
+def test_fast_forward_backoff_scheduler_unit():
+    pool = PagePool(16, 4)
+    sched = Scheduler(pool, max_batch=1, max_pages=8)
+    req = Request(rid=0, prompt=np.ones(4, np.int32), max_new_tokens=2)
+    sched.submit(req)
+    req.not_before_step = 1000
+    assert sched.backoff_pending()
+    assert sched.fast_forward_backoff()
+    assert sched._step == 999
+    assert sched.admit() == [0]        # eligible on the very next admit
+    assert not sched.fast_forward_backoff()   # nothing pending anymore
