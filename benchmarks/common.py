@@ -10,6 +10,7 @@ cites which backend produced every figure.
 from __future__ import annotations
 
 import csv
+import json
 import os
 import time
 from typing import Callable, Dict, Iterable, List
@@ -19,6 +20,7 @@ import jax.numpy as jnp
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), os.pardir, "results",
                            "bench")
+RESULTS_TOP = os.path.join(os.path.dirname(__file__), os.pardir, "results")
 
 
 def time_fn(fn: Callable, reps: int = 3, warmup: int = 1) -> float:
@@ -42,6 +44,31 @@ def write_csv(name: str, rows: List[Dict], fieldnames: Iterable[str]) -> str:
         w.writeheader()
         for r in rows:
             w.writerow(r)
+    return path
+
+
+def write_bench_json(name: str, report: Dict) -> str:
+    """Write ``results/BENCH_<name>.json`` with an observability snapshot.
+
+    The report gains a ``"metrics"`` key: the process default
+    ``repro.obs.metrics`` registry (TTFT/step counters when a serving
+    engine fed it) plus the process tuner's stats as a provider — so
+    every benchmark artifact carries the same metrics surface the
+    launcher's ``--metrics-out`` exports. The caller's dict is not
+    mutated.
+    """
+    from repro.core.tuner import default_tuner
+    from repro.obs.metrics import default_registry
+
+    reg = default_registry()
+    reg.register_provider("tuner", lambda: default_tuner().stats())
+    report = dict(report)
+    report["metrics"] = reg.snapshot()
+    os.makedirs(RESULTS_TOP, exist_ok=True)
+    path = os.path.join(RESULTS_TOP, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
     return path
 
 

@@ -36,8 +36,6 @@ import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
-RESULTS = os.path.join(os.path.dirname(__file__), os.pardir, "results")
-
 
 def make_trace(n, rng, *, vocab, p_lo=12, p_hi=32, g_lo=4, g_hi=12):
     from repro.serving import Request
@@ -182,10 +180,8 @@ def main(argv=None):
         "preempt_tokens_identical_to_ample": True,
         "paged_decode_tuning": tuning,
     }
-    os.makedirs(RESULTS, exist_ok=True)
-    out = os.path.join(RESULTS, "BENCH_fault_tolerance.json")
-    with open(out, "w") as f:
-        json.dump(report, f, indent=1)
+    from common import write_bench_json
+    out = write_bench_json("fault_tolerance", report)
     print(json.dumps(report, indent=1))
     print(f"[fault_tolerance] degraded mode survived: 0/{n} failed, "
           f"{quarantines} configs quarantined, "

@@ -212,10 +212,8 @@ def main(argv=None):
         "serving_throughput_paged_reference_tokens_per_s": ref,
         "paged_decode_tuning": tuning,
     }
-    os.makedirs(RESULTS, exist_ok=True)
-    out = os.path.join(RESULTS, "BENCH_prefix_caching.json")
-    with open(out, "w") as f:
-        json.dump(report, f, indent=1)
+    from common import write_bench_json
+    out = write_bench_json("prefix_caching", report)
     print(json.dumps(report, indent=1))
     print(f"[prefix_caching] {avoided}/{total_prompt} prefill tokens "
           f"avoided ({avoided_frac:.0%}), hit rate {hit_rate:.0%}, "

@@ -38,13 +38,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
 import time
 
 import numpy as np
-
-RESULTS = os.path.join(os.path.dirname(__file__), os.pardir, "results")
 
 
 def bench_config():
@@ -242,10 +238,8 @@ def main(argv=None):
         report["variants"][name] = entry
         print(f"[quant_speedup] {name}: {entry}")
 
-    os.makedirs(RESULTS, exist_ok=True)
-    out = os.path.join(RESULTS, "BENCH_quant_speedup.json")
-    with open(out, "w") as f:
-        json.dump(report, f, indent=1)
+    from common import write_bench_json
+    out = write_bench_json("quant_speedup", report)
     print(f"[quant_speedup] -> {out}")
 
     if args.check_speedup is not None:

@@ -38,12 +38,9 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import numpy as np
-
-RESULTS = os.path.join(os.path.dirname(__file__), os.pardir, "results")
 
 
 def make_trace(n_requests, rng, *, rate_per_s=20.0, prompt_lo=4,
@@ -302,10 +299,8 @@ def main(argv=None):
         "paged_over_dense_tokens_per_s": round(ratio, 3),
         "paged_decode_tuning": tuning,
     }
-    os.makedirs(RESULTS, exist_ok=True)
-    out = os.path.join(RESULTS, "BENCH_serving_throughput.json")
-    with open(out, "w") as f:
-        json.dump(report, f, indent=1)
+    from common import write_bench_json
+    out = write_bench_json("serving_throughput", report)
     print(json.dumps(report, indent=1))
     print(f"[serving_throughput] paged {paged['tokens_per_s']} tok/s vs "
           f"dense {dense['tokens_per_s']} tok/s ({ratio:.2f}x) -> {out}")

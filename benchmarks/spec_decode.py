@@ -35,12 +35,9 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import numpy as np
-
-RESULTS = os.path.join(os.path.dirname(__file__), os.pardir, "results")
 
 PAGE_SIZE = 16
 MAX_BATCH = 6
@@ -171,10 +168,8 @@ def main(argv=None):
         "token_identical": True,
         "wall_total_s": round(time.perf_counter() - t0, 2),
     }
-    os.makedirs(RESULTS, exist_ok=True)
-    out = os.path.join(RESULTS, "BENCH_spec_decode.json")
-    with open(out, "w") as f:
-        json.dump(report, f, indent=1)
+    from common import write_bench_json
+    out = write_bench_json("spec_decode", report)
     print(json.dumps(report, indent=1))
     print(f"[spec_decode] acceptance {acceptance:.2f} tokens/step, "
           f"speculative {spec['tokens_per_s']} tok/s vs plain "

@@ -31,7 +31,6 @@ import os
 import subprocess
 import sys
 
-RESULTS = os.path.join(os.path.dirname(__file__), os.pardir, "results")
 SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
 
 _WORKER = r"""
@@ -158,11 +157,10 @@ def main(argv=None):
     for r in rows:
         r["latency_vs_tp1"] = (r["per_token_ms"] / base["per_token_ms"]
                                if base else float("nan"))
-    os.makedirs(RESULTS, exist_ok=True)
-    out_path = os.path.join(RESULTS, "BENCH_tp_scaling.json")
-    with open(out_path, "w") as f:
-        json.dump({"config": {"layers": args.layers, "gen": gen},
-                   "results": rows}, f, indent=1)
+    from common import write_bench_json
+    out_path = write_bench_json(
+        "tp_scaling", {"config": {"layers": args.layers, "gen": gen},
+                       "results": rows})
     print(f"wrote {out_path}")
     if args.check:
         check(rows)

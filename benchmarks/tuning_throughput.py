@@ -29,7 +29,6 @@ Run:  PYTHONPATH=src python benchmarks/tuning_throughput.py [--fast]
 from __future__ import annotations
 
 import argparse
-import json
 import math
 import os
 import sys
@@ -179,9 +178,8 @@ def main(fast: bool = True, check: float = 0.0) -> list:
         "suite": suite,
         "cases": rows,
     }
-    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
-    with open(RESULTS_PATH, "w") as f:
-        json.dump(report, f, indent=1)
+    from common import write_bench_json
+    write_bench_json("tuning_throughput", report)
     print(f"[tuning_throughput] overall {overall:.2f}x "
           f"({total_serial:.1f}s -> {total_piped:.1f}s); suite tune_many "
           f"{suite['speedup']:.2f}x -> {RESULTS_PATH}")

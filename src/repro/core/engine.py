@@ -46,6 +46,7 @@ from repro.core import measure as measure_lib
 from repro.core import search as search_lib
 from repro.core.config_space import TuningContext
 from repro.core.search import SearchResult, Trial
+from repro.obs import trace as trace_lib
 
 
 class TuningEngine:
@@ -103,64 +104,72 @@ class TuningEngine:
             pending: List[measure_lib.PendingCompile] = []
             followers: List[Tuple[dict, Tuple]] = []   # resolve after timing
             batch_canon: Dict[Tuple, None] = {}
-            for cfg in batch:
-                ckey = None
-                if canon is not None:
-                    ckey = (search_lib._cfg_key(canon(cfg, ctx)), fid)
-                    if ckey in by_canon:
-                        trials.append(Trial(dict(cfg), by_canon[ckey],
-                                            fidelity=fid, deduped=True))
+            with trace_lib.active_span("compile_batch", track="tuner",
+                                       kernel=kernel.name,
+                                       candidates=len(batch)):
+                for cfg in batch:
+                    ckey = None
+                    if canon is not None:
+                        ckey = (search_lib._cfg_key(canon(cfg, ctx)), fid)
+                        if ckey in by_canon:
+                            trials.append(Trial(dict(cfg), by_canon[ckey],
+                                                fidelity=fid, deduped=True))
+                            continue
+                        if ckey in batch_canon:
+                            # Representative still in flight this batch.
+                            followers.append((dict(cfg), ckey))
+                            continue
+                        batch_canon[ckey] = None
+                    try:
+                        runner = kernel.make_runner(cfg, ctx)
+                    except Exception:
+                        t = Trial(dict(cfg), math.inf, fidelity=fid)
+                        trials.append(t)
+                        if ckey is not None:
+                            by_canon[ckey] = math.inf
                         continue
-                    if ckey in batch_canon:
-                        # Representative still in flight this batch.
-                        followers.append((dict(cfg), ckey))
+                    p = pool.begin(runner, cfg)
+                    p.canon_key = ckey  # threaded through to the time phase
+                    if p.error is not None:
+                        trials.append(Trial(p.config, math.inf, fidelity=fid,
+                                            compile_s=p.lower_s))
+                        if ckey is not None:
+                            by_canon[ckey] = math.inf
                         continue
-                    batch_canon[ckey] = None
-                try:
-                    runner = kernel.make_runner(cfg, ctx)
-                except Exception:
-                    t = Trial(dict(cfg), math.inf, fidelity=fid)
-                    trials.append(t)
-                    if ckey is not None:
-                        by_canon[ckey] = math.inf
-                    continue
-                p = pool.begin(runner, cfg)
-                p.canon_key = ckey   # threaded through to the time phase
-                if p.error is not None:
-                    trials.append(Trial(p.config, math.inf, fidelity=fid,
-                                        compile_s=p.lower_s))
-                    if ckey is not None:
-                        by_canon[ckey] = math.inf
-                    continue
-                pending.append(p)
-            # -- barrier: all of the batch's compiles land before timing --
-            prepared = [pool.finish(p) for p in pending]
+                    pending.append(p)
+                # -- barrier: the batch's compiles land before timing -----
+                prepared = [pool.finish(p) for p in pending]
             # -- time: distinct programs only, on a quiet machine ---------
-            for p, prep in zip(pending, prepared):
-                hkey = (p.hlo_hash, fid)
-                if hkey in by_hash:
-                    metric, measure_s = by_hash[hkey], 0.0
-                    trials.append(Trial(p.config, metric, fidelity=fid,
-                                        compile_s=p.lower_s, deduped=True))
-                else:
-                    if prep.call is None:
-                        metric, measure_s = math.inf, 0.0
+            with trace_lib.active_span("measure_batch", track="tuner",
+                                       kernel=kernel.name,
+                                       programs=len(pending)):
+                for p, prep in zip(pending, prepared):
+                    hkey = (p.hlo_hash, fid)
+                    if hkey in by_hash:
+                        metric, measure_s = by_hash[hkey], 0.0
+                        trials.append(Trial(p.config, metric, fidelity=fid,
+                                            compile_s=p.lower_s,
+                                            deduped=True))
                     else:
-                        try:
-                            metric, measure_s = self.backend.time_prepared(
-                                prep, fidelity=fid)
-                        except Exception:
-                            # A config that compiles but blows up when run
-                            # (hostile shapes, runtime asserts) is a failed
-                            # trial, never a failed batch.
+                        if prep.call is None:
                             metric, measure_s = math.inf, 0.0
-                    by_hash[hkey] = metric
-                    trials.append(Trial(p.config, metric, fidelity=fid,
-                                        compile_s=p.lower_s + prep.compile_s,
-                                        measure_s=measure_s,
-                                        deduped=prep.deduped))
-                if p.canon_key is not None:
-                    by_canon[p.canon_key] = metric
+                        else:
+                            try:
+                                metric, measure_s = (
+                                    self.backend.time_prepared(
+                                        prep, fidelity=fid))
+                            except Exception:
+                                # A config that compiles but blows up when
+                                # run (hostile shapes, runtime asserts) is
+                                # a failed trial, never a failed batch.
+                                metric, measure_s = math.inf, 0.0
+                        by_hash[hkey] = metric
+                        trials.append(Trial(
+                            p.config, metric, fidelity=fid,
+                            compile_s=p.lower_s + prep.compile_s,
+                            measure_s=measure_s, deduped=prep.deduped))
+                    if p.canon_key is not None:
+                        by_canon[p.canon_key] = metric
             for cfg, ckey in followers:
                 trials.append(Trial(cfg, by_canon[ckey], fidelity=fid,
                                     deduped=True))

@@ -61,8 +61,17 @@ from repro.core import search as search_lib
 from repro.core.config_space import Config, ConfigSpace, TuningContext
 from repro.core.costmodel import KernelWorkload
 from repro.core.hardware import get_chip
+from repro.obs import trace as trace_lib
 
 log = logging.getLogger("repro.tuner")
+
+# Counter key -> trace instant name on the "tuner" track (obs/trace.py).
+_TRACE_NAMES = {
+    "hits": "cache_hit", "misses": "cache_miss", "tunes": "tuned",
+    "heuristic_uses": "heuristic", "background_tunes": "background_tune",
+    "failed_retunes": "failed_retune", "quarantines": "quarantine",
+    "fallback_serves": "fallback",
+}
 
 
 @dataclasses.dataclass
@@ -173,6 +182,10 @@ class Autotuner:
                     kernel, {"hits": 0, "misses": 0, "tunes": 0,
                              "background_tunes": 0})
                 per[key] = per.get(key, 0) + n
+        # Every counter bump doubles as a trace instant on the tuner
+        # track (no-op when no tracer is installed).
+        trace_lib.active_instant(_TRACE_NAMES.get(key, key), track="tuner",
+                                 kernel=kernel)
 
     def stats(self) -> Dict[str, object]:
         """Snapshot of the tuning counters, including per-kernel cache
@@ -211,11 +224,14 @@ class Autotuner:
         strat = copy.deepcopy(strategy or self.strategy)
         if pipelined is None:
             pipelined = self.engine.can_pipeline(kernel)
-        if pipelined:
-            result = self.engine.search(kernel, ctx, strat)
-        else:
-            result = strat.run(kernel.space, ctx,
-                               self.backend.evaluator(kernel, ctx))
+        with trace_lib.active_span("tune", track="tuner",
+                                   kernel=kernel.name,
+                                   pipelined=bool(pipelined)):
+            if pipelined:
+                result = self.engine.search(kernel, ctx, strat)
+            else:
+                result = strat.run(kernel.space, ctx,
+                                   self.backend.evaluator(kernel, ctx))
         self._bump("tunes", kernel=kernel.name)
         # Quarantined configs survive re-tunes: a config that failed at
         # serve time must never win again just because it *measures* fine.
@@ -375,6 +391,22 @@ class Autotuner:
                       ) -> Optional[Tuple[TuningContext, Config]]:
         with self._stats_lock:
             return self._last_dispatch.get(name)
+
+    def dispatch_key(self, kernel: KernelRef, ctx: TuningContext
+                     ) -> Tuple[str, Optional[float]]:
+        """The tuning-cache key for (kernel, ctx) plus the cached entry's
+        recorded metric (None when untuned). This is the identity drift
+        tracking (obs/drift.py) samples against: a flagged key names
+        exactly the DB row online retuning should revisit."""
+        kernel = self.resolve(kernel)
+        key = cache_lib.cache_key(kernel.name, kernel.version,
+                                  kernel.space, ctx)
+        raw = self.cache.get_raw(kernel.name, kernel.version,
+                                 kernel.space, ctx)
+        shipped = None
+        if raw is not None and math.isfinite(raw.metric):
+            shipped = float(raw.metric)
+        return key, shipped
 
     def quarantine(self, kernel: KernelRef, ctx: TuningContext,
                    config: Config) -> bool:

@@ -35,6 +35,7 @@ import logging
 import math
 import os
 import threading
+import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -45,6 +46,7 @@ from repro.core import (
     MatmulShape, Param, TunableKernel, TuningContext, default_tuner,
 )
 from repro.core.config_space import dtype_bytes, vmem_fits
+from repro.obs import drift as drift_lib
 
 LANES = 128
 
@@ -124,6 +126,30 @@ def _guarded_dispatch(kernel: TunableKernel, ctx: Optional[TuningContext],
     log.warning("%s: every tuned config failed; serving the reference "
                 "oracle impl (degraded mode)", kernel.name)
     return ref_run()
+
+
+def _timed_dispatch(kernel: TunableKernel, ctx: Optional[TuningContext],
+                    config: Config, tuner: Optional[Autotuner],
+                    run: Callable[[Config], Any]):
+    """Tuner-path dispatch with drift sampling (obs/drift.py): when a
+    drift detector is active and the call is eager (concrete output —
+    interpret-mode kernels, tests, benchmarks), time the launch and feed
+    the sample under the tuning-cache key. Under jit the output is a
+    tracer and per-launch timing is meaningless — the serving engine
+    times whole jitted steps and attributes them via ``last_dispatch``
+    instead."""
+    det = drift_lib.get_active()
+    if det is None or ctx is None or tuner is None:
+        return run(config)
+    t0 = time.perf_counter()
+    out = run(config)
+    if isinstance(out, jax.core.Tracer):
+        return out
+    jax.block_until_ready(out)
+    key, shipped = tuner.dispatch_key(kernel, ctx)
+    det.observe(key, time.perf_counter() - t0, shipped=shipped,
+                kernel=kernel.name)
+    return out
 
 
 def _ctx(tuner: Autotuner, shapes: Dict[str, Tuple[int, ...]], dtype: str,
@@ -834,7 +860,7 @@ def paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
                                     v_scales=v_scales, scale=scale)
         return _guarded_dispatch(PAGED_DECODE, ctx, config, run, ref_run,
                                  tuner)
-    return run(config)
+    return _timed_dispatch(PAGED_DECODE, ctx, config, tuner, run)
 
 
 # ===========================================================================
@@ -1054,7 +1080,7 @@ def paged_verify(q, k_pages, v_pages, block_tables, kv_len, *,
                                     v_scales=v_scales, scale=scale)
         return _guarded_dispatch(PAGED_VERIFY, ctx, config, run, ref_run,
                                  tuner)
-    return run(config)
+    return _timed_dispatch(PAGED_VERIFY, ctx, config, tuner, run)
 
 
 # ===========================================================================

@@ -46,6 +46,7 @@ later steps of the same process pick up tuned configs from the cache.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
@@ -58,6 +59,9 @@ from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_local_mesh
 from repro.models import lm
 from repro.models.param import init_params
+from repro.obs import drift as drift_lib
+from repro.obs import trace as trace_lib
+from repro.obs.metrics import default_registry
 
 
 def serve_paged(args, cfg, tuner):
@@ -122,6 +126,19 @@ def serve_paged(args, cfg, tuner):
     print(f"paged serving: deployment config {deploy_cfg} "
           f"-> page_size {page_size}")
 
+    # Observability (docs/observability.md): the tracer/metrics/drift
+    # handles only exist when a flag asks for them, so the default serve
+    # path stays bit-identical and instrumentation-free.
+    tracer = None
+    if args.trace_out:
+        tracer = trace_lib.Tracer()
+        trace_lib.set_active(tracer)       # tuner events join the trace
+    metrics = default_registry() if args.metrics_out else None
+    drift = None
+    if args.drift_report:
+        drift = drift_lib.DriftDetector()
+        drift_lib.set_active(drift)        # eager ops.py dispatches too
+
     params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
     rng = np.random.default_rng(0)
     pages_per_seq = -(-(max_seq_len + args.prefill_chunk) // page_size)
@@ -131,7 +148,8 @@ def serve_paged(args, cfg, tuner):
         max_seq_len=max_seq_len + args.prefill_chunk,
         prefill_chunk=args.prefill_chunk,
         quant=None if args.quant == "none" else args.quant, tp=args.tp,
-        prefix_cache=args.prefix_cache, speculative=spec_k)
+        prefix_cache=args.prefix_cache, speculative=spec_k,
+        tracer=tracer, metrics=metrics, drift=drift)
     plan = None
     if args.inject_faults:
         from repro.serving import FaultPlan, faults as fault_lib
@@ -171,19 +189,29 @@ def serve_paged(args, cfg, tuner):
         if plan is not None:
             from repro.serving import faults as fault_lib
             fault_lib.install(None)
-    print(f"served {res['requests']} requests / "
-          f"{res['generated_tokens']} tokens in {res['wall_s']*1e3:.0f} ms "
-          f"({res['tokens_per_s']:.1f} tok/s, {res['steps']} steps)")
-    print(f"lifecycle: {res['preemptions']} preemptions, "
-          f"{res['resumes']} resumes, {res['failed_requests']} failed, "
-          f"{res['timed_out_requests']} timed out")
+    # One structured summary instead of ad-hoc wall-time prints: every
+    # number a smoke job or a human wants is in this dict, including the
+    # p50/p99 TTFT and inter-token latency computed from the per-request
+    # token timestamps (Request.token_times).
+    summary = {
+        "requests": res["requests"],
+        "generated_tokens": res["generated_tokens"],
+        "steps": res["steps"],
+        "wall_ms": round(res["wall_s"] * 1e3, 1),
+        "tokens_per_s": round(res["tokens_per_s"], 1),
+        "latency": {k: (round(v, 3) if isinstance(v, float) else v)
+                    for k, v in res["latency"].items()},
+        "lifecycle": {
+            "preemptions": res["preemptions"],
+            "resumes": res["resumes"],
+            "failed": res["failed_requests"],
+            "timed_out": res["timed_out_requests"],
+            "terminal": res["terminal_requests"],
+        },
+    }
     if "speculative" in res:
-        sp = res["speculative"]
-        print(f"speculative: draft_k {sp['draft_k']}, "
-              f"{sp['committed_tokens']} tokens over {sp['verify_steps']} "
-              f"verify steps ({sp['accepted_per_step']:.2f} accepted/step, "
-              f"{sp['fallbacks']} fallbacks"
-              + (", degraded to plain decode)" if sp["degraded"] else ")"))
+        summary["speculative"] = res["speculative"]
+    print("run report:", json.dumps(summary, sort_keys=True))
     # Every submitted request must land in a terminal state — the smoke
     # gate for the faults-smoke CI job: faults degrade requests, they
     # never wedge or crash the engine.
@@ -211,6 +239,22 @@ def serve_paged(args, cfg, tuner):
     r0 = engine.scheduler.finished[0]
     print("sample:", r0.tokens[:12])
     print(f"total wall (incl jit): {(time.perf_counter()-t0)*1e3:.0f} ms")
+
+    if tracer is not None:
+        trace_lib.set_active(None)
+        tracer.export(args.trace_out)
+        print(f"trace: {len(tracer.events)} events "
+              f"({tracer.dropped} dropped) -> {args.trace_out} "
+              f"(open in chrome://tracing or ui.perfetto.dev)")
+    if metrics is not None:
+        metrics.export_json(args.metrics_out)
+        print(f"metrics: snapshot -> {args.metrics_out}")
+    if drift is not None:
+        drift_lib.set_active(None)
+        drift.export(args.drift_report)
+        rep = drift.report()
+        print(f"drift: {rep['tracked_keys']} keys tracked, "
+              f"{rep['flagged_keys']} flagged -> {args.drift_report}")
 
 
 def serve_dense(args, cfg):
@@ -326,6 +370,19 @@ def main(argv=None):
                          "state.")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="chunked-prefill width (paged only)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON of the run "
+                         "(paged only): request lifecycle spans per slot, "
+                         "scheduler phases per step, tuner events "
+                         "(docs/observability.md)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a JSON metrics snapshot (paged only): "
+                         "TTFT / inter-token histograms, step counters, "
+                         "tuner + prefix-cache + scheduler stats")
+    ap.add_argument("--drift-report", default=None, metavar="PATH",
+                    help="track per-dispatch latency vs the tuning DB "
+                         "(paged only) and write the drift report: EWMA "
+                         "per cache key, flagged regressions")
     ap.add_argument("--on-miss", choices=("tune", "heuristic", "error"),
                     default=os.environ.get("REPRO_ON_MISS", "tune"),
                     help="tuner policy on cache miss; 'heuristic' keeps "
@@ -339,6 +396,11 @@ def main(argv=None):
     if args.speculative is not None and args.decode_impl != "paged":
         raise SystemExit("--speculative requires --decode-impl paged "
                          "(draft-and-verify runs on the paged engine)")
+    if ((args.trace_out or args.metrics_out or args.drift_report)
+            and args.decode_impl != "paged"):
+        raise SystemExit("--trace-out/--metrics-out/--drift-report require "
+                         "--decode-impl paged (observability is wired "
+                         "through the paged serving engine)")
     os.environ["REPRO_ON_MISS"] = args.on_miss
     cfg = get_config(args.arch, smoke=not args.full_config)
     if args.decode_impl != "full":

@@ -1,0 +1,33 @@
+"""Unified observability layer: tracing, metrics, and drift tracking.
+
+Three stdlib-only modules (no jax imports — safe to import from any
+layer without cycles):
+
+- ``trace``   — :class:`~repro.obs.trace.Tracer`: nestable spans and
+  instant events on an injectable monotonic clock, bounded ring buffer,
+  Chrome ``trace_event`` JSON export.
+- ``metrics`` — :class:`~repro.obs.metrics.MetricsRegistry`: counters,
+  gauges, fixed-bucket histograms, provider callbacks, JSON and
+  Prometheus-text snapshots.
+- ``drift``   — :class:`~repro.obs.drift.DriftDetector`: EWMA of
+  per-dispatch timing samples keyed by the tuner cache key, compared
+  against a calibrated (or shipped-DB) baseline; flags regressions for
+  online retuning to subscribe to.
+
+See docs/observability.md for the operator-facing guide.
+"""
+
+from repro.obs.drift import DriftDetector
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry, default_registry
+from repro.obs.trace import Tracer, VirtualClock
+
+__all__ = [
+    "Counter",
+    "DriftDetector",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Tracer",
+    "VirtualClock",
+    "default_registry",
+]

@@ -1,0 +1,159 @@
+"""Measured-vs-shipped drift tracking for dispatched kernel configs.
+
+The shipped tuning DB records, for every cache key, the ``metric`` the
+config won with at tuning time. At serve time the same key dispatches
+over and over; if the measured latency walks away from its baseline the
+shipped config has drifted off this machine/workload and is a retuning
+candidate — the operational signal ROADMAP item 5's online retuning
+subscribes to via :meth:`DriftDetector.on_drift`.
+
+Two baseline modes, because the units don't always match:
+
+- **calibrated** (default): the baseline is the median of the first
+  ``calibration`` samples observed for the key in this process. This is
+  the right mode when the shipped metric came from a different
+  measurement domain — e.g. the analytical TPU cost model — while
+  serve-time samples are host wall-clock. The shipped metric is still
+  recorded in the report for visibility.
+- **shipped** (``use_shipped=True``): the baseline is the shipped
+  metric itself. Only meaningful when tuning and serving measure on the
+  same backend in the same units.
+
+Samples fold into an EWMA so one slow step (GC, page fault) doesn't
+flag; a sustained regression past ``threshold``× baseline does. Keys
+are opaque strings — callers use ``Autotuner.dispatch_key`` so they
+match the tuning-cache key exactly.
+"""
+
+from __future__ import annotations
+
+import json
+import statistics
+from typing import Any, Callable, Dict, List, Optional
+
+
+class _Entry:
+    __slots__ = ("kernel", "shipped", "calib", "baseline", "ewma", "n", "flagged", "last")
+
+    def __init__(self, kernel: Optional[str], shipped: Optional[float]):
+        self.kernel = kernel
+        self.shipped = shipped
+        self.calib: List[float] = []
+        self.baseline: Optional[float] = None
+        self.ewma: Optional[float] = None
+        self.n = 0
+        self.flagged = False
+        self.last = 0.0
+
+
+class DriftDetector:
+    """EWMA regression detector over per-dispatch timing samples."""
+
+    def __init__(
+        self,
+        threshold: float = 2.0,
+        alpha: float = 0.3,
+        calibration: int = 5,
+        use_shipped: bool = False,
+    ):
+        if threshold <= 1.0:
+            raise ValueError("threshold must exceed 1.0 (it multiplies the baseline)")
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        self.threshold = float(threshold)
+        self.alpha = float(alpha)
+        self.calibration = int(calibration)
+        self.use_shipped = bool(use_shipped)
+        self.entries: Dict[str, _Entry] = {}
+        self._callbacks: List[Callable[[str, Dict[str, Any]], None]] = []
+
+    def on_drift(self, cb: Callable[[str, Dict[str, Any]], None]) -> None:
+        """Subscribe ``cb(key, entry_report)`` fired once per flagged key."""
+        self._callbacks.append(cb)
+
+    def observe(
+        self,
+        key: str,
+        seconds: float,
+        shipped: Optional[float] = None,
+        kernel: Optional[str] = None,
+    ) -> bool:
+        """Fold one timing sample in; returns True if the key is flagged."""
+        e = self.entries.get(key)
+        if e is None:
+            e = self.entries[key] = _Entry(kernel, shipped)
+        elif shipped is not None and e.shipped is None:
+            e.shipped = shipped
+        e.n += 1
+        e.last = seconds
+        if e.baseline is None:
+            if self.use_shipped and e.shipped is not None:
+                e.baseline = float(e.shipped)
+            else:
+                # Calibration samples set the baseline (median — robust to
+                # the first-call jit-compile spike) but stay out of the
+                # EWMA, which starts at the baseline once it exists.
+                e.calib.append(seconds)
+                if len(e.calib) >= self.calibration:
+                    e.baseline = statistics.median(e.calib)
+                return e.flagged
+        if e.ewma is None:
+            e.ewma = e.baseline
+        e.ewma = self.alpha * seconds + (1 - self.alpha) * e.ewma
+        if not e.flagged and e.ewma > self.threshold * e.baseline:
+            e.flagged = True
+            rep = self._entry_report(key, e)
+            for cb in self._callbacks:
+                cb(key, rep)
+        return e.flagged
+
+    def flagged(self) -> List[str]:
+        return [k for k, e in self.entries.items() if e.flagged]
+
+    def _entry_report(self, key: str, e: _Entry) -> Dict[str, Any]:
+        return {
+            "key": key,
+            "kernel": e.kernel,
+            "samples": e.n,
+            "ewma_s": e.ewma,
+            "last_s": e.last,
+            "baseline_s": e.baseline,
+            "shipped_metric": e.shipped,
+            "ratio": (e.ewma / e.baseline) if (e.baseline or 0) > 0 and e.ewma is not None else None,
+            "flagged": e.flagged,
+        }
+
+    def report(self) -> Dict[str, Any]:
+        entries = [self._entry_report(k, e) for k, e in self.entries.items()]
+        entries.sort(key=lambda r: (not r["flagged"], -(r["ratio"] or 0.0)))
+        return {
+            "threshold": self.threshold,
+            "alpha": self.alpha,
+            "calibration": self.calibration,
+            "use_shipped": self.use_shipped,
+            "tracked_keys": len(self.entries),
+            "flagged_keys": len(self.flagged()),
+            "entries": entries,
+        }
+
+    def export(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.report(), f, indent=1, sort_keys=True)
+            f.write("\n")
+
+
+# -- module-level active detector -----------------------------------------
+
+_ACTIVE: Optional[DriftDetector] = None
+
+
+def set_active(det: Optional[DriftDetector]) -> Optional[DriftDetector]:
+    """Install ``det`` as the process-wide detector; returns the old one."""
+    global _ACTIVE
+    old = _ACTIVE
+    _ACTIVE = det
+    return old
+
+
+def get_active() -> Optional[DriftDetector]:
+    return _ACTIVE

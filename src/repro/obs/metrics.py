@@ -1,0 +1,260 @@
+"""Process-wide metrics registry: counters, gauges, fixed-bucket histograms.
+
+Everything is plain Python (no locks beyond the GIL's guarantees, no
+jax): serving, tuning, and benchmarks all run single-process here, and
+the registry's job is a cheap, uniform snapshot surface — JSON for
+``BENCH_*.json`` reports and machine diffing, Prometheus text for
+scrape-style tooling.
+
+Besides first-class instruments, the registry accepts **providers**:
+named callables returning flat-ish stat dicts. The existing stats
+surfaces — ``Autotuner.stats()``, ``PrefixCache.stats()``, the
+scheduler's step counters — register as providers so one
+:meth:`MetricsRegistry.snapshot` covers the whole stack without those
+classes needing to know about metric types.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+# Default latency buckets in milliseconds: roughly log-spaced 1-2-5.
+LATENCY_BUCKETS_MS: Tuple[float, ...] = (
+    0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0,
+    100.0, 200.0, 500.0, 1000.0, 2000.0, 5000.0,
+)
+
+
+class Counter:
+    """Monotonically increasing count."""
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name} cannot decrease (inc {n})")
+        self.value += n
+
+
+class Gauge:
+    """A value that can go up and down."""
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+    def dec(self, n: float = 1.0) -> None:
+        self.value -= n
+
+
+class Histogram:
+    """Fixed-bucket histogram with cumulative Prometheus-style counts.
+
+    ``buckets`` are upper bounds (inclusive, sorted ascending); an
+    implicit ``+Inf`` bucket catches the rest. ``bucket_counts`` are
+    per-bucket (non-cumulative) counts; the exporters emit cumulative
+    ``le`` counts as Prometheus expects.
+    """
+
+    def __init__(self, name: str, buckets: Sequence[float] = LATENCY_BUCKETS_MS, help: str = ""):
+        if not buckets or list(buckets) != sorted(buckets):
+            raise ValueError(f"histogram {name}: buckets must be non-empty and ascending")
+        self.name = name
+        self.help = help
+        self.buckets: Tuple[float, ...] = tuple(float(b) for b in buckets)
+        self.bucket_counts: List[int] = [0] * (len(self.buckets) + 1)
+        self.count = 0
+        self.sum = 0.0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.sum += v
+        for i, ub in enumerate(self.buckets):
+            if v <= ub:
+                self.bucket_counts[i] += 1
+                return
+        self.bucket_counts[-1] += 1
+
+    def cumulative(self) -> List[Tuple[float, int]]:
+        """``(upper_bound, cumulative_count)`` pairs, ending with +Inf."""
+        out: List[Tuple[float, int]] = []
+        running = 0
+        for ub, c in zip(self.buckets, self.bucket_counts):
+            running += c
+            out.append((ub, running))
+        out.append((math.inf, running + self.bucket_counts[-1]))
+        return out
+
+    def quantile(self, q: float) -> float:
+        """Bucket-interpolated quantile estimate (0 <= q <= 1).
+
+        Exact percentiles belong to raw-sample paths (the serve run
+        report computes them from ``Request.token_times``); this is the
+        scrape-side estimate from bucket counts alone.
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        if self.count == 0:
+            return float("nan")
+        target = q * self.count
+        running = 0
+        lo = 0.0
+        for ub, c in zip(self.buckets, self.bucket_counts):
+            if running + c >= target and c > 0:
+                frac = (target - running) / c
+                return lo + frac * (ub - lo)
+            running += c
+            lo = ub
+        return self.buckets[-1]
+
+
+class MetricsRegistry:
+    """Named instruments plus provider callbacks, snapshot-exportable."""
+
+    def __init__(self):
+        self._metrics: Dict[str, Any] = {}
+        self._providers: Dict[str, Callable[[], Dict[str, Any]]] = {}
+
+    def _get_or_make(self, name: str, factory: Callable[[], Any], kind: type) -> Any:
+        m = self._metrics.get(name)
+        if m is None:
+            m = factory()
+            self._metrics[name] = m
+        elif not isinstance(m, kind):
+            raise TypeError(f"metric {name} already registered as {type(m).__name__}")
+        return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get_or_make(name, lambda: Counter(name, help), Counter)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get_or_make(name, lambda: Gauge(name, help), Gauge)
+
+    def histogram(self, name: str, buckets: Sequence[float] = LATENCY_BUCKETS_MS, help: str = "") -> Histogram:
+        return self._get_or_make(name, lambda: Histogram(name, buckets, help), Histogram)
+
+    def register_provider(self, name: str, fn: Callable[[], Dict[str, Any]]) -> None:
+        """Register/replace a stats provider folded into every snapshot."""
+        self._providers[name] = fn
+
+    # -- export ------------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, Any]:
+        """One JSON-serialisable dict covering instruments and providers."""
+        out: Dict[str, Any] = {}
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if isinstance(m, Counter):
+                out[name] = {"type": "counter", "value": m.value}
+            elif isinstance(m, Gauge):
+                out[name] = {"type": "gauge", "value": m.value}
+            else:
+                out[name] = {
+                    "type": "histogram",
+                    "count": m.count,
+                    "sum": m.sum,
+                    "buckets": [[ub, c] for ub, c in zip(m.buckets, m.bucket_counts)],
+                    "overflow": m.bucket_counts[-1],
+                    "p50": m.quantile(0.5),
+                    "p99": m.quantile(0.99),
+                }
+        providers: Dict[str, Any] = {}
+        for name in sorted(self._providers):
+            try:
+                providers[name] = self._providers[name]()
+            except Exception as e:  # a broken provider must not kill a snapshot
+                providers[name] = {"error": repr(e)}
+        if providers:
+            out["providers"] = providers
+        return out
+
+    def to_json(self, indent: Optional[int] = 1) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)
+
+    def export_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+            f.write("\n")
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition format (instruments + flat providers)."""
+        lines: List[str] = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            pname = _sanitize(name)
+            if m.help:
+                lines.append(f"# HELP {pname} {m.help}")
+            if isinstance(m, Counter):
+                lines.append(f"# TYPE {pname} counter")
+                lines.append(f"{pname} {_fmt(m.value)}")
+            elif isinstance(m, Gauge):
+                lines.append(f"# TYPE {pname} gauge")
+                lines.append(f"{pname} {_fmt(m.value)}")
+            else:
+                lines.append(f"# TYPE {pname} histogram")
+                for ub, cum in m.cumulative():
+                    le = "+Inf" if math.isinf(ub) else _fmt(ub)
+                    lines.append(f'{pname}_bucket{{le="{le}"}} {cum}')
+                lines.append(f"{pname}_sum {_fmt(m.sum)}")
+                lines.append(f"{pname}_count {m.count}")
+        for prov in sorted(self._providers):
+            try:
+                stats = self._providers[prov]()
+            except Exception:
+                continue
+            for key, value in sorted(_flatten(stats).items()):
+                if isinstance(value, (int, float)) and not isinstance(value, bool):
+                    lines.append(f"# TYPE {_sanitize(prov + '_' + key)} gauge")
+                    lines.append(f"{_sanitize(prov + '_' + key)} {_fmt(value)}")
+        return "\n".join(lines) + "\n"
+
+
+def _sanitize(name: str) -> str:
+    return "".join(ch if (ch.isalnum() or ch == "_") else "_" for ch in name)
+
+
+def _fmt(v: float) -> str:
+    if float(v).is_integer():
+        return str(int(v))
+    return repr(float(v))
+
+
+def _flatten(d: Dict[str, Any], prefix: str = "") -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, f"{key}_"))
+        else:
+            out[key] = v
+    return out
+
+
+# -- module-level default registry ----------------------------------------
+
+_DEFAULT = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    return _DEFAULT
+
+
+def set_default_registry(reg: MetricsRegistry) -> MetricsRegistry:
+    """Swap the process default (tests); returns the old registry."""
+    global _DEFAULT
+    old = _DEFAULT
+    _DEFAULT = reg
+    return old

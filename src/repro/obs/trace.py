@@ -1,0 +1,168 @@
+"""Structured tracing with Chrome ``trace_event`` export.
+
+A :class:`Tracer` records three kinds of events on named tracks:
+
+- **spans** — durations with a begin and an end (``ph: "B"``/``"E"``
+  pairs in Chrome terms), either via the :meth:`Tracer.span` context
+  manager for code-shaped scopes or via explicit
+  :meth:`Tracer.begin`/:meth:`Tracer.end` for scopes that outlive a
+  call frame (e.g. a request's RUNNING interval across many steps);
+- **instants** — point events (``ph: "i"``) such as a tuner cache miss;
+- **counters** are not modelled here: use :mod:`repro.obs.metrics`.
+
+Timestamps come from an injectable monotonic clock returning seconds.
+The default is ``time.perf_counter`` (wall-clock benchmarks); tests
+inject a :class:`VirtualClock` whose reading advances by a fixed step
+on every call, which makes the exported trace byte-for-byte
+deterministic.
+
+Events live in a bounded ring buffer: once ``capacity`` is reached the
+oldest events are dropped and counted in :attr:`Tracer.dropped`, so a
+long serving run cannot OOM through its own instrumentation.
+
+The module-level active tracer (:func:`set_active`/:func:`get_active`)
+lets low-level code (tuner, tuning engine) emit events without plumbing
+a tracer handle through every signature; :func:`active_instant` and
+:func:`active_span` are no-ops when no tracer is installed.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from contextlib import contextmanager
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+DEFAULT_CAPACITY = 65536
+
+
+class VirtualClock:
+    """Deterministic monotonic clock: each reading advances by ``step``.
+
+    Virtual time is denominated in seconds so exported microsecond
+    timestamps are exact integers (``step=1e-6`` gives 1 us per tick).
+    """
+
+    def __init__(self, step: float = 1e-6, start: float = 0.0):
+        self.step = step
+        self._now = start
+
+    def __call__(self) -> float:
+        self._now += self.step
+        return self._now
+
+
+class Tracer:
+    """Bounded event recorder with Chrome ``trace_event`` JSON export."""
+
+    def __init__(
+        self,
+        clock: Optional[Callable[[], float]] = None,
+        capacity: int = DEFAULT_CAPACITY,
+    ):
+        self.clock = clock if clock is not None else time.perf_counter
+        self.capacity = int(capacity)
+        self.events: Deque[Dict[str, Any]] = deque()
+        self.dropped = 0
+        self._tracks: Dict[str, int] = {}
+
+    # -- recording ---------------------------------------------------------
+
+    def _tid(self, track: str) -> int:
+        tid = self._tracks.get(track)
+        if tid is None:
+            tid = len(self._tracks)
+            self._tracks[track] = tid
+        return tid
+
+    def _push(self, ev: Dict[str, Any]) -> None:
+        if len(self.events) >= self.capacity:
+            self.events.popleft()
+            self.dropped += 1
+        self.events.append(ev)
+
+    def _ts_us(self) -> int:
+        return round(self.clock() * 1e6)
+
+    def instant(self, name: str, track: str = "main", **args: Any) -> None:
+        self._push(
+            {"name": name, "ph": "i", "ts": self._ts_us(), "tid": self._tid(track), "s": "t", "args": args}
+        )
+
+    def begin(self, name: str, track: str = "main", **args: Any) -> None:
+        self._push({"name": name, "ph": "B", "ts": self._ts_us(), "tid": self._tid(track), "args": args})
+
+    def end(self, name: str, track: str = "main", **args: Any) -> None:
+        self._push({"name": name, "ph": "E", "ts": self._ts_us(), "tid": self._tid(track), "args": args})
+
+    @contextmanager
+    def span(self, name: str, track: str = "main", **args: Any):
+        """Record ``name`` as a span covering the ``with`` body."""
+        self.begin(name, track, **args)
+        try:
+            yield self
+        finally:
+            self.end(name, track)
+
+    # -- export ------------------------------------------------------------
+
+    def to_chrome(self) -> Dict[str, Any]:
+        """Chrome ``about:tracing`` / Perfetto-loadable trace dict."""
+        events: List[Dict[str, Any]] = [
+            {
+                "name": "thread_name",
+                "ph": "M",
+                "pid": 0,
+                "tid": tid,
+                "args": {"name": track},
+            }
+            for track, tid in sorted(self._tracks.items(), key=lambda kv: kv[1])
+        ]
+        for ev in self.events:
+            out = dict(ev)
+            out["pid"] = 0
+            events.append(out)
+        return {
+            "traceEvents": events,
+            "displayTimeUnit": "ms",
+            "metadata": {"dropped_events": self.dropped, "capacity": self.capacity},
+        }
+
+    def export(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f, indent=1, sort_keys=True)
+            f.write("\n")
+
+
+# -- module-level active tracer -------------------------------------------
+
+_ACTIVE: Optional[Tracer] = None
+
+
+def set_active(tracer: Optional[Tracer]) -> Optional[Tracer]:
+    """Install ``tracer`` as the process-wide tracer; returns the old one."""
+    global _ACTIVE
+    old = _ACTIVE
+    _ACTIVE = tracer
+    return old
+
+
+def get_active() -> Optional[Tracer]:
+    return _ACTIVE
+
+
+def active_instant(name: str, track: str = "main", **args: Any) -> None:
+    tr = _ACTIVE
+    if tr is not None:
+        tr.instant(name, track, **args)
+
+
+@contextmanager
+def active_span(name: str, track: str = "main", **args: Any):
+    tr = _ACTIVE
+    if tr is None:
+        yield None
+        return
+    with tr.span(name, track, **args):
+        yield tr

@@ -58,13 +58,25 @@ import enum
 import math
 import time
 from collections import deque
+from contextlib import nullcontext
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import drift as drift_lib
+from repro.obs import metrics as metrics_lib
+from repro.obs import trace as trace_lib
 from repro.serving import faults as fault_lib
 from repro.serving.page_pool import SCRATCH_PAGE, PagePool
 from repro.serving.prefix_cache import PrefixCache
+
+_NULL_CTX = nullcontext()
+
+# Per-request token-timestamp cap: past this many samples new timestamps
+# are counted in ``token_times_dropped`` instead of appended, so latency
+# bookkeeping on a long-running request stays O(1) memory. Percentiles in
+# the run report are computed over the recorded sample prefix.
+TOKEN_TIMES_CAP = 4096
 
 
 class RequestState(str, enum.Enum):
@@ -97,12 +109,15 @@ class Request:
     # filled in by the engine:
     tokens: List[int] = dataclasses.field(default_factory=list)
     token_times: List[float] = dataclasses.field(default_factory=list)
+    token_times_dropped: int = 0       # samples past TOKEN_TIMES_CAP
+    last_token_time: Optional[float] = None
     state: RequestState = RequestState.QUEUED
     failure_reason: Optional[str] = None
     retries: int = 0                   # times preempted so far
     cancelled: bool = False
     wait_steps: int = 0                # admission aging (head-of-line cap)
     not_before_step: int = 0           # backoff: earliest re-admission step
+    submit_step: int = 0               # scheduler step at submission
 
     @property
     def prompt_len(self) -> int:
@@ -117,6 +132,14 @@ class Request:
     def cancel(self) -> None:
         """Mark for cancellation; the next lifecycle sweep fails it."""
         self.cancelled = True
+
+    def note_token_time(self, t: float) -> None:
+        """Record a token timestamp, bounded by ``TOKEN_TIMES_CAP``."""
+        self.last_token_time = t
+        if len(self.token_times) < TOKEN_TIMES_CAP:
+            self.token_times.append(t)
+        else:
+            self.token_times_dropped += 1
 
 
 @dataclasses.dataclass
@@ -153,6 +176,37 @@ class StepStats:
                     or self.timed_out or self.degraded)
 
 
+def latency_summary(requests: List[Request], t0: float) -> Dict[str, Any]:
+    """Exact p50/p99 TTFT and inter-token latency (ms) from the recorded
+    ``Request.token_times``. TTFT is first token minus run start ``t0``
+    (arrival is not wall-anchored in untimed replays); inter-token gaps
+    are consecutive-timestamp deltas within each request. Percentiles
+    cover the recorded sample prefix — ``token_times_dropped`` reports
+    what the ``TOKEN_TIMES_CAP`` bound discarded."""
+    ttfts: List[float] = []
+    itls: List[float] = []
+    dropped = 0
+    for r in requests:
+        ts = r.token_times
+        dropped += r.token_times_dropped
+        if ts:
+            ttfts.append((ts[0] - t0) * 1e3)
+            itls.extend((b - a) * 1e3 for a, b in zip(ts, ts[1:]))
+
+    def pct(xs: List[float], q: float) -> Optional[float]:
+        return float(np.percentile(xs, q)) if xs else None
+
+    return {
+        "ttft_p50_ms": pct(ttfts, 50),
+        "ttft_p99_ms": pct(ttfts, 99),
+        "itl_p50_ms": pct(itls, 50),
+        "itl_p99_ms": pct(itls, 99),
+        "ttft_samples": len(ttfts),
+        "itl_samples": len(itls),
+        "token_times_dropped": dropped,
+    }
+
+
 class Scheduler:
     """Slot/page bookkeeping for a continuous batch.
 
@@ -170,7 +224,9 @@ class Scheduler:
                  prefill_chunk: int = 8,
                  prefix_cache: Optional[PrefixCache] = None,
                  lookahead: int = 4, aging_cap: int = 64,
-                 record_events: bool = False, spec_k: int = 1):
+                 record_events: bool = False, spec_k: int = 1,
+                 tracer: Optional[trace_lib.Tracer] = None,
+                 metrics: Optional[metrics_lib.MetricsRegistry] = None):
         self.pool = pool
         self.max_batch = int(max_batch)
         self.max_pages = int(max_pages)
@@ -199,10 +255,22 @@ class Scheduler:
         self.timeouts = 0
         self.record_events = bool(record_events)
         self.events: List[Dict[str, Any]] = []
+        self.tracer = tracer
+        self.metrics = metrics
+        self._m_queue_delay = (
+            metrics.histogram(
+                "serving_queue_delay_steps",
+                buckets=(0, 1, 2, 5, 10, 20, 50, 100, 200, 500, 1000),
+                help="scheduler steps between submission and admission")
+            if metrics is not None else None)
 
     def _event(self, op: str, **kw) -> None:
         if self.record_events:
             self.events.append(dict(op=op, step=self._step, **kw))
+        if self.tracer is not None and op not in ("admit", "retire"):
+            # admit/retire become lifecycle spans on the slot track;
+            # everything else is an instant on the shared lifecycle track.
+            self.tracer.instant(op, track="lifecycle", step=self._step, **kw)
 
     # -- request intake ----------------------------------------------------
     def max_tokens(self, req: Request) -> int:
@@ -253,6 +321,7 @@ class Scheduler:
                 req, f"needs {need} pages > pool capacity "
                      f"{self.pool.num_pages - 1}")
         req.state = RequestState.QUEUED
+        req.submit_step = self._step
         self.waiting.append(req)
         self._event("submit", rid=req.rid)
 
@@ -280,6 +349,9 @@ class Scheduler:
             self.pool.free(seq.pages)
         self._tables[b, :] = SCRATCH_PAGE
         self.slots[b] = None
+        if self.tracer is not None:
+            self.tracer.end(f"req{seq.req.rid}", track=f"slot{b}",
+                            generated=len(seq.req.tokens))
         return parked
 
     def _park(self, seq: _Seq) -> int:
@@ -464,6 +536,13 @@ class Scheduler:
         self.total_cached_tokens += cached_tokens
         if resumed:
             self.resumes += 1
+        if self.tracer is not None:
+            self.tracer.begin(f"req{req.rid}", track=f"slot{b}",
+                              rid=req.rid, resumed=resumed,
+                              cached_tokens=cached_tokens,
+                              pages=len(all_pages))
+        if self._m_queue_delay is not None:
+            self._m_queue_delay.observe(self._step - req.submit_step)
         self._event("admit", rid=req.rid, resumed=resumed,
                     cached_tokens=cached_tokens, pages=len(all_pages))
         return True
@@ -705,7 +784,10 @@ class ServingEngine:
                  max_batch: int, max_seq_len: int, prefill_chunk: int = 8,
                  opts=None, quant=None, tp: int = 1,
                  prefix_cache: bool = False, record_cache_events: bool = False,
-                 record_events: bool = False, speculative: int = 0):
+                 record_events: bool = False, speculative: int = 0,
+                 tracer: Optional[trace_lib.Tracer] = None,
+                 metrics: Optional[metrics_lib.MetricsRegistry] = None,
+                 drift: Optional[drift_lib.DriftDetector] = None):
         import jax
         import jax.numpy as jnp
 
@@ -736,12 +818,18 @@ class ServingEngine:
         self.prefix_cache = (
             PrefixCache(self.pool, record_events=record_cache_events)
             if prefix_cache else None)
+        self.tracer = tracer
+        self.metrics = metrics
+        self.drift = drift
         self.scheduler = Scheduler(
             self.pool, max_batch=max_batch,
             max_pages=self.pool.pages_for(max_seq_len),
             prefill_chunk=prefill_chunk, prefix_cache=self.prefix_cache,
-            record_events=record_events, spec_k=self.spec_k)
+            record_events=record_events, spec_k=self.spec_k,
+            tracer=tracer, metrics=metrics)
         self.max_seq_len = int(max_seq_len)
+        self._run_t0: Optional[float] = None
+        self._init_metrics()
         if opts is None:
             opts = lm.ForwardOpts(decode_impl="paged", quant=quant)
         elif quant is not None and opts.quant != quant:
@@ -845,6 +933,90 @@ class ServingEngine:
                                    donate_argnums=self._donate)
                            if self._verify_raw is not None else None)
 
+    def _init_metrics(self) -> None:
+        """Pre-create instruments and fold the existing stats surfaces
+        (scheduler counters, tuner, prefix cache, speculation) into the
+        registry as providers, so one snapshot covers the stack."""
+        m = self.metrics
+        if m is None:
+            self._m_step: Dict[str, metrics_lib.Counter] = {}
+            return
+        self._m_ttft = m.histogram(
+            "serving_ttft_ms", help="time to first token per request (ms)")
+        self._m_itl = m.histogram(
+            "serving_inter_token_ms",
+            help="latency between consecutive tokens of a request (ms)")
+        self._m_step = {
+            f: m.counter(f"serving_{f}_total",
+                         help=f"cumulative StepStats.{f} over all steps")
+            for f in ("admitted", "retired", "prefill_tokens",
+                      "decode_tokens", "prefix_cached_tokens", "preempted",
+                      "failed", "timed_out", "degraded")}
+        self._m_steps = m.counter("serving_steps_total",
+                                  help="scheduler steps executed")
+        sched = self.scheduler
+        m.register_provider("scheduler", lambda: {
+            "total_prefill_tokens": sched.total_prefill_tokens,
+            "total_cached_tokens": sched.total_cached_tokens,
+            "preemptions": sched.preemptions,
+            "resumes": sched.resumes,
+            "failures": sched.failures,
+            "timeouts": sched.timeouts,
+            "waiting": len(sched.waiting),
+            "active_slots": sum(s is not None for s in sched.slots),
+        })
+        if self.prefix_cache is not None:
+            m.register_provider("prefix_cache", self.prefix_cache.stats)
+        if self.spec_k > 1:
+            m.register_provider("speculative", lambda: {
+                "draft_k": self.spec_k,
+                "verify_steps": self.spec_steps,
+                "committed_tokens": self.spec_committed,
+                "accepted_per_step": (
+                    self.spec_committed / max(1, self.spec_steps)),
+                "fallbacks": self.spec_fallbacks,
+            })
+
+        def _tuner_stats():
+            from repro.core.tuner import default_tuner
+            return default_tuner().stats()
+
+        m.register_provider("tuner", _tuner_stats)
+
+    def _span(self, name: str, **args):
+        """Scheduler-phase span on the engine tracer (no-op untraced)."""
+        if self.tracer is None:
+            return _NULL_CTX
+        return self.tracer.span(name, track="scheduler", **args)
+
+    def _note_token(self, req: Request, t: float) -> None:
+        """Record one generated-token timestamp (bounded) and feed the
+        TTFT / inter-token histograms when a registry is attached."""
+        prev = req.last_token_time
+        req.note_token_time(t)
+        if self.metrics is None:
+            return
+        if prev is None:
+            if self._run_t0 is not None:
+                self._m_ttft.observe((t - self._run_t0) * 1e3)
+        else:
+            self._m_itl.observe((t - prev) * 1e3)
+
+    def _drift_detector(self) -> Optional[drift_lib.DriftDetector]:
+        return self.drift if self.drift is not None else drift_lib.get_active()
+
+    def _observe_drift(self, det: drift_lib.DriftDetector, kernel: str,
+                       seconds: float) -> None:
+        """Feed one dispatch timing sample to ``det``, keyed by the tuner
+        cache key of the kernel's last dispatch."""
+        from repro.core.tuner import default_tuner
+        tuner = default_tuner()
+        item = tuner.last_dispatch(kernel)
+        if item is None:
+            return
+        key, shipped = tuner.dispatch_key(kernel, item[0])
+        det.observe(key, seconds, shipped=shipped, kernel=kernel)
+
     def _requarantine_and_rejit(self, kernel: str = "paged_decode") -> bool:
         """Non-finite step logits: quarantine the named kernel's config
         that traced into the current jit (if the dispatch is known) and
@@ -935,6 +1107,8 @@ class ServingEngine:
             for s in plan.logit_poison(sched._step, active):
                 scale[s] = float("nan")
         log_n = len(plan.log) if plan is not None else 0
+        det = self._drift_detector()
+        t_disp = time.perf_counter()
         vtoks, vok, self.cache = self._verify_fn(
             self.params, jnp.asarray(toks), self.cache,
             self._dev_tables_for(mask), jnp.asarray(lens, jnp.int32),
@@ -951,6 +1125,8 @@ class ServingEngine:
         outs = np.asarray(vtoks)                  # (B, K) greedy argmax
         okh = np.asarray(vok).reshape(-1)
         t = time.perf_counter()
+        if det is not None:
+            self._observe_drift(det, "paged_verify", t - t_disp)
         committed = 0
         for b in np.nonzero(mask)[0]:
             b = int(b)
@@ -965,7 +1141,8 @@ class ServingEngine:
                 a += 1
             take = min(a + 1, req.max_new_tokens - len(req.tokens))
             req.tokens.extend(int(x) for x in outs[b, :take])
-            req.token_times.extend([t] * take)
+            for _ in range(take):
+                self._note_token(req, t)
             sched.commit_verify(b, take)
             committed += take
             self.spec_steps += 1
@@ -987,11 +1164,13 @@ class ServingEngine:
         plan = fault_lib.get_active()
         stats = StepStats()
         pre = (sched.preemptions, sched.failures, sched.timeouts)
-        retired = sched.retire_finished()
+        with self._span("retire"):
+            retired = sched.retire_finished()
         stats.retired = len(retired)
         for req in retired:
             self._drafters.pop(req.rid, None)
-        admitted = sched.admit(now)
+        with self._span("admit"):
+            admitted = sched.admit(now)
         stats.admitted = len(admitted)
         stats.prefix_cached_tokens = sum(
             sched.slots[b].cached_tokens for b in admitted)
@@ -1001,62 +1180,77 @@ class ServingEngine:
         chunk = sched.next_prefill()
         if chunk is not None:
             b, tokens, start, valid = chunk
-            table = jnp.asarray(sched.block_tables()[b:b + 1])
-            ptoks, pok, self.cache = self._prefill_fn(
-                self.params, jnp.asarray(tokens[None]), self.cache, table,
-                jnp.asarray([start], jnp.int32))
-            sched.mark_prefilled(b, valid)
-            stats.prefill_tokens = valid
-            seq = sched.slots[b]
-            if seq.prompt_done and not seq.req.tokens:
-                # First generated token comes straight from prefill argmax.
-                # (A resumed sequence skips this: its next token is the
-                # last generated one, re-entering through decode below.)
-                if bool(np.asarray(pok)[0, valid - 1]):
-                    seq.req.tokens.append(int(ptoks[0, valid - 1]))
-                    seq.req.token_times.append(time.perf_counter())
-                else:
-                    sched.fail_slot(b, "non-finite prefill logits")
+            with self._span("prefill", slot=int(b), tokens=int(valid)):
+                table = jnp.asarray(sched.block_tables()[b:b + 1])
+                ptoks, pok, self.cache = self._prefill_fn(
+                    self.params, jnp.asarray(tokens[None]), self.cache,
+                    table, jnp.asarray([start], jnp.int32))
+                sched.mark_prefilled(b, valid)
+                stats.prefill_tokens = valid
+                seq = sched.slots[b]
+                if seq.prompt_done and not seq.req.tokens:
+                    # First generated token comes straight from prefill
+                    # argmax. (A resumed sequence skips this: its next
+                    # token is the last generated one, re-entering
+                    # through decode below.)
+                    if bool(np.asarray(pok)[0, valid - 1]):
+                        seq.req.tokens.append(int(ptoks[0, valid - 1]))
+                        self._note_token(seq.req, time.perf_counter())
+                    else:
+                        sched.fail_slot(b, "non-finite prefill logits")
 
         speculate = self.spec_k > 1 and not self._spec_disabled
         mask = sched.decode_mask(lookahead=self.spec_k if speculate else 1)
         if mask.any() and speculate:
-            self._step_verify(mask, plan, stats)
+            with self._span("verify", slots=int(mask.sum())):
+                self._step_verify(mask, plan, stats)
         elif mask.any():
-            toks = np.zeros((sched.max_batch, 1), np.int32)
-            for b in np.nonzero(mask)[0]:
-                toks[b, 0] = sched.slots[int(b)].req.tokens[-1]
-            lens = sched.lens() * mask            # inactive slots -> 0
-            scale = np.ones((sched.max_batch, 1), np.float32)
-            if plan is not None:
-                active = [int(b) for b in np.nonzero(mask)[0]]
-                for s in plan.logit_poison(sched._step, active):
-                    scale[s] = float("nan")
-            dtoks, dok, self.cache = self._decode_fn(
-                self.params, jnp.asarray(toks), self.cache,
-                self._dev_tables_for(mask), jnp.asarray(lens, jnp.int32),
-                jnp.asarray(scale))
-            next_tok = np.asarray(dtoks)
-            okh = np.asarray(dok).reshape(-1)
-            t = time.perf_counter()
-            rejit = False
-            for b in np.nonzero(mask)[0]:
-                seq = sched.slots[int(b)]
-                if okh[b]:
-                    seq.req.tokens.append(int(next_tok[b]))
-                    seq.req.token_times.append(t)
-                else:
-                    # Garbage argmax tokens must never reach the caller:
-                    # fail the request and quarantine the decode config.
-                    sched.fail_slot(int(b), "non-finite decode logits")
-                    rejit = True
-            if rejit:
-                self._requarantine_and_rejit()
-            sched.advance_decoded(mask & okh)
-            stats.decode_tokens = int((mask & okh).sum())
+            with self._span("decode", slots=int(mask.sum())):
+                toks = np.zeros((sched.max_batch, 1), np.int32)
+                for b in np.nonzero(mask)[0]:
+                    toks[b, 0] = sched.slots[int(b)].req.tokens[-1]
+                lens = sched.lens() * mask        # inactive slots -> 0
+                scale = np.ones((sched.max_batch, 1), np.float32)
+                if plan is not None:
+                    active = [int(b) for b in np.nonzero(mask)[0]]
+                    for s in plan.logit_poison(sched._step, active):
+                        scale[s] = float("nan")
+                det = self._drift_detector()
+                t_disp = time.perf_counter()
+                dtoks, dok, self.cache = self._decode_fn(
+                    self.params, jnp.asarray(toks), self.cache,
+                    self._dev_tables_for(mask),
+                    jnp.asarray(lens, jnp.int32), jnp.asarray(scale))
+                next_tok = np.asarray(dtoks)
+                okh = np.asarray(dok).reshape(-1)
+                t = time.perf_counter()
+                if det is not None:
+                    # The asarray above synced the step, so t - t_disp is
+                    # the full dispatch-to-host latency of this launch.
+                    self._observe_drift(det, "paged_decode", t - t_disp)
+                rejit = False
+                for b in np.nonzero(mask)[0]:
+                    seq = sched.slots[int(b)]
+                    if okh[b]:
+                        seq.req.tokens.append(int(next_tok[b]))
+                        self._note_token(seq.req, t)
+                    else:
+                        # Garbage argmax tokens must never reach the
+                        # caller: fail the request and quarantine the
+                        # decode config.
+                        sched.fail_slot(int(b), "non-finite decode logits")
+                        rejit = True
+                if rejit:
+                    self._requarantine_and_rejit()
+                sched.advance_decoded(mask & okh)
+                stats.decode_tokens = int((mask & okh).sum())
         stats.preempted = sched.preemptions - pre[0]
         stats.failed = sched.failures - pre[1]
         stats.timed_out = sched.timeouts - pre[2]
+        if self.metrics is not None:
+            self._m_steps.inc()
+            for f, c in self._m_step.items():
+                c.inc(getattr(stats, f))
         return stats
 
     def run(self, requests: List[Request], *,
@@ -1070,6 +1264,7 @@ class ServingEngine:
                 self.scheduler.submit(req)
         plan = fault_lib.get_active()
         t0 = time.perf_counter()
+        self._run_t0 = t0
         steps = 0
         stalls = 0
         while self.scheduler.has_work():
@@ -1125,6 +1320,7 @@ class ServingEngine:
             "timed_out_requests": sum(
                 r.state is RequestState.TIMED_OUT for r in requests),
             "terminal_requests": sum(r.terminal() for r in requests),
+            "latency": latency_summary(requests, t0),
         }
         if self.spec_k > 1:
             out["speculative"] = {
