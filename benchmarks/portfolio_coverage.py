@@ -1,0 +1,161 @@
+"""Portfolio coverage: how close "a few" configs fit the whole shipped DB.
+
+The "A Few Fit Most" claim (arXiv 2507.15277), measured against this
+repo's own artifacts: for every current, finite scenario in the shipped
+point-tuned DB (436 entries), ask the shipped portfolio's selector for a
+member and re-evaluate BOTH the member and the point winner with the
+analytical cost model (fresh evaluation, not stored metrics — robust to
+cost-model drift between generations). Reports:
+
+  * coverage at 5/10/20% relative-regression thresholds — the headline
+    number is coverage@10%, gated at >= 0.9,
+  * size_ratio — portfolio members / DB point entries, gated at <= 0.25
+    (the artifact is the point of the exercise: serve a DB an order of
+    magnitude smaller at a bounded regression),
+  * geomean regression and a per-kernel breakdown,
+  * selector-path mix (exact / nearest / fallback hits).
+
+Backend: ``model:<chip>`` — the same analytical evaluator that tuned the
+shipped DB, so regressions are apples-to-apples (EXPERIMENTS.md).
+
+Run:  PYTHONPATH=src python benchmarks/portfolio_coverage.py [--fast] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+FAST_CHIPS = ("tpu_v5e", "tpu_v6e")
+THRESHOLDS = (0.05, 0.10, 0.20)
+GATE_THRESHOLD = 0.10
+GATE_COVERAGE = 0.90
+GATE_SIZE_RATIO = 0.25
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help=f"restrict scenarios to chips {FAST_CHIPS} "
+                         "(CI smoke); the size_ratio gate still counts "
+                         "the full DB")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless coverage@10%% >= "
+                         f"{GATE_COVERAGE} and size_ratio <= "
+                         f"{GATE_SIZE_RATIO}")
+    args = ap.parse_args(argv)
+
+    from repro.core.cache import CacheEntry
+    from repro.core.measure import AnalyticalMeasure
+    from repro.core.portfolio import Portfolio, parse_db_key
+    from repro.core.tuner import SHIPPED_DB
+    from repro.kernels.registry import get_kernel
+
+    with open(SHIPPED_DB) as f:
+        db = json.load(f)
+    pf = Portfolio.load_shipped()
+    assert pf is not None, "shipped_portfolio.json missing — run " \
+        "PYTHONPATH=src python -m repro.configs.gen_portfolio"
+    counts = pf.counts()
+
+    backends = {}
+    per_kernel = {}
+    rels = []
+    n_scen = n_selected = 0
+    for key in sorted(db):
+        try:
+            k, ctx = parse_db_key(key)
+            kernel = get_kernel(k["kernel"]).tunable
+        except Exception:
+            continue
+        if (k["kernel_version"] != kernel.version
+                or k["space"] != kernel.space.space_hash()):
+            continue
+        entry = CacheEntry.from_json(db[key])
+        if entry.failed():
+            continue
+        if args.fast and ctx.chip.name not in FAST_CHIPS:
+            continue
+        be = backends.setdefault(ctx.chip.name, AnalyticalMeasure(ctx.chip))
+        ev = be.evaluator(kernel, ctx)
+        point = ev(entry.config)
+        if not math.isfinite(point) or point <= 0:
+            continue
+        n_scen += 1
+        pk = per_kernel.setdefault(kernel.name, {
+            "scenarios": 0, "selected": 0, "rels": []})
+        pk["scenarios"] += 1
+        member = pf.select(kernel, ctx)
+        if member is None:
+            continue
+        m = ev(member)
+        if not math.isfinite(m):
+            continue
+        n_selected += 1
+        pk["selected"] += 1
+        rel = m / point
+        rels.append(rel)
+        pk["rels"].append(rel)
+
+    def coverage(rs, thresh, total):
+        return sum(1 for r in rs if r <= 1.0 + thresh) / max(1, total)
+
+    def geomean(rs):
+        if not rs:
+            return None
+        return math.exp(sum(math.log(max(r, 1e-12)) for r in rs) / len(rs))
+
+    size_ratio = counts["members"] / max(1, len(db))
+    report = {
+        "backend": "model:" + "/".join(sorted(backends)),
+        "fast": args.fast,
+        "db_entries": len(db),
+        "portfolio_members": counts["members"],
+        "portfolio_kernels": counts["kernels"],
+        "size_ratio": round(size_ratio, 4),
+        "scenarios": n_scen,
+        "selected": n_selected,
+        "coverage": {f"{int(t * 100)}pct": round(coverage(rels, t, n_scen), 4)
+                     for t in THRESHOLDS},
+        "geomean_regression": (round(geomean(rels), 4)
+                               if rels else None),
+        "worst_regression": round(max(rels), 4) if rels else None,
+        "selector": pf.stats(),
+        "per_kernel": {
+            name: {
+                "scenarios": pk["scenarios"],
+                "selected": pk["selected"],
+                "coverage_10pct": round(coverage(
+                    pk["rels"], GATE_THRESHOLD, pk["scenarios"]), 4),
+                "geomean_regression": (round(geomean(pk["rels"]), 4)
+                                       if pk["rels"] else None),
+            }
+            for name, pk in sorted(per_kernel.items())
+        },
+    }
+
+    from common import write_bench_json
+    path = write_bench_json("portfolio_coverage", report)
+    print(json.dumps({k: v for k, v in report.items()
+                      if k not in ("per_kernel", "selector")},
+                     indent=1, sort_keys=True))
+    print(f"report -> {path}")
+
+    if args.check:
+        cov = report["coverage"][f"{int(GATE_THRESHOLD * 100)}pct"]
+        ok = cov >= GATE_COVERAGE and size_ratio <= GATE_SIZE_RATIO
+        print(f"gate: coverage@{int(GATE_THRESHOLD * 100)}% {cov:.3f} "
+              f">= {GATE_COVERAGE} and size_ratio {size_ratio:.3f} "
+              f"<= {GATE_SIZE_RATIO}: {'PASS' if ok else 'FAIL'}")
+        if not ok:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,62 @@
+"""Generate the shipped config portfolio (core/portfolio.py, "A Few Fit
+Most"): cluster configs/shipped_tuning_db.json down to K representative
+configs per kernel plus a feature-keyed selector table, writing
+configs/shipped_portfolio.json — the artifact ``Portfolio.load_shipped``
+reads and serve.py ``--config-source portfolio|db`` dispatches from.
+
+The build is a pure function of the DB bytes (build_portfolio is
+deterministic, render_portfolio is the single serialization), so
+regenerating from an unchanged DB reproduces the committed artifact
+byte-for-byte — the property tests/test_portfolio.py pins.
+
+Run: PYTHONPATH=src python -m repro.configs.gen_portfolio
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.core.portfolio import build_portfolio, render_portfolio
+
+DB = os.path.join(os.path.dirname(__file__), "shipped_tuning_db.json")
+OUT = os.path.join(os.path.dirname(__file__), "shipped_portfolio.json")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--db", default=DB,
+                    help="shipped tuning DB to cluster (JSON dict)")
+    ap.add_argument("--out", default=OUT,
+                    help="portfolio artifact to write")
+    ap.add_argument("--max-members", type=int, default=8,
+                    help="portfolio size cap per kernel")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="a scenario counts as covered when its selected "
+                         "member is within this relative regression of "
+                         "the point-tuned optimum")
+    args = ap.parse_args(argv)
+
+    with open(args.db) as f:
+        db = json.load(f)
+    data = build_portfolio(db, max_members=args.max_members,
+                           threshold=args.threshold)
+    with open(args.out, "w") as f:
+        f.write(render_portfolio(data))
+
+    n_members = n_scens = n_cov = 0
+    for name, sec in sorted(data["kernels"].items()):
+        n_members += len(sec["members"])
+        n_scens += sec["scenarios"]
+        n_cov += sec["covered"]
+        print(f"  {name}: {len(sec['members'])} members cover "
+              f"{sec['covered']}/{sec['scenarios']} scenarios within "
+              f"{args.threshold:.0%}")
+    print(f"wrote {n_members} members over {len(data['kernels'])} kernels "
+          f"({n_cov}/{n_scens} scenarios within {args.threshold:.0%}; "
+          f"source DB {len(db)} entries) -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

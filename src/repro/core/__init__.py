@@ -28,3 +28,6 @@ from repro.core.engine import TuningEngine  # noqa: F401
 from repro.core.tuner import (  # noqa: F401
     Autotuner, TunableKernel, TuningQueue, default_tuner, set_default_tuner,
 )
+from repro.core.portfolio import (  # noqa: F401
+    Portfolio, build_portfolio, config_distance, scenario_features,
+)

@@ -1,0 +1,500 @@
+"""Config portfolios — "A Few Fit Most" multi-versioning over the shipped DB.
+
+The shipped tuning DB is a *point* database: one winner per (kernel, chip,
+shapes, dtype, mesh) scenario, multiplicative in every axis (436 entries and
+growing with each arch/dtype/mesh added). arXiv 2507.15277 ("A Few Fit
+Most") observes that in production this curve collapses: a small portfolio
+of K representative configs per kernel, plus a cheap runtime selector, lands
+within a few percent of the point-tuned optimum for the vast majority of
+scenarios. This module builds and serves that portfolio:
+
+  * ``build_portfolio`` — offline clustering pass over a shipped DB dict.
+    Candidates are the unique winning configs (and their runners-up: the
+    fig5 observation that spaces lower to few distinct programs means
+    winners repeat heavily across scenarios). Each candidate is re-scored
+    against every scenario with the analytical cost model (validity-gated:
+    a config tuned for one platform can be outright *invalid* on another),
+    then a greedy facility-location pass picks members maximizing the
+    number of scenarios brought within ``threshold`` of their point-tuned
+    optimum. Ties break toward lower total regression, then toward the
+    candidate most *distant* from the members already chosen under the
+    fig5 config-diversity metric (``config_distance``) — diverse members
+    cover failure modes a pile of near-identical configs cannot.
+  * ``Portfolio`` — the runtime artifact. ``select(kernel, ctx)`` keys on
+    scenario features (log2 shape buckets, dtype, mesh, chip, and layout
+    pins like ``page_size``/``draft_k``): exact feature hit first, nearest
+    feature signature otherwise, any valid member as a last resort — and
+    never, under any path, a config outside the kernel's current
+    ``valid_configs`` space. ``admit`` is the online half: a background
+    retune triggered by drift (obs/drift.py) lands its fresh winner here,
+    so the live portfolio tracks the deployment it serves.
+
+The Autotuner consults an attached portfolio on cache miss (before the
+heuristic / background-tune fallback) or, under ``config_source=
+"portfolio"``, before the point DB itself — serving a 25×-smaller artifact
+at a bounded regression (benchmarks/portfolio_coverage.py measures it).
+
+The build is a pure function of the DB bytes: no timestamps, floats
+rounded through ``_round``, members ordered by selection, JSON rendered
+with sorted keys — so ``gen_portfolio`` output is byte-stable and pinned
+by a golden fixture (tests/fixtures/portfolio/).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.core.cache import config_key
+from repro.core.config_space import Config, TuningContext
+from repro.core.hardware import get_chip
+
+PORTFOLIO_SCHEMA = 1
+SHIPPED_PORTFOLIO = os.path.abspath(os.path.join(
+    os.path.dirname(__file__), os.pardir, "configs",
+    "shipped_portfolio.json"))
+
+# Scenarios a member cannot legally serve score as this in the selector
+# vote — any valid member beats every invalid one.
+_INVALID = float("inf")
+
+
+def _round(x: float) -> float:
+    """Stable float for the serialized artifact (6 significant digits —
+    far below anything the coverage gates look at, far above float noise)."""
+    if not math.isfinite(x):
+        return x
+    return float(f"{x:.6g}")
+
+
+def _bucket(n: int) -> int:
+    """Log2 size bucket of one dimension: shapes within the same power of
+    two share tuning behavior far more often than not (block sizes divide
+    or they don't), so the selector keys on buckets, not exact dims."""
+    return int(max(1, int(n)).bit_length())
+
+
+def scenario_features(ctx: TuningContext) -> str:
+    """The selector's key: everything cheap that predicts which portfolio
+    member wins — chip, dtype, mesh signature, layout pins (``extra``),
+    and per-dimension log2 shape buckets. A stable JSON string so it can
+    index the serialized selector table directly."""
+    payload = {
+        "chip": ctx.chip.name,
+        "dtype": ctx.dtype,
+        "mesh": {k: int(ctx.mesh[k]) for k in sorted(ctx.mesh)},
+        "pins": {k: ctx.extra[k] for k in sorted(ctx.extra)},
+        "shapes": {name: [_bucket(d) for d in dims]
+                   for name, dims in sorted(ctx.shapes.items())},
+    }
+    return json.dumps(payload, sort_keys=True, default=repr)
+
+
+def feature_distance(sig_a: str, sig_b: str) -> float:
+    """How far apart two feature signatures are (selector fallback order
+    for scenarios never seen offline). Weights are heuristic but fixed:
+    dtype and layout pins dominate (they gate validity), then mesh and
+    chip, then shape-bucket deltas — and any weighting is deterministic,
+    which is the property the tests pin."""
+    a, b = json.loads(sig_a), json.loads(sig_b)
+    d = 0.0
+    if a["dtype"] != b["dtype"]:
+        d += 16.0
+    for k in set(a["pins"]) | set(b["pins"]):
+        if a["pins"].get(k) != b["pins"].get(k):
+            d += 8.0
+    if a["mesh"] != b["mesh"]:
+        d += 4.0
+    if a["chip"] != b["chip"]:
+        d += 2.0
+    for name in set(a["shapes"]) | set(b["shapes"]):
+        da, db = a["shapes"].get(name), b["shapes"].get(name)
+        if da is None or db is None:
+            d += 8.0
+            continue
+        for i in range(max(len(da), len(db))):
+            xa = da[i] if i < len(da) else 0
+            xb = db[i] if i < len(db) else 0
+            d += abs(xa - xb)
+    return d
+
+
+def config_distance(a: Config, b: Config, space) -> float:
+    """fig5 config-diversity distance, normalized to [0, 1]: mean over the
+    space's params of the index distance within each ordered domain
+    (numeric tunables) or equality (flags). Configs at distance 0 lower to
+    the same program in the fig5 sense; the greedy pass uses *large*
+    distance to prefer genuinely different members when coverage ties."""
+    total, n = 0.0, 0
+    for p in space.params:
+        n += 1
+        va, vb = a.get(p.name), b.get(p.name)
+        if va == vb:
+            continue
+        vals = list(p.values)
+        try:
+            ia, ib = vals.index(va), vals.index(vb)
+        except ValueError:
+            total += 1.0            # off-domain value: maximally different
+            continue
+        total += (abs(ia - ib) / (len(vals) - 1)) if len(vals) > 1 else 1.0
+    return total / max(1, n)
+
+
+def parse_db_key(key: str) -> Tuple[Dict[str, Any], TuningContext]:
+    """Reconstruct the (parsed key, TuningContext) a shipped-DB row was
+    tuned for — the inverse of cache.cache_key for artifact validation
+    and portfolio building."""
+    k = json.loads(key)
+    ctx_payload = json.loads(k["ctx"])
+    ctx = TuningContext(
+        chip=get_chip(ctx_payload["chip"]),
+        shapes={n: tuple(v) for n, v in ctx_payload["shapes"].items()},
+        dtype=ctx_payload["dtype"],
+        extra=dict(ctx_payload["extra"]),
+        mesh=dict(ctx_payload.get("mesh", {})),
+    )
+    return k, ctx
+
+
+def _scenario_groups(db: Dict[str, Dict[str, Any]]):
+    """Group parseable, current, finite DB rows by kernel name. Rows for
+    unknown kernels or stale space/version hashes are skipped — the
+    shipped-DB tests police those separately; the portfolio only learns
+    from rows the *current* code could serve."""
+    from repro.core.cache import CacheEntry
+    from repro.kernels.registry import get_kernel
+
+    groups: Dict[str, Dict[str, Any]] = {}
+    for key in sorted(db):
+        try:
+            k, ctx = parse_db_key(key)
+            kernel = get_kernel(k["kernel"]).tunable
+        except Exception:
+            continue
+        if (k["kernel_version"] != kernel.version
+                or k["space"] != kernel.space.space_hash()):
+            continue
+        entry = CacheEntry.from_json(db[key])
+        if entry.failed():
+            continue
+        g = groups.setdefault(kernel.name, {"kernel": kernel, "rows": []})
+        g["rows"].append((ctx, entry))
+    return groups
+
+
+def build_portfolio(db: Dict[str, Dict[str, Any]], *, max_members: int = 8,
+                    threshold: float = 0.10) -> Dict[str, Any]:
+    """Cluster a shipped-DB dict into a per-kernel config portfolio.
+
+    Deterministic: candidates sort by config identity, the greedy pass
+    breaks every tie explicitly, metrics come from the analytical cost
+    model (a pure function), and no timestamps enter the artifact.
+    """
+    from repro.core.measure import AnalyticalMeasure
+
+    backends: Dict[str, AnalyticalMeasure] = {}
+    kernels_out: Dict[str, Any] = {}
+    for name, g in sorted(_scenario_groups(db).items()):
+        kernel, rows = g["kernel"], g["rows"]
+        # Candidate pool: unique winners + runners-up across scenarios.
+        cands: List[Config] = []
+        seen = set()
+        for _, entry in rows:
+            for cfg in ([entry.config]
+                        + [dict(r["config"]) for r in entry.runners_up]):
+                ck = config_key(cfg)
+                if ck not in seen:
+                    seen.add(ck)
+                    cands.append(dict(cfg))
+        cands.sort(key=config_key)
+
+        # Score matrix: candidate x scenario analytical seconds (inf when
+        # the candidate is invalid for that scenario's context).
+        scens: List[Dict[str, Any]] = []
+        metric: List[List[float]] = [[] for _ in cands]
+        for ctx, entry in rows:
+            be = backends.setdefault(ctx.chip.name,
+                                     AnalyticalMeasure(ctx.chip))
+            ev = be.evaluator(kernel, ctx)
+            point = ev(entry.config)
+            if not math.isfinite(point) or point <= 0:
+                continue
+            scens.append({"ctx": ctx, "sig": scenario_features(ctx),
+                          "point": point})
+            for ci, cfg in enumerate(cands):
+                m = (ev(cfg) if kernel.space.is_valid(cfg, ctx)
+                     else _INVALID)
+                metric[ci].append(m)
+        if not scens:
+            continue
+
+        limit = [(1.0 + threshold) * s["point"] for s in scens]
+        chosen: List[int] = []
+
+        def total_rel(ci):
+            return sum(metric[ci][si] / scens[si]["point"]
+                       for si in range(len(scens))
+                       if math.isfinite(metric[ci][si]))
+
+        def diversity(ci):
+            if not chosen:
+                return 0.0
+            return min(config_distance(cands[ci], cands[cj], kernel.space)
+                       for cj in chosen)
+
+        covered: set = set()
+        while len(chosen) < max_members and len(chosen) < len(cands):
+            best, best_key = None, None
+            for ci in range(len(cands)):
+                if ci in chosen:
+                    continue
+                new = sum(1 for si in range(len(scens))
+                          if si not in covered
+                          and metric[ci][si] <= limit[si])
+                key = (-new, total_rel(ci), -diversity(ci),
+                       config_key(cands[ci]))
+                if best_key is None or key < best_key:
+                    best, best_key = ci, key
+            if best is None or -best_key[0] == 0:
+                break
+            chosen.append(best)
+            covered |= {si for si in range(len(scens))
+                        if metric[best][si] <= limit[si]}
+        # Completeness pass: every scenario should have at least one member
+        # it can legally serve, even if outside the threshold — the
+        # selector must be able to answer, regressed beats invalid.
+        while len(chosen) < max_members:
+            orphans = [si for si in range(len(scens))
+                       if all(not math.isfinite(metric[ci][si])
+                              for ci in chosen)]
+            if not orphans:
+                break
+            best, best_key = None, None
+            for ci in range(len(cands)):
+                if ci in chosen:
+                    continue
+                serves = sum(1 for si in orphans
+                             if math.isfinite(metric[ci][si]))
+                key = (-serves, total_rel(ci), config_key(cands[ci]))
+                if best_key is None or key < best_key:
+                    best, best_key = ci, key
+            if best is None or -best_key[0] == 0:
+                break
+            chosen.append(best)
+        if not chosen:
+            continue
+
+        # Selector: per feature signature, the chosen member minimizing the
+        # summed relative regression over the scenarios sharing it.
+        by_sig: Dict[str, List[int]] = {}
+        for si, s in enumerate(scens):
+            by_sig.setdefault(s["sig"], []).append(si)
+        selector: Dict[str, int] = {}
+        for sig, sis in by_sig.items():
+            best, best_score = None, None
+            for mi, ci in enumerate(chosen):
+                score = sum(metric[ci][si] / scens[si]["point"]
+                            if math.isfinite(metric[ci][si]) else _INVALID
+                            for si in sis)
+                if math.isinf(score):
+                    continue
+                if best_score is None or score < best_score:
+                    best, best_score = mi, score
+            if best is not None:
+                selector[sig] = best
+
+        members: List[Dict[str, Any]] = []
+        cover_n = [0] * len(chosen)
+        cover_rel: List[List[float]] = [[] for _ in chosen]
+        n_within = 0
+        for si, s in enumerate(scens):
+            mi = selector.get(s["sig"])
+            if mi is None:
+                continue
+            ci = chosen[mi]
+            cover_n[mi] += 1
+            rel = metric[ci][si] / s["point"]
+            cover_rel[mi].append(rel)
+            if metric[ci][si] <= limit[si]:
+                n_within += 1
+        for mi, ci in enumerate(chosen):
+            rels = cover_rel[mi]
+            members.append({
+                "config": cands[ci],
+                "covers": cover_n[mi],
+                "mean_rel": _round(sum(rels) / len(rels)) if rels else None,
+            })
+        kernels_out[name] = {
+            "version": kernel.version,
+            "space": kernel.space.space_hash(),
+            "members": members,
+            "selector": selector,
+            "scenarios": len(scens),
+            "covered": n_within,
+        }
+
+    return {
+        "schema": PORTFOLIO_SCHEMA,
+        "threshold": _round(threshold),
+        "max_members": int(max_members),
+        "source_entries": len(db),
+        "kernels": kernels_out,
+    }
+
+
+def render_portfolio(data: Dict[str, Any]) -> str:
+    """The one serialization everybody uses (generator, golden test,
+    benchmark) so byte-stability is a property of this function alone."""
+    return json.dumps(data, indent=1, sort_keys=True) + "\n"
+
+
+class Portfolio:
+    """Runtime view of a portfolio artifact: selection plus online admission.
+
+    Thread-safe: ``select`` runs on the serving path while ``admit`` is
+    called from background tuning threads.
+    """
+
+    def __init__(self, data: Dict[str, Any]):
+        if data.get("schema") != PORTFOLIO_SCHEMA:
+            raise ValueError(
+                f"portfolio schema {data.get('schema')!r} != "
+                f"{PORTFOLIO_SCHEMA} — regenerate with gen_portfolio")
+        self.data = data
+        self._lock = threading.RLock()
+        self._stats = {"selects": 0, "exact_hits": 0, "nearest_hits": 0,
+                       "fallback_hits": 0, "rejects": 0, "admitted": 0}
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def load(cls, path: str) -> "Portfolio":
+        with open(path) as f:
+            return cls(json.load(f))
+
+    @classmethod
+    def load_shipped(cls) -> Optional["Portfolio"]:
+        """The committed artifact, or None when absent/unreadable (callers
+        degrade to point-DB behavior)."""
+        try:
+            return cls.load(SHIPPED_PORTFOLIO)
+        except (OSError, ValueError, json.JSONDecodeError):
+            return None
+
+    # -- introspection ------------------------------------------------------
+    def counts(self) -> Dict[str, int]:
+        with self._lock:
+            ks = self.data["kernels"]
+            return {"kernels": len(ks),
+                    "members": sum(len(k["members"]) for k in ks.values())}
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._stats)
+
+    def members(self, kernel_name: str) -> List[Config]:
+        with self._lock:
+            sec = self.data["kernels"].get(kernel_name)
+            if sec is None:
+                return []
+            return [dict(m["config"]) for m in sec["members"]]
+
+    def _section(self, kernel) -> Optional[Dict[str, Any]]:
+        """The kernel's section iff it matches the *current* space — a
+        portfolio built for an older kernel definition must never serve
+        (same staleness rule the tuning cache enforces via space hash)."""
+        sec = self.data["kernels"].get(kernel.name)
+        if sec is None:
+            return None
+        if (sec["version"] != kernel.version
+                or sec["space"] != kernel.space.space_hash()):
+            return None
+        return sec
+
+    # -- runtime selection --------------------------------------------------
+    def select(self, kernel, ctx: TuningContext,
+               exclude: Iterable[Config] = ()) -> Optional[Config]:
+        """The member to serve for ``ctx``, or None when no member may
+        legally serve it. Deterministic; never returns an excluded
+        (quarantined) or invalid config."""
+        with self._lock:
+            sec = self._section(kernel)
+            self._stats["selects"] += 1
+            if sec is None:
+                self._stats["rejects"] += 1
+                return None
+            bad = {config_key(c) for c in exclude}
+
+            def ok(cfg: Config) -> bool:
+                return (config_key(cfg) not in bad
+                        and kernel.space.is_valid(cfg, ctx))
+
+            mems = sec["members"]
+            sig = scenario_features(ctx)
+            mi = sec["selector"].get(sig)
+            if mi is not None and mi < len(mems) and ok(mems[mi]["config"]):
+                self._stats["exact_hits"] += 1
+                return dict(mems[mi]["config"])
+            # Nearest known scenario whose member can legally serve here.
+            ranked = sorted(sec["selector"].items(),
+                            key=lambda kv: (feature_distance(sig, kv[0]),
+                                            kv[0]))
+            for _, mi in ranked:
+                if mi < len(mems) and ok(mems[mi]["config"]):
+                    self._stats["nearest_hits"] += 1
+                    return dict(mems[mi]["config"])
+            # Last resort: any member, in selection (coverage) order.
+            for m in mems:
+                if ok(m["config"]):
+                    self._stats["fallback_hits"] += 1
+                    return dict(m["config"])
+            self._stats["rejects"] += 1
+            return None
+
+    # -- online admission ---------------------------------------------------
+    def admit(self, kernel, ctx: TuningContext, config: Config,
+              metric: Optional[float] = None) -> bool:
+        """Fold a freshly-tuned winner into the live portfolio: add it as a
+        member (if new) and point ``ctx``'s feature signature at it. The
+        online half of drift-triggered retuning — returns True when the
+        portfolio changed. Invalid configs are refused (the same guard
+        ``select`` applies on the way out)."""
+        if not kernel.space.is_valid(config, ctx):
+            return False
+        with self._lock:
+            sec = self.data["kernels"].setdefault(kernel.name, {
+                "version": kernel.version,
+                "space": kernel.space.space_hash(),
+                "members": [], "selector": {},
+                "scenarios": 0, "covered": 0,
+            })
+            if (sec["version"] != kernel.version
+                    or sec["space"] != kernel.space.space_hash()):
+                # Stale section: the retune is for a *newer* kernel — reset
+                # rather than mix members from two incompatible spaces.
+                sec.update({"version": kernel.version,
+                            "space": kernel.space.space_hash(),
+                            "members": [], "selector": {}})
+            ck = config_key(config)
+            mi = next((i for i, m in enumerate(sec["members"])
+                       if config_key(m["config"]) == ck), None)
+            changed = False
+            if mi is None:
+                mi = len(sec["members"])
+                sec["members"].append({
+                    "config": dict(config), "covers": 0,
+                    "mean_rel": None,
+                    "admitted_metric": (_round(float(metric))
+                                        if metric is not None else None),
+                })
+                changed = True
+            sig = scenario_features(ctx)
+            if sec["selector"].get(sig) != mi:
+                sec["selector"][sig] = mi
+                changed = True
+            if changed:
+                self._stats["admitted"] += 1
+            return changed

@@ -18,12 +18,22 @@ Kernels are usually resolved through the kernel registry
 call time:
 
   cache hit (env fingerprint + constraints still valid)  → reuse   (Q4.3)
+  miss, portfolio attached (config_source "db")          → serve the
+                                                           portfolio member,
+                                                           enqueue background
+                                                           tuning
   miss, policy "tune"                                    → tune now (paper's
                                                            JIT autotuning)
   miss, policy "heuristic"                               → return default,
                                                            enqueue background
                                                            tuning      (Q4.4)
   miss, policy "error"                                   → raise (CI mode)
+
+Under ``config_source="portfolio"`` the "A Few Fit Most" portfolio
+(core/portfolio.py) is consulted *before* the point DB: portfolio member →
+shipped point entry → heuristic → background tune. Drift-triggered online
+retuning closes the loop: ``enable_drift_retune`` re-enqueues flagged cache
+keys and ``tune`` admits each fresh winner into the live portfolio.
 
 A persisted *failed* search (metric=inf) is never served as a hit — it is
 kept only for visibility, and lookups treat it as a miss so the scenario is
@@ -44,6 +54,7 @@ wall-clock backends.
 
 from __future__ import annotations
 
+import collections
 import copy
 import dataclasses
 import logging
@@ -70,8 +81,13 @@ _TRACE_NAMES = {
     "hits": "cache_hit", "misses": "cache_miss", "tunes": "tuned",
     "heuristic_uses": "heuristic", "background_tunes": "background_tune",
     "failed_retunes": "failed_retune", "quarantines": "quarantine",
-    "fallback_serves": "fallback",
+    "fallback_serves": "fallback", "portfolio_serves": "portfolio",
+    "portfolio_updates": "portfolio_update", "drift_retunes": "drift_retune",
 }
+
+# Bound on the dispatch-key reverse index (cache key -> (kernel, ctx)) that
+# lets drift retuning turn a flagged key string back into a tunable request.
+_KEY_INDEX_MAX = 512
 
 
 @dataclasses.dataclass
@@ -148,13 +164,24 @@ class Autotuner:
                  backend: Optional[measure_lib.MeasureBackend] = None,
                  strategy: Optional[search_lib.SearchStrategy] = None,
                  on_miss: str = "tune",
-                 compile_workers: Optional[int] = None):
+                 compile_workers: Optional[int] = None,
+                 portfolio=None,
+                 config_source: str = "db"):
         assert on_miss in ("tune", "heuristic", "error")
+        assert config_source in ("db", "portfolio", "tune")
         self.cache = cache if cache is not None else cache_lib.TuningCache()
         self.backend = backend or measure_lib.AnalyticalMeasure(
             get_chip(os.environ.get("REPRO_TARGET_CHIP", "tpu_v5e")))
         self.strategy = strategy or search_lib.ExhaustiveSearch()
         self.on_miss = on_miss
+        # "A Few Fit Most" portfolio (core/portfolio.py). config_source:
+        #   "db"        — point entries first; portfolio consulted on cache
+        #                 miss before the heuristic/tune fallback.
+        #   "portfolio" — portfolio first, point entries as fallback (the
+        #                 small-artifact operating mode).
+        #   "tune"      — never consult the portfolio even when attached.
+        self.portfolio = portfolio
+        self.config_source = config_source
         self.queue = TuningQueue()
         self.engine = engine_lib.TuningEngine(
             self.backend,
@@ -162,7 +189,9 @@ class Autotuner:
                   if compile_workers else None))
         self._stats = {"hits": 0, "misses": 0, "tunes": 0, "heuristic_uses": 0,
                        "background_tunes": 0, "failed_retunes": 0,
-                       "quarantines": 0, "fallback_serves": 0}
+                       "quarantines": 0, "fallback_serves": 0,
+                       "portfolio_serves": 0, "portfolio_updates": 0,
+                       "drift_retunes": 0}
         self._per_kernel: Dict[str, Dict[str, int]] = {}
         self._stats_lock = threading.Lock()
         # Last (ctx, config) served per kernel name: the serving engine's
@@ -170,6 +199,11 @@ class Autotuner:
         # dispatch happened at trace time, long before NaNs surface.
         self._last_dispatch: Dict[
             str, Tuple[TuningContext, Config]] = {}
+        # Reverse index cache-key -> (kernel, ctx), fed by dispatch_key:
+        # drift detectors report flagged *keys*, and retune_key needs the
+        # tuning request back. Bounded LRU.
+        self._key_index: "collections.OrderedDict[str, Tuple[TunableKernel, TuningContext]]" = (
+            collections.OrderedDict())
         self._bg_thread: Optional[threading.Thread] = None
         self._bg_stop = threading.Event()
 
@@ -256,6 +290,14 @@ class Autotuner:
             entry.runners_up = runners_up
         entry.quarantined = quarantined
         self.cache.put(kernel.name, kernel.version, kernel.space, ctx, entry)
+        if self.portfolio is not None and winner is not None:
+            # Online portfolio update: the fresh winner becomes a member
+            # (under the same quarantine/runner-up machinery — quarantined
+            # configs were already excluded by _select_clean above) and the
+            # scenario's feature signature points at it, so portfolio-first
+            # serving picks up the retuned config without a restart.
+            if self.portfolio.admit(kernel, ctx, entry.config, entry.metric):
+                self._bump("portfolio_updates", kernel=kernel.name)
         log.info("tuned %s ctx=%s -> %s (%.3g s/call, %d evals, "
                  "compile %.2fs / measure %.2fs)",
                  kernel.name, ctx.signature(), entry.config, entry.metric,
@@ -334,8 +376,43 @@ class Autotuner:
                     out.append(e)
         return out
 
+    def attach_portfolio(self, portfolio, source: Optional[str] = None
+                         ) -> None:
+        """Install a config portfolio (core/portfolio.py) and optionally
+        switch the lookup precedence (``config_source``). Freshly tuned
+        winners are admitted into it from here on — the online half of
+        drift-triggered retuning."""
+        if source is not None:
+            assert source in ("db", "portfolio", "tune")
+            self.config_source = source
+        self.portfolio = portfolio
+
+    def _portfolio_lookup(self, kernel: TunableKernel,
+                          ctx: TuningContext) -> Optional[Config]:
+        """The portfolio member for (kernel, ctx), quarantine-aware: a
+        member that failed at serve time is excluded exactly like a cached
+        winner would be, degrading to the next member and then to the
+        caller's fallback chain."""
+        if self.portfolio is None:
+            return None
+        raw = self.cache.get_raw(kernel.name, kernel.version,
+                                 kernel.space, ctx)
+        quarantined = list(raw.quarantined) if raw is not None else []
+        cfg = self.portfolio.select(kernel, ctx, exclude=quarantined)
+        if cfg is None:
+            return None
+        self._bump("portfolio_serves", kernel=kernel.name)
+        return cfg
+
     def best_config(self, kernel: KernelRef, ctx: TuningContext) -> Config:
         kernel = self.resolve(kernel)
+        if self.config_source == "portfolio":
+            # Portfolio-first: serve the small multi-versioned artifact,
+            # fall through to the point DB only when no member may legally
+            # serve this scenario ("A Few Fit Most" operating mode).
+            cfg = self._portfolio_lookup(kernel, ctx)
+            if cfg is not None:
+                return cfg
         entry = self.cache.get(
             kernel.name, kernel.version, kernel.space, ctx,
             require_fingerprint={"backend": self.backend.name})
@@ -359,6 +436,16 @@ class Autotuner:
             self._bump("hits", kernel=kernel.name)
             return dict(entry.config)
         self._bump("misses", kernel=kernel.name)
+        if self.config_source == "db":
+            # Point-entry miss: consult the portfolio BEFORE the
+            # heuristic/tune fallback — a clustered near-optimum beats a
+            # vendor default — while still enqueueing a background tune so
+            # the cache converges to the point-tuned winner off the
+            # critical path.
+            cfg = self._portfolio_lookup(kernel, ctx)
+            if cfg is not None:
+                self.queue.add(kernel, ctx)
+                return cfg
         if self.on_miss == "tune":
             return dict(self.tune(kernel, ctx).config)
         if self.on_miss == "heuristic":
@@ -401,12 +488,47 @@ class Autotuner:
         kernel = self.resolve(kernel)
         key = cache_lib.cache_key(kernel.name, kernel.version,
                                   kernel.space, ctx)
+        with self._stats_lock:
+            # Remember how to turn this key back into a tuning request:
+            # when drift flags it, retune_key re-enqueues the scenario.
+            self._key_index[key] = (kernel, ctx)
+            self._key_index.move_to_end(key)
+            while len(self._key_index) > _KEY_INDEX_MAX:
+                self._key_index.popitem(last=False)
         raw = self.cache.get_raw(kernel.name, kernel.version,
                                  kernel.space, ctx)
         shipped = None
         if raw is not None and math.isfinite(raw.metric):
             shipped = float(raw.metric)
         return key, shipped
+
+    def lookup_key(self, key: str
+                   ) -> Optional[Tuple[TunableKernel, TuningContext]]:
+        """The (kernel, ctx) behind a cache key previously seen by
+        ``dispatch_key`` (None once evicted from the bounded index)."""
+        with self._stats_lock:
+            return self._key_index.get(key)
+
+    def retune_key(self, key: str) -> bool:
+        """Enqueue a background retune for a drift-flagged cache key —
+        the production path behind ``DriftDetector.on_drift``. Returns
+        False when the key is unknown (never dispatched here)."""
+        item = self.lookup_key(key)
+        if item is None:
+            return False
+        kernel, ctx = item
+        self.queue.add(kernel, ctx)
+        self._bump("drift_retunes", kernel=kernel.name)
+        log.warning("drift flagged %s (ctx=%s): background retune enqueued",
+                    kernel.name, ctx.signature())
+        return True
+
+    def enable_drift_retune(self, det) -> None:
+        """Subscribe this tuner's retune path to a DriftDetector: every
+        flagged key is re-enqueued for background tuning, and (when a
+        portfolio is attached) the fresh winner is admitted into the live
+        portfolio by ``tune``."""
+        det.on_drift(lambda key, _report: self.retune_key(key))
 
     def quarantine(self, kernel: KernelRef, ctx: TuningContext,
                    config: Config) -> bool:
@@ -447,9 +569,9 @@ class Autotuner:
     def fallback_configs(self, kernel: KernelRef, ctx: TuningContext,
                          exclude: Iterable[Config] = ()) -> List[Config]:
         """Degraded-mode candidates for (kernel, ctx), best first: cached
-        runners-up, then the heuristic default — minus anything
-        quarantined or excluded. The reference oracle impl is the caller's
-        last resort after these."""
+        runners-up, then attached-portfolio members, then the heuristic
+        default — minus anything quarantined or excluded. The reference
+        oracle impl is the caller's last resort after these."""
         kernel = self.resolve(kernel)
         bad = {cache_lib.config_key(c) for c in exclude}
         entry = self.cache.get_raw(kernel.name, kernel.version,
@@ -459,6 +581,14 @@ class Autotuner:
             bad |= {cache_lib.config_key(c) for c in entry.quarantined}
             for ru in entry.runners_up:
                 cfg = dict(ru["config"])
+                key = cache_lib.config_key(cfg)
+                if key not in bad and kernel.space.is_valid(cfg, ctx):
+                    out.append(cfg)
+                    bad.add(key)
+        if self.portfolio is not None and self.config_source != "tune":
+            # Portfolio members widen the degraded-mode chain: clustered
+            # near-optima are better fallbacks than the vendor default.
+            for cfg in self.portfolio.members(kernel.name):
                 key = cache_lib.config_key(cfg)
                 if key not in bad and kernel.space.is_valid(cfg, ctx):
                     out.append(cfg)
@@ -568,17 +698,29 @@ def _chip_name(backend: measure_lib.MeasureBackend) -> str:
 _DEFAULT: Optional[Autotuner] = None
 _DEFAULT_LOCK = threading.Lock()
 
+SHIPPED_DB = os.path.abspath(os.path.join(
+    os.path.dirname(__file__), os.pardir, "configs",
+    "shipped_tuning_db.json"))
+
 
 def default_tuner() -> Autotuner:
     global _DEFAULT
     with _DEFAULT_LOCK:
         if _DEFAULT is None:
-            shipped = os.path.join(os.path.dirname(__file__), os.pardir,
-                                   "configs", "shipped_tuning_db.json")
             _DEFAULT = Autotuner(
-                cache=cache_lib.TuningCache(overlay_path=os.path.abspath(shipped)),
+                cache=cache_lib.TuningCache(overlay_path=SHIPPED_DB),
                 on_miss=os.environ.get("REPRO_ON_MISS", "tune"),
             )
+            # Opt-in config-portfolio serving (launch/serve.py
+            # --config-source): attach the shipped portfolio artifact and
+            # set the lookup precedence. Unset/"tune" keeps the point-DB
+            # behavior byte-identical.
+            source = os.environ.get("REPRO_CONFIG_SOURCE", "")
+            if source in ("db", "portfolio"):
+                from repro.core.portfolio import Portfolio
+                pf = Portfolio.load_shipped()
+                if pf is not None:
+                    _DEFAULT.attach_portfolio(pf, source=source)
             if (_DEFAULT.on_miss == "heuristic"
                     and os.environ.get("REPRO_BG_TUNING", "0") == "1"):
                 _DEFAULT.start_background_tuning(

@@ -61,8 +61,10 @@ log = logging.getLogger("repro.ops")
 # tuner-dispatch path of serving-critical entry points: a failing config is
 # quarantined in the tuning cache (Autotuner.quarantine, which also enqueues
 # a background re-tune), the dispatch falls back to the next-best runner-up
-# from the winning search, then the heuristic default, and as a last resort
-# the ref.py oracle impl — the engine degrades instead of going down.
+# from the winning search, then the attached config portfolio's members for
+# the scenario (core/portfolio.py — already validity-checked, excluding the
+# quarantined config), then the heuristic default, and as a last resort the
+# ref.py oracle impl — the engine degrades instead of going down.
 #
 # Active when a FaultPlan is installed (serving/faults.py) or under
 # REPRO_KERNEL_GUARD=1; off by default so unit tests exercising kernels
@@ -137,7 +139,9 @@ def _timed_dispatch(kernel: TunableKernel, ctx: Optional[TuningContext],
     the sample under the tuning-cache key. Under jit the output is a
     tracer and per-launch timing is meaningless — the serving engine
     times whole jitted steps and attributes them via ``last_dispatch``
-    instead."""
+    instead. Either way ``dispatch_key`` registers the key in the
+    tuner's key index, which is what lets ``retune_key`` map a flagged
+    drift key back to its (kernel, ctx) scenario for online retuning."""
     det = drift_lib.get_active()
     if det is None or ctx is None or tuner is None:
         return run(config)

@@ -41,6 +41,16 @@ With ``--on-miss heuristic`` the decode hot path never tunes inline:
 kernels launch with their heuristic defaults while the daemon background
 worker drains the tuning queue off the critical path (paper Q4.4), so
 later steps of the same process pick up tuned configs from the cache.
+
+``--config-source`` picks where dispatches resolve configs: ``db``
+(default) serves point-tuned shipped-DB entries with the config
+portfolio (core/portfolio.py, "a few fit most") covering cache misses;
+``portfolio`` serves the K-member portfolio first — the small-DB
+deployment mode — falling back to point entries; ``tune`` ignores the
+portfolio. Combined with ``--drift-report``, flagged regressions feed
+the online retuning loop: the engine enqueues the drifted scenario, the
+background worker retunes it, the fresh winner is admitted into the
+live portfolio, and the engine re-jits so subsequent dispatches use it.
 """
 
 from __future__ import annotations
@@ -211,6 +221,8 @@ def serve_paged(args, cfg, tuner):
     }
     if "speculative" in res:
         summary["speculative"] = res["speculative"]
+    if "drift" in res:
+        summary["drift"] = res["drift"]
     print("run report:", json.dumps(summary, sort_keys=True))
     # Every submitted request must land in a terminal state — the smoke
     # gate for the faults-smoke CI job: faults degrade requests, they
@@ -223,6 +235,15 @@ def serve_paged(args, cfg, tuner):
         print(f"kernel guard: {st.get('quarantines', 0)} quarantines, "
               f"{st.get('fallback_serves', 0)} fallback serves; "
               f"{len(plan.log)} fault events fired")
+    if tuner.portfolio is not None:
+        st = tuner.stats()
+        ps = tuner.portfolio.stats()
+        print(f"portfolio: {st.get('portfolio_serves', 0)} serves, "
+              f"{st.get('portfolio_updates', 0)} admissions, "
+              f"{st.get('drift_retunes', 0)} drift retunes "
+              f"(selector: {ps['exact_hits']} exact / "
+              f"{ps['nearest_hits']} nearest / "
+              f"{ps['fallback_hits']} fallback)")
     engine.scheduler.check_invariants()
     if engine.prefix_cache is not None:
         stats = engine.prefix_cache.stats()
@@ -365,9 +386,10 @@ def main(argv=None):
                          "comma-separated events — kexc@N[:kernel], "
                          "compile@N[:kernel], nan@N[:kernel], "
                          "logits@STEP[:slot], pool@STEP:PAGES[:HOLD], "
-                         "random@SEED[:N] (serving/faults.py). The run "
-                         "asserts every request still reaches a terminal "
-                         "state.")
+                         "slow@N:MS[:kernel] (latency inflation the drift "
+                         "detector must flag), random@SEED[:N] "
+                         "(serving/faults.py). The run asserts every "
+                         "request still reaches a terminal state.")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="chunked-prefill width (paged only)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -388,6 +410,15 @@ def main(argv=None):
                     help="tuner policy on cache miss; 'heuristic' keeps "
                          "tuning off the serving critical path and lets the "
                          "background worker converge the cache")
+    ap.add_argument("--config-source",
+                    choices=("portfolio", "db", "tune"),
+                    default=os.environ.get("REPRO_CONFIG_SOURCE", "db"),
+                    help="where dispatches resolve configs "
+                         "(docs/autotuning.md): 'db' = point-tuned shipped "
+                         "DB, with the config portfolio covering cache "
+                         "misses; 'portfolio' = the K-member portfolio "
+                         "first (a-few-fit-most serving), point entries as "
+                         "fallback; 'tune' = ignore the portfolio entirely")
     args = ap.parse_args(argv)
 
     if args.inject_faults and args.decode_impl != "paged":
@@ -402,6 +433,7 @@ def main(argv=None):
                          "--decode-impl paged (observability is wired "
                          "through the paged serving engine)")
     os.environ["REPRO_ON_MISS"] = args.on_miss
+    os.environ["REPRO_CONFIG_SOURCE"] = args.config_source
     cfg = get_config(args.arch, smoke=not args.full_config)
     if args.decode_impl != "full":
         from repro.kernels.registry import list_kernels
@@ -412,6 +444,27 @@ def main(argv=None):
     # which decode impl is serving.
     from repro.core.tuner import default_tuner
     tuner = default_tuner()
+    # The tuner may predate this invocation (warm default_tuner), so apply
+    # the requested source explicitly rather than relying on the env read
+    # at construction time.
+    if args.config_source in ("db", "portfolio"):
+        if tuner.portfolio is None:
+            from repro.core.portfolio import Portfolio
+            tuner.attach_portfolio(Portfolio.load_shipped(),
+                                   source=args.config_source)
+        else:
+            tuner.attach_portfolio(tuner.portfolio,
+                                   source=args.config_source)
+        if tuner.portfolio is not None:
+            counts = tuner.portfolio.counts()
+            print(f"config portfolio: {counts['members']} members over "
+                  f"{counts['kernels']} kernels "
+                  f"(source={args.config_source})")
+        elif args.config_source == "portfolio":
+            print("config portfolio: shipped artifact missing — "
+                  "falling back to point-tuned DB lookups")
+    else:
+        tuner.attach_portfolio(None, source="tune")
     if tuner.on_miss == "heuristic":
         tuner.start_background_tuning()
         print("background tuning worker started (queue drains off the "

@@ -110,6 +110,14 @@ class DriftDetector:
     def flagged(self) -> List[str]:
         return [k for k, e in self.entries.items() if e.flagged]
 
+    def reset_key(self, key: str) -> bool:
+        """Forget ``key`` entirely. Online retuning calls this once the
+        flagged scenario has been re-tuned and re-dispatched: the next
+        samples calibrate a fresh baseline for the *new* config — without
+        the reset the key would stay flagged forever and ``on_drift``
+        could never fire for it again. Returns True if the key existed."""
+        return self.entries.pop(key, None) is not None
+
     def _entry_report(self, key: str, e: _Entry) -> Dict[str, Any]:
         return {
             "key": key,

@@ -41,6 +41,13 @@ import numpy as np
 
 DISPATCH_KINDS = ("kernel_exception", "nan_output", "compile_failure")
 STEP_KINDS = ("nan_logits", "pool_hog")
+# Timing faults inflate measured latency instead of breaking outputs:
+# "slowdown" sleeps for ``seconds`` around the next ``times`` launches of
+# ``kernel`` — the deterministic stand-in for a config drifting off its
+# baseline, which the DriftDetector (obs/drift.py) must flag and online
+# retuning must recover from. Kept out of ``FaultPlan.random`` so the
+# golden fault-trace fixtures stay stable.
+TIMING_KINDS = ("slowdown",)
 
 
 class InjectedKernelError(RuntimeError):
@@ -68,9 +75,10 @@ class FaultEvent:
     slot: int = -1
     pages: int = 0
     hold: int = 1
+    seconds: float = 0.0     # slowdown only: injected latency per launch
 
     def __post_init__(self):
-        if self.kind not in DISPATCH_KINDS + STEP_KINDS:
+        if self.kind not in DISPATCH_KINDS + STEP_KINDS + TIMING_KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}")
 
 
@@ -89,11 +97,15 @@ class FaultPlan:
 
     def reset(self) -> None:
         self._dispatch_left = {}
+        self._slow_left: Dict[str, List[float]] = {}
         for ev in self.events:
             if ev.kind in DISPATCH_KINDS:
                 key = (ev.kernel, ev.kind)
                 self._dispatch_left[key] = (
                     self._dispatch_left.get(key, 0) + ev.times)
+            elif ev.kind == "slowdown":
+                self._slow_left.setdefault(ev.kernel, []).extend(
+                    [float(ev.seconds)] * max(1, ev.times))
         self._hogs = []
         self.log = []
 
@@ -108,6 +120,20 @@ class FaultPlan:
                 self.log.append({"fault": kind, "kernel": kernel})
                 return kind
         return None
+
+    # -- timing faults (engine step timing) --------------------------------
+    def take_slowdown(self, kernel: str) -> float:
+        """Seconds of injected latency for the next launch of ``kernel``
+        (0.0 when none scheduled). The engine sleeps for this inside its
+        dispatch-timing window, so the drift detector measures a real,
+        deterministic regression."""
+        left = self._slow_left.get(kernel)
+        if not left:
+            return 0.0
+        s = left.pop(0)
+        self.log.append({"fault": "slowdown", "kernel": kernel,
+                         "seconds": s})
+        return s
 
     # -- step faults (engine loop) -----------------------------------------
     def on_step(self, step: int, pool) -> None:
@@ -190,7 +216,9 @@ class FaultPlan:
         list of ``kexc@N[:kernel]``, ``compile@N[:kernel]``,
         ``nan@N[:kernel]`` (dispatch faults, N times), ``logits@S[:slot]``
         (NaN decode logits at step S), ``pool@S:P[:H]`` (hog P pages for H
-        steps starting at step S), or ``random@SEED[:N]``."""
+        steps starting at step S), ``slow@N:MS[:kernel]`` (inflate the
+        next N launches of kernel by MS milliseconds — drift-injection),
+        or ``random@SEED[:N]``."""
         events: List[FaultEvent] = []
         seed = None
         for tok in spec.split(","):
@@ -211,6 +239,12 @@ class FaultPlan:
                 kernel = parts[1] if len(parts) > 1 else "paged_decode"
                 events.append(FaultEvent(kind=kind, kernel=kernel,
                                          times=times))
+            elif name == "slow":
+                times = int(parts[0]) if parts else 1
+                ms = float(parts[1]) if len(parts) > 1 else 50.0
+                kernel = parts[2] if len(parts) > 2 else "paged_decode"
+                events.append(FaultEvent(kind="slowdown", kernel=kernel,
+                                         times=times, seconds=ms / 1e3))
             elif name == "logits":
                 step = int(parts[0])
                 slot = int(parts[1]) if len(parts) > 1 else -1

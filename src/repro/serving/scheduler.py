@@ -821,6 +821,17 @@ class ServingEngine:
         self.tracer = tracer
         self.metrics = metrics
         self.drift = drift
+        # Online drift-retune loop (ROADMAP item 5): when a detector flags
+        # a dispatch key, the engine re-enqueues the scenario into the
+        # background tuning queue (Autotuner.retune_key) and remembers the
+        # key here; step() polls for the fresh cache entry and rebuilds
+        # the jits once it lands, so subsequent dispatches trace with the
+        # retuned config. Counters surface in the run report and the
+        # metrics registry ("drift" provider).
+        self._drift_hooked: set = set()
+        self._drift_pending: Dict[str, float] = {}
+        self._drift_stats = {"flagged": 0, "retunes": 0, "rejits": 0}
+        self._drift_seen = False
         self.scheduler = Scheduler(
             self.pool, max_batch=max_batch,
             max_pages=self.pool.pages_for(max_seq_len),
@@ -982,6 +993,7 @@ class ServingEngine:
             return default_tuner().stats()
 
         m.register_provider("tuner", _tuner_stats)
+        m.register_provider("drift", lambda: dict(self._drift_stats))
 
     def _span(self, name: str, **args):
         """Scheduler-phase span on the engine tracer (no-op untraced)."""
@@ -1014,8 +1026,59 @@ class ServingEngine:
         item = tuner.last_dispatch(kernel)
         if item is None:
             return
+        self._ensure_drift_hook(det)
+        self._drift_seen = True
         key, shipped = tuner.dispatch_key(kernel, item[0])
         det.observe(key, seconds, shipped=shipped, kernel=kernel)
+
+    def _ensure_drift_hook(self, det: drift_lib.DriftDetector) -> None:
+        """Subscribe (once per detector) the retune-on-drift callback."""
+        if id(det) in self._drift_hooked:
+            return
+        self._drift_hooked.add(id(det))
+        det.on_drift(self._on_drift)
+
+    def _on_drift(self, key: str, report: Dict[str, Any]) -> None:
+        """A dispatch key regressed past the detector's threshold: count
+        it and hand the scenario to the background tuning daemon. Fires
+        synchronously from det.observe inside step()."""
+        from repro.core.tuner import default_tuner
+        self._drift_stats["flagged"] += 1
+        if default_tuner().retune_key(key):
+            self._drift_stats["retunes"] += 1
+            self._drift_pending[key] = time.time()
+
+    def _poll_drift_retunes(self) -> None:
+        """Cheap per-step check (only while a retune is pending): once the
+        background tune has written a fresh cache entry for a flagged key,
+        rebuild the jits so the next trace re-resolves configs — the
+        'subsequent dispatches use the new config' half of the loop — and
+        reset the detector key so the new config calibrates its own
+        baseline."""
+        from repro.core.tuner import default_tuner
+        tuner = default_tuner()
+        done = []
+        for key, flagged_at in self._drift_pending.items():
+            item = tuner.lookup_key(key)
+            if item is None:
+                done.append(key)       # evicted: nothing left to wait for
+                continue
+            kernel, ctx = item
+            entry = tuner.cache.get_raw(kernel.name, kernel.version,
+                                        kernel.space, ctx)
+            if entry is not None and entry.timestamp > flagged_at:
+                done.append(key)
+        if not done:
+            return
+        det = self._drift_detector()
+        for key in done:
+            del self._drift_pending[key]
+            if det is not None:
+                det.reset_key(key)
+        self._drift_stats["rejits"] += 1
+        self._build_jits()
+        self._dev_tables_key = None
+        self._dev_tables = None
 
     def _requarantine_and_rejit(self, kernel: str = "paged_decode") -> bool:
         """Non-finite step logits: quarantine the named kernel's config
@@ -1124,6 +1187,10 @@ class ServingEngine:
             self.spec_fallbacks += 1
         outs = np.asarray(vtoks)                  # (B, K) greedy argmax
         okh = np.asarray(vok).reshape(-1)
+        if plan is not None:
+            slow = plan.take_slowdown("paged_verify")
+            if slow > 0:
+                time.sleep(slow)   # inside the timing window: drift-visible
         t = time.perf_counter()
         if det is not None:
             self._observe_drift(det, "paged_verify", t - t_disp)
@@ -1162,6 +1229,8 @@ class ServingEngine:
         jnp = self._jnp
         sched = self.scheduler
         plan = fault_lib.get_active()
+        if self._drift_pending:
+            self._poll_drift_retunes()
         stats = StepStats()
         pre = (sched.preemptions, sched.failures, sched.timeouts)
         with self._span("retire"):
@@ -1223,6 +1292,10 @@ class ServingEngine:
                     jnp.asarray(lens, jnp.int32), jnp.asarray(scale))
                 next_tok = np.asarray(dtoks)
                 okh = np.asarray(dok).reshape(-1)
+                if plan is not None:
+                    slow = plan.take_slowdown("paged_decode")
+                    if slow > 0:
+                        time.sleep(slow)   # drift-visible injected latency
                 t = time.perf_counter()
                 if det is not None:
                     # The asarray above synced the step, so t - t_disp is
@@ -1334,4 +1407,13 @@ class ServingEngine:
             }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()
+        if self._drift_seen:
+            drift_out = dict(self._drift_stats)
+            drift_out["pending_retunes"] = len(self._drift_pending)
+            det = self._drift_detector()
+            if det is not None:
+                rep = det.report()
+                drift_out["tracked_keys"] = rep["tracked_keys"]
+                drift_out["flagged_keys"] = rep["flagged_keys"]
+            out["drift"] = drift_out
         return out

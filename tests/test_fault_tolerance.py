@@ -1002,3 +1002,78 @@ def test_nan_verify_logits_degrades_without_failing_request(
     assert fresh_default_tuner.stats()["quarantines"] >= 1
     engine.scheduler.check_invariants()
     assert engine.pool.num_allocated == 0
+
+
+# ---------------------------------------------------------------------------
+# Timing faults: slow@ drift injection (consumed by the engine's
+# dispatch-timing window; the DriftDetector e2e loop lives in test_obs.py)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse_slowdown_and_consumption():
+    plan = FaultPlan.parse_spec("slow@3:50,slow@1:20:paged_verify,slow@2")
+    assert [e.kind for e in plan.events] == ["slowdown"] * 3
+    # per-kernel FIFO of injected seconds; spec order preserved
+    assert plan.take_slowdown("paged_decode") == pytest.approx(0.05)
+    assert plan.take_slowdown("paged_verify") == pytest.approx(0.02)
+    assert plan.take_slowdown("paged_verify") == 0.0
+    for _ in range(2):
+        assert plan.take_slowdown("paged_decode") == pytest.approx(0.05)
+    # the bare "slow@2" defaults: 50ms on paged_decode
+    for _ in range(2):
+        assert plan.take_slowdown("paged_decode") == pytest.approx(0.05)
+    assert plan.take_slowdown("paged_decode") == 0.0
+    assert plan.take_slowdown("matmul") == 0.0
+    logged = [l for l in plan.log if l["fault"] == "slowdown"]
+    assert len(logged) == 6 and all("seconds" in l for l in logged)
+    plan.reset()
+    assert plan.take_slowdown("paged_verify") == pytest.approx(0.02)
+
+
+def test_random_fault_plans_never_schedule_slowdowns():
+    """slowdown stays out of FaultPlan.random: it would destabilize the
+    golden fault-trace fixture and the drain-time bounds."""
+    for seed in range(8):
+        plan = FaultPlan.random(seed, steps=32, n_faults=8)
+        assert all(e.kind != "slowdown" for e in plan.events)
+
+
+def test_slowdown_injection_changes_timing_not_tokens():
+    """A slowdown plan must leave scheduling and numerics untouched:
+    every request finishes with the same tokens as the clean run, and
+    nothing leaks — latency is the only casualty."""
+    import jax
+
+    from repro.models import lm
+    from repro.models.param import init_params
+    from repro.serving import ServingEngine
+
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    kw = dict(num_pages=24, page_size=8, max_batch=3, max_seq_len=24,
+              prefill_chunk=4)
+
+    def _reqs():
+        rng = np.random.default_rng(21)
+        return [Request(rid=i,
+                        prompt=rng.integers(1, cfg.vocab_size, int(p)
+                                            ).astype(np.int32),
+                        max_new_tokens=int(g))
+                for i, (p, g) in enumerate(zip(rng.integers(2, 10, 4),
+                                               rng.integers(1, 4, 4)))]
+
+    clean = ServingEngine(cfg, params, **kw)
+    clean.run(_reqs())
+    want = {r.rid: list(r.tokens) for r in clean.scheduler.finished}
+
+    plan = FaultPlan.parse_spec("slow@6:30:paged_decode,slow@2:30:paged_verify")
+    slow = ServingEngine(cfg, params, **kw)
+    with fault_lib.active(plan):
+        res = slow.run(_reqs())
+    got = {r.rid: list(r.tokens) for r in slow.scheduler.finished}
+    assert got == want, "slowdown injection changed generated tokens"
+    assert res["terminal_requests"] == 4
+    assert all(len(r.tokens) == r.max_new_tokens
+               for r in slow.scheduler.finished)
+    assert any(l["fault"] == "slowdown" for l in plan.log)
+    assert slow.pool.num_allocated == 0
+    slow.scheduler.check_invariants()

@@ -477,3 +477,99 @@ def test_metrics_step_counters_match_run_report():
         res["generated_tokens"]
     assert res["latency"]["ttft_samples"] == res["requests"]
     assert res["latency"]["ttft_p50_ms"] is not None
+
+
+# ---------------------------------------------------------------------------
+# Online retuning: drift flag -> background retune -> portfolio update ->
+# re-jit with the fresh config (the serve-time half of ROADMAP item 5)
+# ---------------------------------------------------------------------------
+
+def test_drift_triggers_online_retune_end_to_end(tmp_path):
+    """Serve with a forced slowdown on paged_decode and walk the whole
+    online-retuning loop: the detector flags the dispatch key, the engine
+    re-enqueues it through the default tuner, the flushed background tune
+    admits the fresh winner into the live portfolio, and the NEXT run
+    re-jits onto it and resets the detector — with the drift counters
+    visible in both the run report and the metrics registry."""
+    import jax
+
+    from repro.core import get_chip
+    from repro.core import tuner as tuner_mod
+    from repro.core.cache import TuningCache
+    from repro.core.measure import AnalyticalMeasure
+    from repro.core.portfolio import PORTFOLIO_SCHEMA, Portfolio
+    from repro.core.tuner import Autotuner
+    from repro.models import lm
+    from repro.models.param import init_params
+    from repro.serving import ServingEngine
+    from repro.serving import faults as fault_lib
+
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    kw = dict(num_pages=24, page_size=8, max_batch=3, max_seq_len=24,
+              prefill_chunk=4)
+
+    pf = Portfolio({"schema": PORTFOLIO_SCHEMA, "threshold": 0.1,
+                    "max_members": 8, "source_entries": 0, "kernels": {}})
+    tuner = Autotuner(cache=TuningCache(cache_dir=str(tmp_path / "dt")),
+                      backend=AnalyticalMeasure(get_chip("tpu_v5e")),
+                      on_miss="heuristic", portfolio=pf,
+                      config_source="db")
+    tuner_mod.set_default_tuner(tuner)
+    try:
+        det = DriftDetector(threshold=3.0, alpha=0.3, calibration=4)
+        reg = MetricsRegistry()
+        eng = ServingEngine(cfg, params, drift=det, metrics=reg, **kw)
+
+        # Run 1 (clean): calibrates the decode key's baseline. No flags.
+        res1 = eng.run(_seeded_reqs(np.random.default_rng(11),
+                                    cfg.vocab_size))
+        d1 = res1["drift"]
+        assert d1["tracked_keys"] >= 1 and d1["flagged"] == 0
+
+        # Run 2 (200ms injected into every paged_decode launch, inside
+        # the dispatch-timing window): sustained regression -> flag ->
+        # synchronous on_drift -> retune enqueued, awaiting the daemon.
+        plan = fault_lib.FaultPlan.parse_spec("slow@64:200:paged_decode")
+        with fault_lib.active(plan):
+            res2 = eng.run(_seeded_reqs(np.random.default_rng(12),
+                                        cfg.vocab_size))
+        d2 = res2["drift"]
+        assert d2["flagged"] >= 1 and d2["retunes"] >= 1
+        assert d2["pending_retunes"] >= 1 and d2["flagged_keys"] >= 1
+        assert any(l["fault"] == "slowdown" for l in plan.log)
+        assert tuner.stats()["drift_retunes"] >= 1
+        assert len(tuner.queue) >= 1
+
+        # The background daemon (flushed inline for determinism) retunes
+        # the drifted scenario and admits the winner into the portfolio.
+        assert tuner.flush_tuning_queue() >= 1
+        st = tuner.stats()
+        assert st["tunes"] >= 1 and st["portfolio_updates"] >= 1
+        assert pf.counts()["members"] >= 1
+
+        # Run 3 (clean): the engine notices the fresher cache entry,
+        # re-jits once, clears the pending set, and resets the detector
+        # key so the new config calibrates its own baseline.
+        res3 = eng.run(_seeded_reqs(np.random.default_rng(13),
+                                    cfg.vocab_size))
+        d3 = res3["drift"]
+        assert d3["rejits"] >= 1
+        assert d3["pending_retunes"] == 0 and d3["flagged_keys"] == 0
+
+        # Subsequent dispatches serve the freshly tuned winner — and the
+        # live portfolio's selector tracks the same config.
+        ctx, used = tuner.last_dispatch("paged_decode")
+        from repro.kernels.registry import get_kernel
+        kernel = get_kernel("paged_decode").tunable
+        entry = tuner.cache.get_raw(kernel.name, kernel.version,
+                                    kernel.space, ctx)
+        assert entry is not None and used == entry.config
+        assert pf.select(kernel, ctx) == entry.config
+
+        # Measured-vs-shipped drift counters surface in the registry too.
+        prov = reg.snapshot()["providers"]["drift"]
+        assert prov["flagged"] >= 1 and prov["retunes"] >= 1
+        assert prov["rejits"] >= 1
+    finally:
+        tuner_mod.set_default_tuner(None)

@@ -1,0 +1,582 @@
+"""Config-portfolio tests (core/portfolio.py, "A Few Fit Most").
+
+Four layers, matching the subsystem's moving parts:
+
+  * clustering determinism — the committed shipped_portfolio.json is a
+    pure function of the shipped DB bytes (regenerating reproduces it
+    byte-for-byte, pinned by a golden fixture),
+  * selector units — always a portfolio member, deterministic, layout
+    pins (``page_size==pool``) respected, quarantine exclusion honored,
+    plus a hypothesis property: ``select`` never yields a config outside
+    the kernel's current valid space,
+  * Autotuner precedence regressions — portfolio → shipped point entry →
+    heuristic → background-tune under ``config_source="portfolio"``,
+    point-entry-first with portfolio-on-miss under ``"db"``, and the
+    quarantined-winner degrade chain threading through the portfolio,
+  * the drift → retune → portfolio-update loop in unit form, and the
+    serving acceptance gate: dense == paged == portfolio-sourced,
+    token for token.
+"""
+
+import copy
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # container may lack hypothesis — skip properties
+    from conftest import hypothesis_fallback
+    given, settings, st = hypothesis_fallback()
+
+from repro.core import (
+    AnalyticalMeasure, Autotuner, ConfigSpace, KernelWorkload, Param,
+    TunableKernel, TuningCache, TuningContext, get_chip,
+)
+from repro.core.cache import config_key, make_entry
+from repro.core.portfolio import (
+    PORTFOLIO_SCHEMA, Portfolio, build_portfolio, config_distance,
+    feature_distance, parse_db_key, render_portfolio, scenario_features,
+)
+from repro.kernels.registry import get_kernel
+from repro.obs.drift import DriftDetector
+
+PF_PATH = os.path.join(os.path.dirname(__file__), os.pardir, "src", "repro",
+                       "configs", "shipped_portfolio.json")
+DB_PATH = os.path.join(os.path.dirname(__file__), os.pardir, "src", "repro",
+                       "configs", "shipped_tuning_db.json")
+GOLDEN = os.path.join(os.path.dirname(__file__), "fixtures", "portfolio",
+                      "paged_decode_section.json")
+
+
+def _load_db():
+    with open(DB_PATH) as f:
+        return json.load(f)
+
+
+def _shipped():
+    return Portfolio.load(PF_PATH)
+
+
+# ---------------------------------------------------------------------------
+# Clustering determinism: the committed artifact is a pure function of
+# the committed DB
+# ---------------------------------------------------------------------------
+
+def test_regeneration_is_byte_stable():
+    """gen_portfolio on the unchanged shipped DB must reproduce the
+    committed artifact exactly — no timestamps, no dict-order luck, no
+    float noise. This is the test that keeps the artifact reviewable."""
+    with open(PF_PATH) as f:
+        committed = f.read()
+    data = build_portfolio(_load_db())
+    assert render_portfolio(data) == committed, \
+        "build_portfolio(shipped DB) drifted from the committed artifact " \
+        "— rerun PYTHONPATH=src python -m repro.configs.gen_portfolio"
+
+
+def test_golden_paged_decode_section():
+    """Byte-level golden fixture for one kernel section: catches both
+    nondeterminism and silent clustering-behavior changes (a different
+    greedy tie-break shows up as a diff here, not just a coverage delta)."""
+    with open(GOLDEN) as f:
+        golden = f.read()
+    data = build_portfolio(_load_db())
+    sec = data["kernels"]["paged_decode"]
+    assert json.dumps(sec, indent=1, sort_keys=True) + "\n" == golden
+
+
+def test_build_deterministic_across_calls():
+    db = _load_db()
+    assert render_portfolio(build_portfolio(db)) == \
+        render_portfolio(build_portfolio(db))
+
+
+def test_artifact_schema_and_size_budget():
+    pf = _shipped()
+    assert pf.data["schema"] == PORTFOLIO_SCHEMA
+    counts = pf.counts()
+    db = _load_db()
+    assert counts["members"] <= 0.25 * len(db), \
+        f"portfolio ({counts['members']} members) defeats its purpose " \
+        f"against a {len(db)}-entry DB"
+    assert counts["kernels"] >= 5
+
+
+def test_threshold_tightening_never_shrinks_membership():
+    """A tighter coverage threshold needs at least as many members —
+    a cheap sanity check on the greedy objective's direction."""
+    db = _load_db()
+    loose = build_portfolio(db, threshold=0.50, max_members=8)
+    tight = build_portfolio(db, threshold=0.02, max_members=8)
+
+    def n_members(d):
+        return sum(len(s["members"]) for s in d["kernels"].values())
+
+    assert n_members(tight) >= n_members(loose)
+
+
+# ---------------------------------------------------------------------------
+# Distances: the clustering/selector metrics themselves
+# ---------------------------------------------------------------------------
+
+def test_config_distance_bounds_and_identity():
+    space = get_kernel("paged_decode").tunable.space
+    a = {"page_size": 8, "block_kv": 8, "pack_gqa": True}
+    b = {"page_size": 256, "block_kv": 2048, "pack_gqa": False}
+    assert config_distance(a, a, space) == 0.0
+    d = config_distance(a, b, space)
+    assert 0.0 < d <= 1.0
+    assert config_distance(a, b, space) == config_distance(b, a, space)
+
+
+def test_feature_distance_orders_by_pin_and_shape():
+    ctx = TuningContext(chip=get_chip("tpu_v5e"),
+                        shapes={"q": (16, 32, 128), "k": (16, 8, 32768, 128)})
+    same = scenario_features(ctx)
+    near = scenario_features(TuningContext(
+        chip=get_chip("tpu_v5e"),
+        shapes={"q": (16, 32, 128), "k": (16, 8, 16384, 128)}))
+    far = scenario_features(TuningContext(
+        chip=get_chip("tpu_v5e"), dtype="int8",
+        shapes={"q": (16, 32, 128), "k": (16, 8, 32768, 128)},
+        extra={"page_size": 8}))
+    assert feature_distance(same, same) == 0.0
+    assert feature_distance(same, near) < feature_distance(same, far)
+
+
+# ---------------------------------------------------------------------------
+# Selector units against the shipped artifact
+# ---------------------------------------------------------------------------
+
+def test_select_covers_every_shipped_scenario():
+    """Every current, finite scenario the portfolio was built from must
+    get a member back — and always one of the kernel's members, valid for
+    that scenario's context (the completeness pass in build_portfolio)."""
+    pf = _shipped()
+    db = _load_db()
+    checked = 0
+    for key in sorted(db):
+        k, ctx = parse_db_key(key)
+        kernel = get_kernel(k["kernel"]).tunable
+        if (k["kernel_version"] != kernel.version
+                or k["space"] != kernel.space.space_hash()):
+            continue
+        cfg = pf.select(kernel, ctx)
+        assert cfg is not None, \
+            f"{kernel.name}: no member for shipped scenario {ctx.signature()}"
+        assert kernel.space.why_invalid(cfg, ctx) is None
+        members = {config_key(m) for m in pf.members(kernel.name)}
+        assert config_key(cfg) in members
+        checked += 1
+    assert checked > 300
+
+
+def test_select_is_deterministic_across_instances():
+    db = _load_db()
+    a, b = _shipped(), _shipped()
+    for key in sorted(db)[:40]:
+        k, ctx = parse_db_key(key)
+        kernel = get_kernel(k["kernel"]).tunable
+        assert a.select(kernel, ctx) == b.select(kernel, ctx)
+        assert a.select(kernel, ctx) == a.select(kernel, ctx)
+
+
+def test_select_respects_page_size_pin():
+    """The ``page_size==pool`` constraint: a runtime context that pins the
+    pool layout must only ever get a matching member (or None — regressed
+    beats invalid, but invalid is never served)."""
+    pf = _shipped()
+    kernel = get_kernel("paged_decode").tunable
+    from repro.configs import get_config
+    from repro.configs.gen_shipped_db import paged_deployment_shapes
+    shapes = paged_deployment_shapes(get_config("phi3-mini-3.8b"))
+    served = 0
+    for ps in (8, 16, 32, 64, 128, 256):
+        ctx = TuningContext(chip=get_chip("tpu_v5e"), shapes=shapes,
+                            dtype="bfloat16", extra={"page_size": ps})
+        cfg = pf.select(kernel, ctx)
+        if cfg is not None:
+            assert cfg["page_size"] == ps
+            served += 1
+    assert served >= 1, "no pin value could be served at all"
+
+
+def test_select_honors_exclude():
+    """Quarantine plumbing: an excluded member is never returned, even
+    when it is the selector's first choice."""
+    pf = _shipped()
+    kernel = get_kernel("rms_norm").tunable
+    ctx = TuningContext(chip=get_chip("tpu_v5e"),
+                        shapes={"x": (8192, 3072)})
+    first = pf.select(kernel, ctx)
+    assert first is not None
+    second = pf.select(kernel, ctx, exclude=[first])
+    assert second is None or config_key(second) != config_key(first)
+    # rms_norm shipped several members, so a fallback should exist.
+    assert second is not None
+
+
+def test_stale_section_never_serves():
+    pf = _shipped()
+    kernel = get_kernel("paged_decode").tunable
+    data = copy.deepcopy(pf.data)
+    data["kernels"]["paged_decode"]["version"] += 1
+    stale = Portfolio(data)
+    ctx = TuningContext(chip=get_chip("tpu_v5e"),
+                        shapes={"q": (16, 32, 96), "k": (16, 8, 32768, 96)})
+    assert stale.select(kernel, ctx) is None
+    assert pf.select(kernel, ctx) is not None
+
+
+def test_bad_schema_rejected():
+    with pytest.raises(ValueError):
+        Portfolio({"schema": 999, "kernels": {}})
+
+
+_PAGED = get_kernel("paged_decode").tunable
+
+
+@given(b=st.integers(1, 64),
+       hq=st.sampled_from([2, 4, 8, 16, 32, 96]),
+       ratio=st.sampled_from([1, 2, 4, 8]),
+       dh=st.sampled_from([64, 96, 128]),
+       t=st.integers(8, 65536),
+       ps=st.sampled_from([None, 8, 16, 32, 64, 128, 256, 17]),
+       dtype=st.sampled_from(["bfloat16", "float32", "int8"]),
+       chip=st.sampled_from(["tpu_v4", "tpu_v5e", "tpu_v6e"]))
+@settings(max_examples=60, deadline=None)
+def test_property_select_never_leaves_valid_space(b, hq, ratio, dh, t, ps,
+                                                  dtype, chip):
+    """For ANY scenario — including shapes and pins the offline pass never
+    saw, and a page_size pin (17) outside the tunable domain — select
+    returns None or a member that is valid under the kernel's current
+    constraints. The selector may regress; it may never mis-serve."""
+    hkv = max(1, hq // ratio)
+    extra = {} if ps is None else {"page_size": ps}
+    ctx = TuningContext(chip=get_chip(chip),
+                        shapes={"q": (b, hq, dh), "k": (b, hkv, t, dh)},
+                        dtype=dtype, extra=extra)
+    pf = _shipped()
+    cfg = pf.select(_PAGED, ctx)
+    if cfg is None:
+        return
+    assert _PAGED.space.why_invalid(cfg, ctx) is None
+    members = {config_key(m) for m in pf.members("paged_decode")}
+    assert config_key(cfg) in members
+
+
+# ---------------------------------------------------------------------------
+# Autotuner precedence: portfolio → point entry → heuristic → background
+# ---------------------------------------------------------------------------
+
+def _space():
+    return ConfigSpace("k", [Param("blk", (32, 64, 128, 256, 512))])
+
+
+def _kernel():
+    def wl(cfg, ctx):
+        return KernelWorkload(flops=1e9, hbm_bytes=1e8 / cfg["blk"],
+                              grid_steps=4096 // cfg["blk"], vmem_bytes=1024)
+    return TunableKernel("k", _space(), workload_fn=wl,
+                         heuristic=lambda ctx: {"blk": 64})
+
+
+def _ctx(seq=1024):
+    return TuningContext(chip=get_chip("tpu_v5e"), shapes={"x": (seq, 128)})
+
+
+def _empty_pf():
+    return Portfolio({"schema": PORTFOLIO_SCHEMA, "threshold": 0.1,
+                      "max_members": 8, "source_entries": 0, "kernels": {}})
+
+
+def _tuner(tmp_path, *, on_miss="error", portfolio=None,
+           config_source="db"):
+    return Autotuner(cache=TuningCache(cache_dir=str(tmp_path / "c")),
+                     backend=AnalyticalMeasure(get_chip("tpu_v5e")),
+                     on_miss=on_miss, portfolio=portfolio,
+                     config_source=config_source)
+
+
+def _seed_point_entry(t, k, c, blk=512):
+    t.cache.put(k.name, k.version, k.space, c,
+                make_entry({"blk": blk}, 1e-3, 5, "exhaustive",
+                           t.backend.name, "tpu_v5e"))
+
+
+def test_portfolio_first_beats_point_entry(tmp_path):
+    """config_source="portfolio": the member serves even when a point
+    entry exists — the small-artifact operating mode satellite 4 pins."""
+    k, c = _kernel(), _ctx()
+    pf = _empty_pf()
+    assert pf.admit(k, c, {"blk": 128})
+    t = _tuner(tmp_path, portfolio=pf, config_source="portfolio")
+    _seed_point_entry(t, k, c, blk=512)
+    assert t.best_config(k, c) == {"blk": 128}
+    st_ = t.stats()
+    assert st_["portfolio_serves"] == 1 and st_["hits"] == 0
+
+
+def test_db_mode_point_entry_beats_portfolio(tmp_path):
+    k, c = _kernel(), _ctx()
+    pf = _empty_pf()
+    pf.admit(k, c, {"blk": 128})
+    t = _tuner(tmp_path, portfolio=pf, config_source="db")
+    _seed_point_entry(t, k, c, blk=512)
+    assert t.best_config(k, c) == {"blk": 512}
+    st_ = t.stats()
+    assert st_["hits"] == 1 and st_["portfolio_serves"] == 0
+
+
+def test_db_mode_miss_serves_portfolio_before_heuristic(tmp_path):
+    """On a point miss the portfolio member beats the heuristic default —
+    and the scenario is still enqueued so the cache converges off the
+    critical path. on_miss="error" proves the portfolio intercepted the
+    miss: without it this call raises."""
+    k, c = _kernel(), _ctx()
+    pf = _empty_pf()
+    pf.admit(k, c, {"blk": 128})
+    t = _tuner(tmp_path, on_miss="error", portfolio=pf, config_source="db")
+    assert t.best_config(k, c) == {"blk": 128}
+    assert len(t.queue) == 1
+    t.attach_portfolio(None)
+    with pytest.raises(LookupError):
+        t.best_config(k, _ctx(seq=2048))
+
+
+def test_portfolio_mode_falls_back_to_point_entry(tmp_path):
+    """An empty (or non-serving) portfolio under config_source="portfolio"
+    degrades to the point DB, not to an error."""
+    k, c = _kernel(), _ctx()
+    t = _tuner(tmp_path, portfolio=_empty_pf(), config_source="portfolio")
+    _seed_point_entry(t, k, c, blk=512)
+    assert t.best_config(k, c) == {"blk": 512}
+    assert t.stats()["hits"] == 1
+
+
+def test_config_source_tune_ignores_portfolio(tmp_path):
+    k, c = _kernel(), _ctx()
+    pf = _empty_pf()
+    pf.admit(k, c, {"blk": 128})
+    t = _tuner(tmp_path, on_miss="heuristic", portfolio=pf,
+               config_source="tune")
+    assert t.best_config(k, c) == {"blk": 64}      # the heuristic
+    assert t.stats()["portfolio_serves"] == 0
+    assert {"blk": 128} not in t.fallback_configs(k, c)
+
+
+def test_db_mode_converges_to_point_winner_after_flush(tmp_path):
+    """Miss → portfolio serve + enqueue → background tune → point entry
+    wins thereafter, and the fresh winner is admitted into the live
+    portfolio (the online half)."""
+    k, c = _kernel(), _ctx()
+    pf = _empty_pf()
+    pf.admit(k, c, {"blk": 128})
+    t = _tuner(tmp_path, on_miss="heuristic", portfolio=pf,
+               config_source="db")
+    assert t.best_config(k, c) == {"blk": 128}
+    assert t.flush_tuning_queue() == 1
+    assert t.best_config(k, c) == {"blk": 512}     # tuned optimum, cache hit
+    st_ = t.stats()
+    assert st_["hits"] == 1 and st_["portfolio_updates"] >= 1
+    assert pf.select(k, c) == {"blk": 512}         # portfolio tracked it
+
+
+def test_quarantined_winner_degrades_through_portfolio(tmp_path):
+    """The PR-7 degrade chain with a portfolio attached: quarantined
+    winner → runners-up → (all quarantined) → portfolio member — before
+    the heuristic default ever enters."""
+    k, c = _kernel(), _ctx()
+    pf = _empty_pf()
+    pf.admit(k, c, {"blk": 32})
+    t = _tuner(tmp_path, on_miss="heuristic", portfolio=pf,
+               config_source="db")
+    t.tune(k, c)
+    entry = t.cache.get_raw(k.name, k.version, k.space, c)
+    assert entry.config == {"blk": 512}
+    ru = [dict(r["config"]) for r in entry.runners_up]
+    assert ru, "tune produced no runners-up"
+    # Quarantine the winner: best_config degrades to the first runner-up.
+    t.quarantine(k, c, {"blk": 512})
+    assert t.best_config(k, c) == ru[0]
+    assert t.stats()["fallback_serves"] == 1
+    # Quarantine every runner-up too: the portfolio member is next.
+    for cfg in ru:
+        t.quarantine(k, c, cfg)
+    assert t.best_config(k, c) == {"blk": 32}
+    assert t.stats()["portfolio_serves"] == 1
+    # And the member never resurfaces once quarantined itself.
+    t.quarantine(k, c, {"blk": 32})
+    assert t.best_config(k, c) == {"blk": 64}      # heuristic, last resort
+    assert {"blk": 32} not in t.fallback_configs(k, c)
+
+
+def test_fallback_chain_orders_runners_then_portfolio_then_default(tmp_path):
+    k, c = _kernel(), _ctx()
+    pf = _empty_pf()
+    pf.admit(k, c, {"blk": 32})
+    t = _tuner(tmp_path, on_miss="heuristic", portfolio=pf,
+               config_source="db")
+    t.tune(k, c)
+    entry = t.cache.get_raw(k.name, k.version, k.space, c)
+    ru = [dict(r["config"]) for r in entry.runners_up]
+    chain = t.fallback_configs(k, c, exclude=[entry.config])
+    assert chain[:len(ru)] == ru
+    assert chain[len(ru)] == {"blk": 32}           # portfolio member
+    # The heuristic default ({"blk": 64}) closes the chain — here it is
+    # already a runner-up, so dedup leaves the member as the tail.
+    assert {"blk": 64} in chain
+
+
+def test_admit_refuses_invalid_and_resets_stale(tmp_path):
+    k, c = _kernel(), _ctx()
+    pf = _empty_pf()
+    assert not pf.admit(k, c, {"blk": 12345})      # off-domain: refused
+    assert pf.admit(k, c, {"blk": 128})
+    assert pf.select(k, c) == {"blk": 128}
+    # A version bump makes the section stale: the next admit resets it
+    # instead of mixing members across incompatible spaces.
+    k2 = _kernel()
+    k2.version = k.version + 1
+    assert pf.select(k2, c) is None
+    assert pf.admit(k2, c, {"blk": 256})
+    assert pf.members("k") == [{"blk": 256}]
+    assert pf.select(k2, c) == {"blk": 256}
+
+
+# ---------------------------------------------------------------------------
+# Drift → retune → portfolio update (unit loop)
+# ---------------------------------------------------------------------------
+
+def test_drift_retune_updates_portfolio(tmp_path):
+    """The full online loop in unit form: a dispatch key drifts past the
+    threshold, the detector callback re-enqueues the scenario through
+    ``retune_key``, the (flushed) background tune admits the fresh winner
+    into the live portfolio, and the selector serves it."""
+    k, c = _kernel(), _ctx()
+    pf = _empty_pf()
+    t = _tuner(tmp_path, on_miss="heuristic", portfolio=pf,
+               config_source="db")
+    det = DriftDetector(threshold=1.5, alpha=1.0, calibration=2)
+    t.enable_drift_retune(det)
+    key, shipped = t.dispatch_key(k, c)
+    assert shipped is None                         # nothing tuned yet
+    assert t.lookup_key(key) is not None
+    det.observe(key, 1e-3, kernel=k.name)          # calibration
+    det.observe(key, 1e-3, kernel=k.name)
+    assert not det.flagged()
+    assert det.observe(key, 1e-2, kernel=k.name)   # 10x: flagged
+    assert det.flagged() == [key]
+    assert t.stats()["drift_retunes"] == 1
+    assert len(t.queue) == 1
+    assert t.flush_tuning_queue() == 1             # the background daemon
+    assert t.stats()["portfolio_updates"] == 1
+    assert pf.select(k, c) == {"blk": 512}         # fresh winner is live
+    assert t.best_config(k, c) == {"blk": 512}
+    # Post-retune the detector key resets so the new config calibrates
+    # its own baseline (the serving engine calls this after re-jitting).
+    assert det.reset_key(key)
+    assert not det.flagged()
+    assert not det.reset_key(key)                  # idempotent
+
+
+def test_retune_key_unknown_is_refused(tmp_path):
+    t = _tuner(tmp_path, on_miss="heuristic")
+    assert not t.retune_key("no-such-key")
+    assert t.stats()["drift_retunes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Serving acceptance: dense == paged == portfolio-sourced, token for token
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="pf-t", family="dense", n_layers=2,
+                       d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                       d_ff=64, vocab_size=128, dtype="float32")
+
+
+def _reqs(seed, vocab, n=4):
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, vocab, int(p)).astype(np.int32),
+                    max_new_tokens=int(g))
+            for i, (p, g) in enumerate(zip(rng.integers(2, 10, n),
+                                           rng.integers(2, 5, n)))]
+
+
+def _dense_greedy(params, cfg, prompt, gen):
+    import jax.numpy as jnp
+
+    from repro.models import lm
+    toks = jnp.asarray(prompt[None], jnp.int32)
+    P = len(prompt)
+    lg, cache = lm.prefill(params, cfg, toks, max_len=P + gen,
+                           opts=lm.ForwardOpts(attn_impl="full"))
+    out = [int(jnp.argmax(lg[0]))]
+    for i in range(gen - 1):
+        lg, cache = lm.decode_step(
+            params, cfg, jnp.asarray([[out[-1]]], jnp.int32), cache,
+            jnp.int32(P + i), opts=lm.ForwardOpts(decode_impl="full"))
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+def test_portfolio_serving_token_identical(tmp_path):
+    """Acceptance gate: the same trace served three ways — dense
+    reference, paged with point/heuristic configs, paged with
+    portfolio-sourced configs (a genuinely different member config) —
+    generates IDENTICAL tokens. Config selection is a performance input,
+    never a numerics input."""
+    import jax
+
+    from repro.core import tuner as tuner_mod
+    from repro.models import lm
+    from repro.models.param import init_params
+    from repro.serving import ServingEngine
+
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), lm.lm_specs(cfg))
+    kw = dict(num_pages=24, page_size=8, max_batch=3, max_seq_len=24,
+              prefill_chunk=4)
+
+    t = Autotuner(cache=TuningCache(cache_dir=str(tmp_path / "dt")),
+                  on_miss="heuristic", portfolio=_empty_pf(),
+                  config_source="db")
+    tuner_mod.set_default_tuner(t)
+    try:
+        # Pass 1 (db mode, empty portfolio): heuristic/point configs.
+        eng = ServingEngine(cfg, params, **kw)
+        eng.run(_reqs(7, cfg.vocab_size))
+        want = {r.rid: list(r.tokens) for r in eng.scheduler.finished}
+
+        # Admit a member for the runtime paged_decode scenario that is
+        # NOT the config pass 1 dispatched, then serve portfolio-first.
+        item = t.last_dispatch("paged_decode")
+        assert item is not None
+        ctx, used = item
+        kernel = get_kernel("paged_decode").tunable
+        alt = next(c for c in kernel.space.valid_configs(ctx)
+                   if config_key(c) != config_key(used))
+        assert t.portfolio.admit(kernel, ctx, alt)
+        t.attach_portfolio(t.portfolio, source="portfolio")
+
+        eng2 = ServingEngine(cfg, params, **kw)
+        eng2.run(_reqs(7, cfg.vocab_size))
+        got = {r.rid: list(r.tokens) for r in eng2.scheduler.finished}
+        assert t.stats()["portfolio_serves"] >= 1, \
+            "portfolio-first serving never consulted the portfolio"
+        assert got == want, "portfolio-sourced configs changed tokens"
+    finally:
+        tuner_mod.set_default_tuner(None)
+
+    for rid, toks in sorted(want.items()):
+        r = next(r for r in eng.scheduler.finished if r.rid == rid)
+        dense = _dense_greedy(params, cfg, r.prompt, r.max_new_tokens)
+        assert toks == dense, f"req {rid}: paged {toks} != dense {dense}"

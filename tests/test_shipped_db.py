@@ -137,3 +137,105 @@ def test_deployment_lookup_context_matches_shipped_key():
                             dtype=SHIP_DTYPE, mesh=tp_mesh_signature(tp))
         key = cache_key(kernel.name, kernel.version, kernel.space, ctx)
         assert key in db, f"no shipped TP={tp} deployment entry for phi3"
+
+
+# ---------------------------------------------------------------------------
+# Shipped config portfolio (configs/shipped_portfolio.json): the "A Few
+# Fit Most" artifact serve.py --config-source portfolio|db dispatches from
+# ---------------------------------------------------------------------------
+
+PF_PATH = os.path.join(os.path.dirname(__file__), os.pardir, "src", "repro",
+                       "configs", "shipped_portfolio.json")
+
+
+def _load_pf():
+    with open(PF_PATH) as f:
+        return json.load(f)
+
+
+def test_portfolio_artifact_current_and_in_space():
+    """Every kernel section references the kernel's CURRENT version and
+    space hash (stale sections are dead weight the selector refuses to
+    serve), every member binds exactly the space's tunables to in-domain
+    values, and every selector target points at a real member."""
+    pf = _load_pf()
+    from repro.core.portfolio import PORTFOLIO_SCHEMA
+    assert pf["schema"] == PORTFOLIO_SCHEMA
+    assert pf["kernels"], "empty portfolio"
+    for name, sec in pf["kernels"].items():
+        tk = get_kernel(name).tunable           # raises for renamed kernels
+        assert sec["version"] == tk.version, \
+            f"{name}: portfolio at version {sec['version']}, kernel is " \
+            f"now {tk.version} — regenerate (gen_portfolio)"
+        assert sec["space"] == tk.space.space_hash(), \
+            f"{name}: config space changed since the portfolio was " \
+            f"generated — regenerate (gen_portfolio)"
+        domains = {p.name: set(p.values) for p in tk.space.params}
+        assert sec["members"], f"{name}: section with no members"
+        for m in sec["members"]:
+            cfg = m["config"]
+            assert set(cfg) == set(domains), \
+                f"{name}: member binds {sorted(cfg)} != tunables " \
+                f"{sorted(domains)}"
+            for p, v in cfg.items():
+                assert v in domains[p], \
+                    f"{name}: member {p}={v!r} off-domain"
+        for sig, idx in sec["selector"].items():
+            assert 0 <= idx < len(sec["members"]), \
+                f"{name}: selector {sig} -> dangling member {idx}"
+
+
+def test_portfolio_is_an_order_of_magnitude_smaller_than_db():
+    """The artifact only earns its keep if it is actually small: total
+    members bounded at a quarter of the point-entry count (in practice
+    it ships far below that) and every DB kernel is represented."""
+    db, pf = _load(), _load_pf()
+    n_members = sum(len(s["members"]) for s in pf["kernels"].values())
+    assert n_members <= 0.25 * len(db), \
+        f"{n_members} members vs {len(db)} point entries"
+    db_kernels = {json.loads(k)["kernel"] for k in db}
+    assert set(pf["kernels"]) == db_kernels
+
+
+def test_portfolio_deployment_lookup_round_trip():
+    """The serve.py --config-source portfolio path end-to-end: for the
+    known-divisible phi3 arch at TP=1/2/4, the deployment context built
+    exactly as serve.py builds it gets an EXACT selector hit (not the
+    nearest-neighbor fallback) and a member valid for that context."""
+    from repro.configs import get_config
+    from repro.configs.gen_shipped_db import (
+        SHIP_DTYPE, paged_deployment_shapes, tp_mesh_signature,
+    )
+    from repro.core.portfolio import Portfolio, scenario_features
+    pf = Portfolio.load_shipped()
+    assert pf is not None, "shipped_portfolio.json missing"
+    cfg = get_config("phi3-mini-3.8b")
+    kernel = get_kernel("paged_decode").tunable
+    sec = pf.data["kernels"]["paged_decode"]
+    members = {json.dumps(m["config"], sort_keys=True)
+               for m in sec["members"]}
+    for tp in (1, 2, 4):
+        ctx = TuningContext(chip=get_chip("tpu_v5e"),
+                            shapes=paged_deployment_shapes(cfg, tp=tp),
+                            dtype=SHIP_DTYPE, mesh=tp_mesh_signature(tp))
+        assert scenario_features(ctx) in sec["selector"], \
+            f"TP={tp} deployment scenario missing from selector"
+        got = pf.select(kernel, ctx)
+        assert got is not None
+        assert json.dumps(got, sort_keys=True) in members
+        assert kernel.space.why_invalid(got, ctx) is None
+    st = pf.stats()
+    assert st["exact_hits"] == 3 and st["nearest_hits"] == 0
+
+
+def test_portfolio_selector_covers_tp_meshes():
+    """TP=1/2/4 mesh signatures all appear among the decode-family
+    selector scenarios — sharded serving resolves portfolio members
+    without falling back to nearest-neighbor guessing."""
+    pf = _load_pf()
+    meshes = set()
+    for name in ("paged_decode", "gqa_decode_ragged", "gqa_decode_kv8"):
+        for sig in pf["kernels"][name]["selector"]:
+            feat = json.loads(sig)
+            meshes.add(feat.get("mesh", {}).get("model", 1))
+    assert {1, 2, 4} <= meshes, sorted(meshes)
